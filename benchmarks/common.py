@@ -1,0 +1,17 @@
+"""Shared benchmark plumbing: CSV emission per the harness contract
+(``name,us_per_call,derived``)."""
+from __future__ import annotations
+
+import io
+import sys
+from typing import Iterable, Optional
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.3f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def header(title: str):
+    print(f"# === {title} ===", flush=True)

@@ -1,0 +1,50 @@
+"""Paper Fig 9: cost-per-Mtok ladder — does the hardware ladder track
+the cost ladder for batch-1 streaming decode?
+
+Per (arch x TPU tier x quant path): step floor -> tokens/s/chip ->
+$/Mtok at list prices.  The paper's inversion to look for: a cheaper
+tier with the right (fused) quant path beating a faster tier at bf16.
+Also reproduces the paper's own H100-vs-L4 endpoint from its measured
+step times.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.core import floor as fl
+from repro.core.hardware import GPU_H100, GPU_L4, TPU_LADDER
+
+
+def run() -> None:
+    header("fig9: cost-per-Mtok ladder")
+    # paper endpoint: H100+Graphs 11.78ms @$3.50/h vs L4+ExLlamaV2
+    # 17.36ms @$0.30/h
+    for name, chip, ms, in [("h100+graphs", GPU_H100, 11.78),
+                            ("l4+exllamav2-int4", GPU_L4, 17.36)]:
+        usd_per_mtok = chip.usd_per_hour / 3600.0 / (1.0 / (ms / 1e3)) * 1e6
+        emit(f"cost/paper/{name}", ms * 1e3,
+             f"$per_Mtok={usd_per_mtok:.2f}")
+    # our ladder: floors per tier x paths for a representative arch set
+    for arch in ("qwen2.5-3b", "qwen2-moe-a2.7b", "phi4-mini-3.8b",
+                 "mamba2-2.7b"):
+        cfg = get_config(arch)
+        rows = []
+        for chip in TPU_LADDER:
+            for path, wb in (("bf16", 2), ("int4_fused", 0.5)):
+                cell = fl.floor_cell(cfg, chip, 2048, weight_dtype_bytes=wb)
+                tok_s = 1.0 / cell.t_floor_s
+                usd = chip.usd_per_hour / 3600.0 / tok_s * 1e6
+                rows.append((usd, chip.name, path, cell.t_floor_ms))
+                emit(f"cost/{arch}/{chip.name}/{path}",
+                     cell.t_floor_ms * 1e3,
+                     f"tok_s={tok_s:.0f} $per_Mtok={usd:.3f}")
+        rows.sort()
+        best = rows[0]
+        emit(f"cost/{arch}/cheapest", 0.0,
+             f"{best[1]}/{best[2]} ${best[0]:.3f}/Mtok "
+             f"(floor {best[3]:.2f}ms) — ladder inverted="
+             f"{best[1] != TPU_LADDER[-1].name}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.py).
+``--quick`` shrinks session counts for CI-speed runs; the default run is
+the paper-faithful protocol (N=10 sessions on the headline A/B).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    only = None
+    for a in sys.argv[1:]:
+        if a.startswith("--only="):
+            only = a.split("=", 1)[1]
+
+    from benchmarks import (fig9_cost_ladder, table1_rfloor_matrix,
+                            table2_dispatch_ab, table4_batch_sweep,
+                            table6_attention_backends, table7_quant_matrix,
+                            table8_accounting)
+    suites = {
+        "table1": table1_rfloor_matrix.run,
+        "table2": lambda: table2_dispatch_ab.run(quick=quick),
+        "table4": lambda: table4_batch_sweep.run(quick=quick),
+        "table6": lambda: table6_attention_backends.run(quick=quick),
+        "table7": lambda: table7_quant_matrix.run(quick=quick),
+        "table8": table8_accounting.run,
+        "fig9": fig9_cost_ladder.run,
+    }
+    t0 = time.time()
+    for name, fn in suites.items():
+        if only and name != only:
+            continue
+        fn()
+    print(f"# total {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Table 1 / Table 9: the analytic floor matrix.
+
+Two parts:
+ (a) paper-validation: our floor model vs the paper's own three models x
+     four GPUs x four contexts (t_floor column of Table 9 reproduced
+     analytically — exact, since both sides are closed-form);
+ (b) the same matrix for the 10 assigned archs on the TPU ladder — the
+     floors the serving stack is measured against in §Roofline/§Perf.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, header
+from repro.configs import PAPER_MODELS, list_configs, get_config
+from repro.core import floor as fl
+from repro.core.hardware import GPU_LADDER, TPU_LADDER
+
+CTXS = (2048, 4096, 8192, 16384)
+
+# paper Table 9 t_floor (ms) for validation, (arch, gpu, ctx) -> ms
+PAPER_TABLE9 = {
+    ("qwen2.5-7b", "h100-sxm5", 2048): 4.58,
+    ("qwen2.5-7b", "a100-80gb", 4096): 7.60,
+    ("qwen2.5-7b", "l40s", 8192): 18.18,
+    ("mistral-7b-v0.3", "l4", 16384): 55.55,
+    ("llama-3.1-8b", "h100-sxm5", 16384): 5.43,
+    ("llama-3.1-8b", "l4", 2048): 54.41,
+}
+
+
+def run() -> None:
+    header("table1/9: analytic floor matrix")
+    for cfg in PAPER_MODELS:
+        for chip in GPU_LADDER:
+            for ctx in CTXS:
+                cell = fl.floor_cell(cfg, chip, ctx)
+                want = PAPER_TABLE9.get((cfg.name, chip.name, ctx))
+                note = (f"paper={want}ms" if want is not None else "")
+                emit(f"floor/{cfg.name}/{chip.name}/ctx{ctx}",
+                     cell.t_floor_ms * 1e3,
+                     f"t_floor_ms={cell.t_floor_ms:.2f} {note}")
+    for name in list_configs(assigned_only=True):
+        cfg = get_config(name)
+        for chip in TPU_LADDER:
+            for ctx in CTXS:
+                cell = fl.floor_cell(cfg, chip, ctx)
+                emit(f"floor/{name}/{chip.name}/ctx{ctx}",
+                     cell.t_floor_ms * 1e3,
+                     f"t_floor_ms={cell.t_floor_ms:.3f} "
+                     f"W_active={cell.weight_bytes/1e9:.2f}GB "
+                     f"K={cell.kv_bytes/1e6:.1f}MB")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Paper Table 4: the dispatch-tax fraction shrinks with batch size.
+
+Same A/B (eager vs full_jit) at batch 1/2/4/8 on a fixed reduced config:
+per-step math grows ~linearly with batch while the dispatch count is
+constant, so the measured speedup must fall monotonically — exactly the
+paper's b=1 -> b=4 observation (1.259x -> 1.110x ... 1.036x).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.core.protocol import run_ab
+from repro.models import Model
+
+BATCHES = (1, 2, 4, 8)
+
+
+def make_step(batch: int, mode: str, session: int):
+    cfg = get_config("qwen2.5-3b").reduced().replace(
+        vocab_size=512, d_model=192, d_ff=384, n_layers=8,
+        n_heads=4, n_kv_heads=2, head_dim=32)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(session))
+    cache = m.init_cache(batch, 64)
+    tokens = jax.random.randint(jax.random.PRNGKey(session + 7), (batch, 8),
+                                0, cfg.vocab_size)
+    _, cache = jax.jit(m.prefill)(params, {"tokens": tokens}, cache)
+    run = m.step_program(params, cache).executor(mode)
+    state = {"tokens": tokens[:, :1], "cache": cache}
+
+    def step():
+        return run(dict(state))["logits"]
+    return step
+
+
+def run(n_sessions: int = 5, quick: bool = False) -> None:
+    header("table4: batch sweep of the dispatch-tax A/B")
+    n = 2 if quick else n_sessions
+    speedups = []
+    for b in BATCHES:
+        ab = run_ab(lambda s, b=b: make_step(b, "eager", s),
+                    lambda s, b=b: make_step(b, "full_jit", s),
+                    n_sessions=n, name=f"batch{b}")
+        s = ab.summary()
+        speedups.append(s["mean_speedup"])
+        emit(f"batch_sweep/b{b}", s["baseline_mean_ms"] * 1e3,
+             f"eager_ms={s['baseline_mean_ms']:.3f} "
+             f"jit_ms={s['treated_mean_ms']:.3f} "
+             f"speedup=x{s['mean_speedup']:.3f}")
+    emit("batch_sweep/shrinks_with_batch", 0.0,
+         f"speedups={['%.2f' % x for x in speedups]} "
+         f"b1_gt_b8={speedups[0] > speedups[-1]}")
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -1,0 +1,73 @@
+"""Paper Table 6 / Fig 7: the attention-backend matrix at the paper's
+per-layer decode shape.
+
+Measured per-layer decode-attention wall time on this host for the jnp
+backends (sdpa / math / split_kv), plus the Pallas kernel in interpret
+mode (correctness-only on CPU — its time is reported but flagged; on TPU
+it is the fused path).  Shape: Llama-3-8B decode (32 Q heads, 8 KV
+heads, head_dim 128, kv_len 2049), matching the paper's §6 cell, plus
+the Qwen-2.5-7B shape the rest of the paper uses.
+
+The paper's reading to reproduce: the spread across reasonable fused
+backends (sdpa vs split_kv) is SECOND-ORDER vs the dispatch schedule
+(table2); the math fallback is the outlier.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.core.protocol import measure_cell
+from repro.models import attention as A
+from repro.models.model import Model
+
+SHAPES = {
+    # paper §6 backend-pinned shape
+    "llama3-8b/ctx2048": dict(Hq=32, Hkv=8, hd=128, S=2048),
+    # the paper's main-matrix model shape
+    "qwen2.5-7b/ctx2048": dict(Hq=28, Hkv=4, hd=128, S=2048),
+}
+
+
+def run(quick: bool = False) -> None:
+    header("table6: decode attention backend matrix (per layer)")
+    key = jax.random.PRNGKey(0)
+    for shape_name, s in SHAPES.items():
+        B, Hq, Hkv, hd, S = 1, s["Hq"], s["Hkv"], s["hd"], s["S"]
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, 1, Hq, hd), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.bfloat16)
+        mask = jnp.arange(S) <= S - 2
+        cfg = get_config("qwen2.5-7b").replace(n_heads=Hq, n_kv_heads=Hkv,
+                                               head_dim=hd)
+        results = {}
+        for backend in ("sdpa", "math", "split_kv"):
+            fn = {"sdpa": A._sdpa_decode, "math": A._math_decode,
+                  "split_kv": A._split_kv_decode}[backend]
+            jfn = jax.jit(lambda q, k, v, fn=fn: fn(q, k, v, mask, cfg))
+            res = measure_cell(lambda: jfn(q, k, v),
+                               warmup=3 if quick else 5,
+                               steps=10 if quick else 30,
+                               name=backend)
+            results[backend] = res.p50_s
+            emit(f"attn_backend/{shape_name}/{backend}", res.p50_s * 1e6,
+                 f"p50_us={res.p50_s*1e6:.1f}")
+        # pallas kernel: correctness-grade interpret mode on CPU
+        from repro.kernels.decode_attention.ops import decode_attention
+        out = decode_attention(q[:, 0], k, v, mask=mask)
+        finite = bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+        emit(f"attn_backend/{shape_name}/pallas_interpret", 0.0,
+             f"cpu=interpret-mode(correctness-only) finite={finite} "
+             f"tpu=fused-path")
+        spread = max(results.values()) / min(results.values())
+        emit(f"attn_backend/{shape_name}/spread", 0.0,
+             f"max_over_min=x{spread:.2f} fastest="
+             f"{min(results, key=results.get)}")
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

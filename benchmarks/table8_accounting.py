@@ -1,0 +1,43 @@
+"""Paper Table 8: cross-arch per-step byte/FLOP accounting.
+
+For every assigned arch at the decode_32k shape: analytic streamed bytes
+(weights + active KV), decode FLOPs, arithmetic intensity, and v5e
+bw-bound step floor — the accounting the paper builds from
+torch.profiler + analytic byte counts, here fully analytic + dry-run
+cross-checked (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, header
+from repro.analysis import analytic
+from repro.configs import SHAPES, get_config, list_configs, shape_applicable
+from repro.core import floor as fl
+from repro.core.hardware import TPU_V5E
+
+
+def run() -> None:
+    header("table8: per-step accounting (decode_32k, v5e, 256 chips)")
+    shape = SHAPES["decode_32k"]
+    for name in list_configs(assigned_only=True):
+        cfg = get_config(name)
+        est = analytic.estimate(cfg, shape, n_chips=256, tp=16, dp=16)
+        bw_t = est.hbm_bytes_per_chip / TPU_V5E.hbm_bw
+        fl_t = est.flops / (256 * TPU_V5E.peak_flops_bf16)
+        ai = est.flops / 256 / est.hbm_bytes_per_chip
+        emit(f"accounting/{name}/decode_32k", bw_t * 1e6,
+             f"hbm_GB_per_chip={est.hbm_bytes_per_chip/1e9:.2f} "
+             f"flops_G={est.flops/1e9:.0f} arith_intensity={ai:.1f} "
+             f"mem_t_ms={bw_t*1e3:.2f} compute_t_ms={fl_t*1e3:.3f} "
+             f"bound={'memory' if bw_t > fl_t else 'compute'}")
+    # the ctx-growth contrast the paper highlights (KV term vs state term)
+    for name in ("qwen2.5-3b", "mamba2-2.7b", "zamba2-1.2b"):
+        cfg = get_config(name)
+        k2 = fl.kv_bytes(cfg, 2048)
+        k500 = fl.kv_bytes(cfg, 524288)
+        emit(f"accounting/{name}/kv_growth", 0.0,
+             f"K(2k)={k2/1e6:.1f}MB K(500k)={k500/1e6:.1f}MB "
+             f"ratio=x{k500/max(k2,1):.1f}")
+
+
+if __name__ == "__main__":
+    run()

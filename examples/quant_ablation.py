@@ -1,0 +1,48 @@
+"""The paper's §7 experiment on our stack: quantisation paths compared
+on (a) analytic HBM traffic — the claim that transfers to TPU — and
+(b) live decode on a reduced model.
+
+    PYTHONPATH=src python examples/quant_ablation.py
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import floor as fl, stats  # noqa: E402
+from repro.core.hardware import TPU_V5E  # noqa: E402
+from repro.models import Model  # noqa: E402
+from repro.serving import DecodeEngine  # noqa: E402
+from repro.quant import WEIGHT_PATHS, quantize_tree, tree_weight_traffic  # noqa: E402
+
+
+def main():
+    cfg = get_config("qwen2.5-3b").reduced().replace(vocab_size=1024)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 16),
+                                           0, cfg.vocab_size)}
+    base_traffic = tree_weight_traffic(params)
+
+    print(f"{'path':14s} {'traffic':>9s} {'vs bf16':>8s} {'cpu p50':>9s} "
+          f"{'v5e floor (full arch)':>22s}")
+    full = get_config("qwen2.5-3b")
+    for path in WEIGHT_PATHS:
+        traffic = tree_weight_traffic(quantize_tree(params, path, group=32))
+        eng = DecodeEngine(model, params, quant_path=path)
+        res = eng.generate_streamed(prompt, max_len=64, n_new=16, timed=True)
+        p50 = stats.p50(res.step_times_s) * 1e3
+        wb = {"bf16": 2, "int8_dequant": 3, "int8_fused": 1,
+              "int4_dequant": 2.5, "int4_fused": 0.5}[path]
+        cell = fl.floor_cell(full, TPU_V5E, 2048, weight_dtype_bytes=wb)
+        print(f"{path:14s} {traffic/1e6:7.2f}MB {traffic/base_traffic:7.2f}x "
+              f"{p50:7.2f}ms {cell.t_floor_ms:18.2f}ms")
+    print("\nthe paper's lesson: *_dequant streams MORE than bf16 — only "
+          "the fused kernel paths realise the bandwidth saving.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""END-TO-END SERVING DRIVER (the paper's workload): serve a small model
+with batched requests through the DecodeEngine — prefill + streaming
+decode with per-step timing, quantised weight paths, and the
+dispatch-mode A/B on the live engine.
+
+    PYTHONPATH=src python examples/serve_stream.py
+"""
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import stats  # noqa: E402
+from repro.models import Model  # noqa: E402
+from repro.serving import DecodeEngine  # noqa: E402
+
+
+def main():
+    cfg = get_config("qwen2.5-3b").reduced().replace(
+        d_model=256, d_ff=512, n_layers=8, vocab_size=2048)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+
+    # --- batched request serving -------------------------------------
+    print("== batched sessions (8 concurrent streams) ==")
+    engine = DecodeEngine(model, params)
+    prompts = {"tokens": jax.random.randint(key, (8, 24), 0, cfg.vocab_size)}
+    t0 = time.perf_counter()
+    res = engine.generate_streamed(prompts, max_len=128, n_new=32, timed=True)
+    dt = time.perf_counter() - t0
+    print(f"  8 streams x 32 tokens in {dt:.2f}s "
+          f"({8 * 32 / dt:.0f} tok/s aggregate)")
+    print(f"  per-step p50 {stats.p50(res.step_times_s)*1e3:.2f} ms")
+
+    # --- batch-1 latency: the paper's metric --------------------------
+    print("== batch-1 streaming (per-token latency) ==")
+    one = {"tokens": prompts["tokens"][:1]}
+    for quant in ("bf16", "int8_fused", "int4_fused"):
+        eng = DecodeEngine(model, params, quant_path=quant)
+        r = eng.generate_streamed(one, max_len=128, n_new=24, timed=True)
+        print(f"  {quant:11s} p50 step {stats.p50(r.step_times_s)*1e3:.2f} ms")
+
+    # --- fused-loop generation (beyond CUDA Graphs) --------------------
+    print("== whole-generation fused loop (one XLA program) ==")
+    r_stream = engine.generate_streamed(one, max_len=128, n_new=32)
+    t0 = time.perf_counter()
+    r_fused = engine.generate_fused(one, max_len=128, n_new=32)
+    print(f"  fused: {r_fused.tokens_per_s:.0f} tok/s; greedy tokens equal: "
+          f"{bool(jnp.array_equal(r_fused.tokens, r_stream.tokens))}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf hillclimb driver (assignment §Perf).
+
+For a chosen (arch x shape x mesh) cell: compile the baseline policy and
+each candidate policy, derive the three roofline terms from the compiled
+artifact, and append hypothesis -> change -> before -> after ->
+confirmed/refuted records to results/perf/<cell>.json.
+
+  PYTHONPATH=src python scripts/hillclimb.py olmo-1b train_4k pod \
+      '{"strategy": "dp"}' "DP-only layout kills per-block ARs"
+"""
+import json
+import sys
+
+from repro.analysis.roofline import build_row
+from repro.launch.dryrun import build_cell
+
+
+def terms(cell):
+    r = build_row(cell)
+    return {"compute_ms": r.compute_t * 1e3, "memory_ms": r.memory_t * 1e3,
+            "collective_ms": r.collective_t * 1e3, "dominant": r.dominant,
+            "step_floor_ms": r.step_t * 1e3,
+            "fits_v5e": cell["memory"]["fits_v5e"],
+            "per_chip_GB": cell["memory"]["per_chip_bytes"] / 1e9}
+
+
+def main():
+    arch, shape, mesh = sys.argv[1:4]
+    overrides = json.loads(sys.argv[4]) if len(sys.argv) > 4 else {}
+    hypothesis = sys.argv[5] if len(sys.argv) > 5 else ""
+
+    os.makedirs("results/perf", exist_ok=True)
+    log_path = f"results/perf/{arch}__{shape}__{mesh}.json"
+    log = []
+    if os.path.exists(log_path):
+        with open(log_path) as f:
+            log = json.load(f)
+
+    base = build_cell(arch, shape, mesh)
+    before = terms(base)
+    print("baseline:", json.dumps(before, indent=1))
+    if overrides:
+        treated = build_cell(arch, shape, mesh, overrides)
+        after = terms(treated)
+        print("treated :", json.dumps(after, indent=1))
+        dom = before["dominant"]
+        delta = before[f"{dom}_ms"] - after[f"{dom}_ms"]
+        rel = delta / before[f"{dom}_ms"]
+        if not after["fits_v5e"]:
+            verdict = "refuted(oom)"
+        else:
+            verdict = "confirmed" if rel > 0.05 else \
+                ("neutral" if rel > -0.05 else "refuted")
+        rec = {"hypothesis": hypothesis, "change": overrides,
+               "before": before, "after": after,
+               "dominant_term_delta_ms": delta,
+               "dominant_term_rel_improvement": rel,
+               "verdict": verdict}
+        log.append(rec)
+        with open(log_path, "w") as f:
+            json.dump(log, f, indent=1)
+        print(f"\n{verdict.upper()}: {dom} term {before[f'{dom}_ms']:.2f} -> "
+              f"{after[f'{dom}_ms']:.2f} ms ({rel*100:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

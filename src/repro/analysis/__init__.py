@@ -1,0 +1,1 @@
+from repro.analysis import analytic, hlo, roofline  # noqa: F401

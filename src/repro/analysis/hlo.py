@@ -1,0 +1,195 @@
+"""Collective-byte extraction from post-SPMD optimized HLO text.
+
+``compiled.as_text()`` (AFTER partitioning — collectives only exist
+post-SPMD) is parsed per computation.  Collectives inside while-loop
+bodies appear ONCE in the text but execute trip-count times; the caller
+supplies ``loop_multiplier`` (e.g. n_layers for the scan-over-layers
+while) and every collective found inside a while-ish computation is
+multiplied by it.  Validated against unrolled compiles in
+EXPERIMENTS.md §Dry-run.
+
+Byte cost per op uses ring-algorithm wire bytes per chip:
+  all-reduce     2 (n-1)/n * size
+  all-gather       (n-1)/n * result_size
+  reduce-scatter   (n-1)/n * operand_size
+  all-to-all       (n-1)/n * size
+  collective-permute  size
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_REPLICA_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """'bf16[8,128]' or '(bf16[8,128], f32[4])' -> total bytes."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _REPLICA_GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _REPLICA_GROUPS_RE.search(line)
+    if m and m.group(1).strip():
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len([t for t in first.split(",") if t.strip() != ""])
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: float
+    group_size: int
+    computation: str
+    multiplier: int
+
+    @property
+    def wire_bytes_per_chip(self) -> float:
+        n = max(self.group_size, 2)
+        f = (n - 1) / n
+        if self.kind == "all-reduce":
+            b = 2 * f * self.result_bytes
+        elif self.kind == "all-gather":
+            b = f * self.result_bytes
+        elif self.kind == "reduce-scatter":
+            b = f * self.result_bytes * n   # operand = result * n
+        elif self.kind == "all-to-all":
+            b = f * self.result_bytes
+        else:  # collective-permute
+            b = self.result_bytes
+        return b * self.multiplier
+
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)|"
+    r"while\(.*?\).*?body=%?([\w.\-]+).*?condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _computations(lines) -> Dict[str, List[str]]:
+    """Split HLO text into named computations."""
+    comps: Dict[str, List[str]] = {}
+    name = "entry"
+    for line in lines:
+        s = line.strip()
+        if not line.startswith("  ") and "{" in s and "(" in s:
+            tok = s.split(" ")[0].lstrip("%").rstrip("{").strip()
+            if tok == "ENTRY":
+                tok = s.split(" ")[1].lstrip("%").strip()
+            name = tok or "entry"
+            comps[name] = []
+        comps.setdefault(name, []).append(line)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Scan conditions compare the induction var to a constant; take the
+    max integer constant found (trip count dominates the others)."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def parse_collectives(hlo_text: str, *, n_devices: int,
+                      loop_multiplier: Optional[int] = None) -> List[CollectiveOp]:
+    """Attribute each collective with the PRODUCT of trip counts of its
+    enclosing while loops (scan lowers to while; trip counts are parsed
+    from each loop's condition computation).  Nested loops (microbatch
+    scan x layer scan) multiply.  ``loop_multiplier`` overrides the
+    parsed trip count for every loop when given (legacy/testing)."""
+    lines = hlo_text.splitlines()
+    comps = _computations(lines)
+
+    # per-computation: which computations it invokes, and while edges
+    while_edges: Dict[str, List] = {}   # comp -> [(body, cond, trip)]
+    calls_of: Dict[str, set] = {}
+    for name, clines in comps.items():
+        for line in clines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond = m.group(1) or m.group(4)
+                body = m.group(2) or m.group(3)
+                trip = (loop_multiplier if loop_multiplier is not None
+                        else _trip_count(comps.get(cond, [])))
+                while_edges.setdefault(name, []).append((body, trip))
+            for callee in _CALLS_RE.findall(line):
+                calls_of.setdefault(name, set()).add(callee)
+
+    # propagate multipliers from the entry computation
+    entry = next((n for n in comps if "main" in n), None) or \
+        next(iter(comps), "entry")
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if mult.get(name, 0) >= m:
+            return
+        mult[name] = m
+        for body, trip in while_edges.get(name, []):
+            visit(body, m * max(trip, 1))
+        for callee in calls_of.get(name, ()):
+            bodies = {b for b, _ in while_edges.get(name, [])}
+            if callee not in bodies:
+                visit(callee, m)
+
+    visit(entry, 1)
+
+    ops: List[CollectiveOp] = []
+    for name, clines in comps.items():
+        for line in clines:
+            m = _OP_RE.search(line)
+            if not m or "-done(" in line:
+                continue
+            shape_str, kind = m.group(1), m.group(2)
+            ops.append(CollectiveOp(
+                kind=kind,
+                result_bytes=_shape_bytes(shape_str),
+                group_size=_group_size(line, n_devices),
+                computation=name,
+                multiplier=mult.get(name, 1),
+            ))
+    return ops
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict:
+    by_kind: Dict[str, Dict[str, float]] = {}
+    for op in ops:
+        d = by_kind.setdefault(op.kind, {"count": 0, "wire_bytes_per_chip": 0.0})
+        d["count"] += op.multiplier
+        d["wire_bytes_per_chip"] += op.wire_bytes_per_chip
+    total = sum(d["wire_bytes_per_chip"] for d in by_kind.values())
+    return {"by_kind": by_kind, "total_wire_bytes_per_chip": total}

@@ -1,0 +1,20 @@
+"""Phi-4-mini-3.8B [arXiv:2412.08905; hf].
+
+32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064.
+RoPE + SwiGLU + GQA, tied embeddings.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=200064,
+    tie_embeddings=True,
+    rope_theta=1e4,
+)

@@ -1,0 +1,6 @@
+"""The paper's primary contribution as a library: the batch-1 decode
+step-time decomposition — analytic HBM floor model (floor), hardware tier
+registry (hardware), the measurement protocol (protocol/stats), and the
+dispatch-mode executors that are the TPU analogue of the CUDA-Graphs A/B
+(dispatch)."""
+from repro.core import dispatch, floor, hardware, protocol, stats  # noqa: F401

@@ -1,0 +1,77 @@
+"""Dispatch-mode executors — the TPU/JAX analogue of the paper's
+CUDA-Graphs A/B (§5).
+
+The paper's single-knob intervention replaces per-kernel CPU launches
+with one graph replay.  In JAX the same axis is:
+
+  eager     — every primitive dispatched from the host, one at a time
+              (= per-kernel launch; the paper's eager PyTorch arm)
+  stage_jit — each stage (embedding / decoder block / head) is its own
+              compiled program, host Python loops over them
+              (= fused kernels but per-layer launches; a midpoint the
+              paper's instruments cannot express)
+  full_jit  — the entire decode step is ONE compiled program
+              (= CUDA Graphs replay; also how a production TPU serving
+              stack runs)
+
+``StepProgram`` decomposes a step into stages so all three executors run
+*the same math*; only the dispatch schedule differs — exactly the
+paper's "touch the launch term and only the launch term" requirement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Sequence
+
+import jax
+
+Stage = Callable[[Any], Any]   # state pytree -> state pytree
+
+MODES = ("eager", "stage_jit", "full_jit")
+
+
+@dataclasses.dataclass
+class StepProgram:
+    """A step decomposed into sequential stages over a carried state."""
+    stages: List[Stage]
+
+    def compose(self) -> Stage:
+        def full(state):
+            for st in self.stages:
+                state = st(state)
+            return state
+        return full
+
+    def executor(self, mode: str) -> Stage:
+        """Build a callable state->state for the given dispatch mode."""
+        if mode == "eager":
+            # jax.disable_jit() makes *nested* jits run op-by-op too, so
+            # every primitive is a separate host dispatch.
+            def run(state):
+                with jax.disable_jit():
+                    return self.compose()(state)
+            return run
+        if mode == "stage_jit":
+            jitted = [jax.jit(st) for st in self.stages]
+
+            def run(state):
+                for st in jitted:
+                    state = st(state)
+                return state
+            return run
+        if mode == "full_jit":
+            return jax.jit(self.compose())
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+
+
+def launch_count(program: StepProgram, mode: str) -> int:
+    """Host-dispatch count per step (the paper's ~283-launch anchor, App D).
+
+    eager: ~#primitives (unknown statically; returns -1), stage_jit: one
+    per stage, full_jit: 1.
+    """
+    if mode == "eager":
+        return -1
+    if mode == "stage_jit":
+        return len(program.stages)
+    return 1

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused GQA single-token decode attention
+(flash-decoding style online softmax over KV blocks).
+
+This is the per-step KV sweep — the "K" term of the paper's floor model.
+One kernel launch covers the whole (batch, kv-head) grid; the context
+axis is the innermost sequential grid dimension so the (m, l, acc)
+online-softmax carry lives in VMEM scratch across KV blocks.
+
+Grid (B, Hkv, S/BS); blocks: q (1,1,G,hd) resident, K/V (1,BS,1,hd)
+streamed, mask (1,BS) streamed.  hd is MXU-lane aligned (128 or 64 for
+the assigned archs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float):
+    s = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (BS, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)       # (BS, hd)
+    valid = mask_ref[0] != 0                     # (BS,)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (G, BS)
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+
+    m_prev = m_ref[...]                          # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                  # (G, BS)
+    p = jnp.where(valid[None, :], p, 0.0)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == ns - 1)
+    def _out():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                            mask: jnp.ndarray, *, bs: int = 512,
+                            interpret: bool = False) -> jnp.ndarray:
+    """q (B, Hq, hd); k/v (B, S, Hkv, hd); mask (B?, S) int8 -> (B, Hq, hd).
+
+    S must divide bs (ops.py pads with masked-out slots)."""
+    B, Hq, hd = q.shape
+    _, S, Hkv, _ = k.shape
+    G = Hq // Hkv
+    assert S % bs == 0, (S, bs)
+    qg = q.reshape(B, Hkv, G, hd)
+    mask2 = jnp.broadcast_to(mask.astype(jnp.int8).reshape(-1, S), (B, S))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=hd ** -0.5),
+        grid=(B, Hkv, S // bs),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, s: (b, s)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, mask2)
+    return out.reshape(B, Hq, hd)

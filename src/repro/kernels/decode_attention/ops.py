@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the fused GQA decode-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     mask: Optional[jnp.ndarray] = None,
+                     length: Optional[jnp.ndarray] = None,
+                     block: int = 512) -> jnp.ndarray:
+    """q (B, Hq, hd); k/v (B, S, Hkv, hd) -> (B, Hq, hd).
+
+    Provide either ``mask`` (S,) valid-slot mask or ``length`` (valid
+    prefix length).  Pads S up to a block multiple with masked slots."""
+    B, Hq, hd = q.shape
+    S = k.shape[1]
+    if mask is None:
+        assert length is not None
+        mask = jnp.arange(S) < length
+    interpret = jax.default_backend() != "tpu"
+    bs = min(block, S)
+    Sp = (S + bs - 1) // bs * bs
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        mask = jnp.pad(mask.reshape(-1, S), ((0, 0), (0, Sp - S))).reshape(-1)
+    return decode_attention_pallas(q, k, v, mask, bs=bs, interpret=interpret)
+
+
+def traffic_bytes(B: int, S: int, Hkv: int, hd: int, kv_bytes: int = 2) -> dict:
+    """Analytic per-call HBM traffic: the K term of the floor model."""
+    return {"kv": 2 * B * S * Hkv * hd * kv_bytes}

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused GQA decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         mask: jnp.ndarray) -> jnp.ndarray:
+    """q (B, Hq, hd); k/v (B, S, Hkv, hd); mask (S,) valid slots.
+    Returns (B, Hq, hd) f32."""
+    B, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(jnp.float32))
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(mask[None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, hd)

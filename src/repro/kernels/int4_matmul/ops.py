@@ -1,0 +1,49 @@
+"""jit'd public wrapper for the fused int4 matmul kernel.
+
+Pads M/N/K to block multiples, picks CPU interpret mode automatically,
+and exposes the analytic per-call HBM traffic for the floor model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int4_matmul.int4_matmul import int4_matmul_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def int4_matmul(x: jnp.ndarray, packed: jnp.ndarray, scales: jnp.ndarray,
+                *, group: int = 128, block: int = 128) -> jnp.ndarray:
+    """x (M, K) @ int4-packed (K//2, N) with per-group scales -> (M, N)."""
+    M, K = x.shape
+    K2, N = packed.shape
+    assert K == 2 * K2, f"K mismatch: x K={K}, packed implies {2 * K2}"
+    interpret = jax.default_backend() != "tpu"
+
+    bm = min(block, _round_up(M, 8))
+    bn = min(block, _round_up(N, 128))
+    bk = min(block, K)
+    g_eff = min(group, bk)
+
+    Mp, Np, Kp = _round_up(M, bm), _round_up(N, bn), _round_up(K, bk)
+    if (Mp, Kp) != (M, K):
+        x = jnp.pad(x, ((0, Mp - M), (0, Kp - K)))
+    if (Kp // 2, Np) != (K2, N):
+        packed = jnp.pad(packed, ((0, Kp // 2 - K2), (0, Np - N)))
+        scales = jnp.pad(scales, ((0, Kp // g_eff - scales.shape[0]), (0, Np - N)))
+    out = int4_matmul_pallas(x, packed, scales, group=g_eff,
+                             bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:M, :N]
+
+
+def traffic_bytes(M: int, K: int, N: int, group: int = 128) -> dict:
+    """Analytic HBM bytes per call (fused path)."""
+    return {
+        "x": M * K * 2,
+        "weights": K * N // 2,
+        "scales": (K // group) * N * 4,
+        "out": M * N * 2,
+    }

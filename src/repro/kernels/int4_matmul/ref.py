@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused int4 dequant-matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unpack_int4_ref(packed: jnp.ndarray) -> jnp.ndarray:
+    """uint8 (K//2, N) -> int8 (K, N), low nibble = even k, high = odd k."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    K2, N = packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * K2, N)
+
+
+def int4_matmul_ref(x: jnp.ndarray, packed: jnp.ndarray, scales: jnp.ndarray,
+                    group: int) -> jnp.ndarray:
+    """x (M, K) @ dequant(packed (K//2, N), scales (K//group, N)) -> (M, N) f32."""
+    K = 2 * packed.shape[0]
+    N = packed.shape[1]
+    q = unpack_int4_ref(packed).astype(jnp.float32)
+    w = (q.reshape(K // group, group, N) * scales[:, None, :].astype(jnp.float32)
+         ).reshape(K, N)
+    return x.astype(jnp.float32) @ w

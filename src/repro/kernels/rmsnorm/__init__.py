@@ -1,0 +1,2 @@
+from repro.kernels.rmsnorm import ops, ref  # noqa: F401
+from repro.kernels.rmsnorm.ops import rmsnorm  # noqa: F401

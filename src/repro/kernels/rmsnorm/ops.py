@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_pallas
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+            block: int = 256) -> jnp.ndarray:
+    """x (..., D) fused RMSNorm; flattens leading dims, pads rows."""
+    lead = x.shape[:-1]
+    D = x.shape[-1]
+    x2 = x.reshape(-1, D)
+    R = x2.shape[0]
+    br = min(block, R)
+    Rp = (R + br - 1) // br * br
+    if Rp != R:
+        x2 = jnp.pad(x2, ((0, Rp - R), (0, 0)))
+    interpret = jax.default_backend() != "tpu"
+    out = rmsnorm_pallas(x2, w, br=br, eps=eps, interpret=interpret)
+    return out[:R].reshape(*lead, D)

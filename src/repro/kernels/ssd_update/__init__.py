@@ -1,0 +1,2 @@
+from repro.kernels.ssd_update import ops, ref  # noqa: F401
+from repro.kernels.ssd_update.ops import ssd_update  # noqa: F401

@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the fused SSD decode-step kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_update.ssd_update import ssd_update_pallas
+
+
+def ssd_update(h: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+               A: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray):
+    """Mamba2 decode-step state update, kernel-fused.
+
+    h (B,H,P,N) f32; x (B,H,P); dt (B,H) post-softplus; A (H,) negative;
+    Bm/Cm (B,G,N) with G | H (broadcast to heads here).
+    Returns (h', y) matching mamba2.mamba_decode_step's inner math
+    (before the D-skip/gating, which stay in jnp)."""
+    B, H, P, N = h.shape
+    G = Bm.shape[1]
+    rep = H // G
+    Bv = jnp.repeat(Bm, rep, axis=1)
+    Cv = jnp.repeat(Cm, rep, axis=1)
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    dA = dt.astype(jnp.float32) * A[None, :].astype(jnp.float32)
+    interpret = jax.default_backend() != "tpu"
+    return ssd_update_pallas(h.astype(jnp.float32), xdt, dA,
+                             Bv.astype(jnp.float32), Cv.astype(jnp.float32),
+                             interpret=interpret)
+
+
+def traffic_bytes(B: int, H: int, P: int, N: int) -> dict:
+    """Analytic per-step HBM traffic: the SSM 'K' term of the floor."""
+    state = B * H * P * N * 4
+    return {"state_read": state, "state_write": state,
+            "unfused_extra_sweeps": 2 * state}

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused SSD decode state-update kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_update_ref(h: jnp.ndarray, xdt: jnp.ndarray, dA: jnp.ndarray,
+                   Bv: jnp.ndarray, Cv: jnp.ndarray):
+    """One recurrent SSD step (per decode token).
+
+    h (B,H,P,N) f32; xdt = x*dt (B,H,P); dA = dt*A (B,H) (A negative);
+    Bv/Cv (B,H,N) (groups pre-broadcast to heads).
+    Returns (h' (B,H,P,N), y (B,H,P)):
+      h' = exp(dA) * h + xdt ⊗ Bv ;  y = h' · Cv
+    """
+    decay = jnp.exp(dA)[..., None, None]
+    h_new = decay * h + xdt[..., None] * Bv[..., None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Cv)
+    return h_new, y

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused Mamba2/SSD recurrent decode step.
+
+The attention-free analogue of decode_attention: the per-step state
+sweep h' = exp(dA)*h + xdt ⊗ B ; y = h'·C is THE memory hot spot of
+SSM decode (the floor's constant "K" term — ctx-independent).  Fusing
+update + readout means the (P, N) state tile is read from HBM once and
+written once per step, with the outer product, decay and C-contraction
+all in VMEM — instead of three separate HBM sweeps (decay-mul, add,
+einsum) in the unfused form.
+
+Grid (B, H): each step owns one head's (P, N) state tile.
+P=64, N=64..128 for the assigned archs — (64,128) f32 = 32 KB, VMEM-easy
+and lane-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(h_ref, xdt_ref, dA_ref, b_ref, c_ref, hout_ref, y_ref):
+    h = h_ref[0, 0].astype(jnp.float32)          # (P, N)
+    xdt = xdt_ref[0, 0].astype(jnp.float32)      # (P,)
+    decay = jnp.exp(dA_ref[0, 0].astype(jnp.float32))   # scalar
+    bv = b_ref[0, 0].astype(jnp.float32)         # (N,)
+    cv = c_ref[0, 0].astype(jnp.float32)         # (N,)
+
+    h_new = decay * h + xdt[:, None] * bv[None, :]
+    hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+    y_ref[0, 0] = (h_new @ cv).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_update_pallas(h: jnp.ndarray, xdt: jnp.ndarray, dA: jnp.ndarray,
+                      Bv: jnp.ndarray, Cv: jnp.ndarray, *,
+                      interpret: bool = False):
+    """h (B,H,P,N) f32; xdt (B,H,P); dA (B,H); Bv/Cv (B,H,N).
+    Returns (h' (B,H,P,N) f32, y (B,H,P) f32)."""
+    B, H, P, N = h.shape
+    grid = (B, H)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, P, N), lambda b, h_: (b, h_, 0, 0)),
+            pl.BlockSpec((1, 1, P), lambda b, h_: (b, h_, 0)),
+            pl.BlockSpec((1, 1), lambda b, h_: (b, h_)),
+            pl.BlockSpec((1, 1, N), lambda b, h_: (b, h_, 0)),
+            pl.BlockSpec((1, 1, N), lambda b, h_: (b, h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, P, N), lambda b, h_: (b, h_, 0, 0)),
+            pl.BlockSpec((1, 1, P), lambda b, h_: (b, h_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, xdt, dA, Bv, Cv)

@@ -1,0 +1,1 @@
+from repro.launch import hints, mesh, sharding  # noqa: F401

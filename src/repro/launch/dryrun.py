@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the Model and allocation-free abstract params/caches
+     (jax.eval_shape -> ShapeDtypeStruct trees),
+  2. plans shardings (launch/sharding.py) for the production mesh
+     (16,16) single-pod or (2,16,16) multi-pod,
+  3. jit(...).lower(...).compile() — proving the distribution config is
+     coherent (sharding mismatches / OOM at compile / unsupported
+     collectives fail HERE),
+  4. records memory_analysis, cost_analysis, parsed collective bytes,
+     the analytic FLOP/byte model, and sharding decisions into one JSON
+     per cell under --out (read by analysis/roofline.py).
+
+Weight paths per cell: bf16 default; llama4-scout serving cells use
+int8_fused (109B params cannot hold bf16 on a 16-chip model axis —
+quantised serving is the deployable path, DESIGN.md §5); its train cell
+uses FSDP (2D weight sharding).
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import analytic
+from repro.analysis.hlo import collective_summary, parse_collectives
+from repro.configs import SHAPES, get_config, list_configs, shape_applicable
+from repro.core.hardware import DEFAULT_CHIP
+from repro.launch import sharding as shd
+from repro.launch.mesh import dp_size, make_production_mesh, tp_size
+from repro.models.model import Model, input_specs
+from repro.quant import quantize_tree
+from repro.training.optimizer import AdamW
+from repro.training.train_loop import make_train_step
+
+
+def cell_policy(arch: str, shape_name: str) -> Dict:
+    """Per-cell deployment choices (recorded in the cell JSON)."""
+    pol = {"weight_path": "bf16", "fsdp": False, "kv_dtype": "bfloat16",
+           "remat": "blocks", "microbatches": 1, "strategy": "tp",
+           "grad_compression": None, "attn_chunk_threshold": None}
+    if shape_name == "train_4k":
+        # grad-accumulation keeps per-chip activation residuals bounded
+        # (mb=8 fits phi4/zamba2/mamba2 on 16GB v5e; measured in §Perf)
+        pol["microbatches"] = 8
+    if arch == "llama4-scout-17b-a16e":
+        if shape_name == "train_4k":
+            pol["fsdp"] = True
+        else:
+            # 109B params: int4 fused weights are the deployable path on
+            # 16GB v5e (the paper's ExLlamaV2 lesson, DESIGN.md §5)
+            pol["weight_path"] = "int4_fused"
+    return pol
+
+
+def build_cell(arch: str, shape_name: str, mesh_kind: str,
+               policy_overrides: Optional[Dict] = None) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped",
+                "reason": "long_500k needs sub-quadratic attention "
+                          "(full-attention arch; DESIGN.md §5)"}
+
+    pol = cell_policy(arch, shape_name)
+    pol.update(policy_overrides or {})
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_chips = mesh.size
+    if pol["attn_chunk_threshold"] is not None:
+        from repro.models import attention as _attn
+        _attn.configure(threshold=pol["attn_chunk_threshold"])
+    model = Model(cfg)
+    plan = shd.make_plan(cfg, mesh, fsdp=pol["fsdp"], strategy=pol["strategy"])
+
+    t0 = time.time()
+    abstract_params = model.abstract_params()
+    if pol["weight_path"] != "bf16":
+        abstract_params = jax.eval_shape(
+            lambda p: quantize_tree(p, pol["weight_path"]), abstract_params)
+    p_sh = shd.params_shardings(plan, abstract_params)
+
+    B, S = shape.global_batch, shape.seq_len
+    kv_dtype = jnp.bfloat16 if pol["kv_dtype"] == "bfloat16" else jnp.int8
+
+    if shape.kind == "train":
+        opt = AdamW(lr=1e-4)
+        abstract_opt = jax.eval_shape(opt.init, abstract_params)
+        o_sh = shd.opt_state_shardings(plan, abstract_opt)
+        batch_specs = input_specs(cfg, seq_len=S, batch=B, kind="train")
+        b_sh = shd.batch_shardings(plan, batch_specs)
+        step = make_train_step(model, opt, remat=pol["remat"],
+                               microbatches=pol["microbatches"],
+                               grad_compression=pol["grad_compression"])
+        fn = jax.jit(step, in_shardings=((p_sh, o_sh), b_sh),
+                     donate_argnums=(0,))
+        args = ((abstract_params, abstract_opt), batch_specs)
+    elif shape.kind == "prefill":
+        abstract_cache = jax.eval_shape(
+            lambda: model.init_cache(B, S, kv_dtype=kv_dtype))
+        c_sh = shd.cache_shardings(plan, abstract_cache)
+        batch_specs = input_specs(cfg, seq_len=S, batch=B, kind="prefill")
+        b_sh = shd.batch_shardings(plan, batch_specs)
+        fn = jax.jit(model.prefill, in_shardings=(p_sh, b_sh, c_sh),
+                     donate_argnums=(2,))
+        args = (abstract_params, batch_specs, abstract_cache)
+    else:  # decode
+        abstract_cache = jax.eval_shape(
+            lambda: model.init_cache(B, S, kv_dtype=kv_dtype))
+        c_sh = shd.cache_shardings(plan, abstract_cache)
+        tok_specs = input_specs(cfg, seq_len=S, batch=B, kind="decode")
+        t_sh = shd.batch_shardings(plan, tok_specs)
+        fn = jax.jit(model.decode_step,
+                     in_shardings=(p_sh, c_sh, t_sh["tokens"]),
+                     donate_argnums=(1,))
+        args = (abstract_params, abstract_cache, tok_specs["tokens"])
+
+    from repro.launch.hints import activation_hints
+    with mesh, activation_hints(mesh, dp_all=(pol["strategy"] == "dp")):
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    colls = parse_collectives(hlo_text, n_devices=n_chips)
+    csum = collective_summary(colls)
+
+    wdtype = {"bf16": 2, "int8_fused": 1, "int8_dequant": 1,
+              "int4_fused": 0.5, "int4_dequant": 0.5}[pol["weight_path"]]
+    tp_eff = 1 if pol["strategy"] == "dp" else tp_size(mesh)
+    dp_eff = n_chips if pol["strategy"] == "dp" else dp_size(mesh)
+    kv_bytes_eff = 1.0 + 4.0 / (2 * max(cfg.head_dim, 1)) \
+        if pol["kv_dtype"] == "int8" else 2.0
+    est = analytic.estimate(cfg, shape, n_chips=n_chips, tp=tp_eff,
+                            dp=dp_eff, weight_dtype_bytes=wdtype,
+                            kv_dtype_bytes=kv_bytes_eff,
+                            remat=pol["remat"])
+
+    per_chip_bytes = (getattr(mem, "argument_size_in_bytes", 0)
+                      + getattr(mem, "temp_size_in_bytes", 0)
+                      + getattr(mem, "output_size_in_bytes", 0)
+                      - getattr(mem, "alias_size_in_bytes", 0))
+    cell = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "n_chips": n_chips, "status": "ok",
+        "policy": pol,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "per_chip_bytes": per_chip_bytes,
+            "fits_v5e": bool(per_chip_bytes <= DEFAULT_CHIP.hbm_bytes),
+        },
+        "cost_analysis_xla": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "note": "XLA counts while bodies once; see analytic + "
+                    "EXPERIMENTS.md §Dry-run",
+        },
+        "collectives": csum,
+        "collective_count_kinds": sorted(csum["by_kind"].keys()),
+        "analytic": {
+            "flops": est.flops,
+            "hbm_bytes_per_chip": est.hbm_bytes_per_chip,
+            "model_flops": est.model_flops,
+            **{k: float(v) for k, v in est.detail.items()},
+        },
+        "sharding_decisions": plan.decisions,
+    }
+    return cell
+
+
+def run_cell(arch, shape_name, mesh_kind, out_dir, force=False,
+             policy_overrides=None, tag="") -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}{tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    try:
+        cell = build_cell(arch, shape_name, mesh_kind, policy_overrides)
+    except Exception as e:
+        cell = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+    with open(path, "w") as f:
+        json.dump(cell, f, indent=1, default=str)
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--assigned-only", action="store_true", default=True)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_configs(assigned_only=True) if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                t0 = time.time()
+                cell = run_cell(arch, shape_name, mesh_kind, args.out,
+                                force=args.force)
+                dt = time.time() - t0
+                st = cell["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+                extra = ""
+                if st == "ok":
+                    extra = (f" fits={cell['memory']['fits_v5e']} "
+                             f"perchip={cell['memory']['per_chip_bytes']/1e9:.2f}GB "
+                             f"compile={cell['compile_s']}s")
+                elif st == "error":
+                    extra = " " + cell["error"][:120]
+                print(f"[{st:7s}] {arch} x {shape_name} x {mesh_kind}"
+                      f" ({dt:.1f}s){extra}", flush=True)
+    print(f"\nok={n_ok} skipped={n_skip} error={n_err}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Activation-sharding hints.
+
+Models stay mesh-agnostic: they call ``constrain(x, axes)`` with logical
+axis names ("dp" = all data axes, "tp" = the model axis, None = keep).
+When a mesh is installed (dry-run / launcher), this becomes a
+``with_sharding_constraint`` — pinning GSPMD's activation layout so
+attention scores and MLP intermediates shard over heads/features instead
+of replicating.  Without an installed mesh it is a no-op, so single-
+device tests and benches are untouched.
+
+Divisibility guards mirror launch/sharding.py: an axis that does not
+divide the dim is dropped (never an error).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"mesh": None, "dp_all": False}
+
+
+def enable(mesh, dp_all: bool = False) -> None:
+    _STATE["mesh"] = mesh
+    _STATE["dp_all"] = dp_all
+
+
+def disable() -> None:
+    _STATE["mesh"] = None
+    _STATE["dp_all"] = False
+
+
+class activation_hints:
+    """Context manager: with activation_hints(mesh): ... lower/compile.
+
+    dp_all=True (pure-DP strategy): 'dp' resolves to ALL mesh axes and
+    'tp' is dropped (no model axis is reserved for TP)."""
+
+    def __init__(self, mesh, dp_all: bool = False):
+        self.mesh = mesh
+        self.dp_all = dp_all
+
+    def __enter__(self):
+        enable(self.mesh, self.dp_all)
+        return self
+
+    def __exit__(self, *exc):
+        disable()
+        return False
+
+
+def _resolve(ax, mesh):
+    if ax == "dp":
+        if _STATE["dp_all"]:
+            axes = tuple(mesh.axis_names)
+        else:
+            axes = tuple(a for a in mesh.axis_names if a != "model")
+        return axes if len(axes) > 1 else axes[0]
+    if ax == "tp":
+        if _STATE["dp_all"]:
+            return None
+        return "model"
+    return ax
+
+
+def _size_of(ax, mesh) -> int:
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def tp_divides(n: int) -> bool:
+    """True iff a mesh is installed, TP is active, and n divides the
+    model-axis size."""
+    mesh = _STATE["mesh"]
+    if mesh is None or _STATE["dp_all"]:
+        return False
+    return n % mesh.shape["model"] == 0
+
+
+def constrain(x, axes: Sequence[Optional[str]]):
+    """x: array; axes: per-dim 'dp' | 'tp' | None (trailing dims None)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    spec = []
+    for i, dim in enumerate(x.shape):
+        ax = axes[i] if i < len(axes) else None
+        if ax is not None:
+            ax = _resolve(ax, mesh)
+            if ax is not None and dim % _size_of(ax, mesh) != 0:
+                ax = None
+        spec.append(ax)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_first_fit(x, candidates: Sequence[Sequence[Optional[str]]]):
+    """Apply the first candidate whose named axes ALL divide their dims
+    (e.g. prefer kv-head TP for attention scores, fall back to
+    query-sequence context-parallelism when head counts don't split)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    for axes in candidates:
+        ok = True
+        for i, dim in enumerate(x.shape):
+            ax = axes[i] if i < len(axes) else None
+            if ax is None:
+                continue
+            r = _resolve(ax, mesh)
+            if r is not None and dim % _size_of(r, mesh) != 0:
+                ok = False
+                break
+        if ok:
+            return constrain(x, axes)
+    return constrain(x, candidates[-1])   # guards drop what doesn't fit

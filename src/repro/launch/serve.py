@@ -1,0 +1,68 @@
+"""Serving launcher — batch-1 streaming decode, the paper's workload.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+      --prompt-len 32 --new-tokens 64 --quant int4_fused --timed
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core import floor as fl
+from repro.core.hardware import DEFAULT_CHIP
+from repro.models.model import Model
+from repro.serving import DecodeEngine
+from repro.training.data import DataLoader
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--quant", default="bf16",
+                    choices=["bf16", "int8_dequant", "int8_fused",
+                             "int4_dequant", "int4_fused"])
+    ap.add_argument("--mode", default="streamed", choices=["streamed", "fused"])
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--timed", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    engine = DecodeEngine(model, params, quant_path=args.quant)
+
+    loader = DataLoader(cfg, batch=args.batch, seq_len=args.prompt_len,
+                        seed=args.seed)
+    batch = next(loader)
+    batch.pop("labels", None)
+    max_len = args.prompt_len + args.new_tokens + 1
+
+    if args.mode == "fused":
+        res = engine.generate_fused(batch, max_len=max_len,
+                                    n_new=args.new_tokens)
+    else:
+        res = engine.generate_streamed(batch, max_len=max_len,
+                                       n_new=args.new_tokens,
+                                       temperature=args.temperature,
+                                       timed=args.timed)
+    print(f"generated {res.tokens.shape} tokens; {res.tokens_per_s:.1f} tok/s")
+    if args.timed and res.step_times_s:
+        import numpy as np
+        p50 = float(np.median(res.step_times_s)) * 1e3
+        fc = fl.floor_cell(cfg, DEFAULT_CHIP, args.prompt_len)
+        print(f"p50 step {p50:.2f} ms (v5e analytic floor for the FULL "
+              f"config would be {fc.t_floor_ms:.2f} ms)")
+    print("first tokens:", res.tokens[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""Adaptive sharding planner (DESIGN.md §4).
+
+Maps every param/batch/cache leaf to a PartitionSpec by *name-based
+rules* + *divisibility guards*: an axis is only assigned when the dim
+divides the mesh axis size (jax rejects uneven input shardings); every
+fallback is recorded in ``plan.decisions`` and printed by the dry-run.
+
+Strategies encoded here:
+  TP       — feature dims (d_ff, heads*head_dim, d_inner, vocab) over
+             "model" (Megatron column/row pattern: one all-reduce/block)
+  EP vs in-expert TP — experts over "model" when E % model == 0
+             (llama4 16e), else TP inside each expert (qwen2-moe 60e,
+             1408 = 16*88)
+  DP       — batch over ("pod", "data")
+  FSDP/ZeRO— params (and always optimizer moments) additionally sharded
+             over "data" on a non-TP dim, for archs that cannot fit
+             weights on the model axis alone (llama4-scout)
+  seq-sharded KV — decode caches shard context over "model" (and batch
+             over "data"); sidesteps GQA head divisibility and fits
+             32k x 128 caches (flash-decoding combine is GSPMD-emitted)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import dp_axes, dp_size, tp_size
+from repro.quant.quantize import QuantizedTensor
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Any
+    cfg: ArchConfig
+    fsdp: bool
+    decisions: Dict[str, str]
+    strategy: str = "tp"   # "tp" (Megatron default) | "dp" (pure data-
+    #                        parallel: params replicated, batch over ALL
+    #                        axes, ZeRO-1 moments — the small-model layout
+    #                        found in §Perf hillclimb A)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    @property
+    def batch_axes(self):
+        if self.strategy == "dp":
+            return tuple(self.mesh.axis_names)       # all axes carry batch
+        return dp_axes(self.mesh)
+
+
+def _fits(dim: int, mesh, axis) -> bool:
+    if axis is None:
+        return True
+    sizes = [mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))]
+    n = 1
+    for s in sizes:
+        n *= s
+    return dim % n == 0
+
+
+def _guard(plan: ShardingPlan, path: str, shape, wanted: Tuple) -> P:
+    """Drop axes that don't divide; record every fallback."""
+    out = []
+    for dim, axis in zip(shape, wanted):
+        if axis is not None and not _fits(dim, plan.mesh, axis):
+            plan.decisions[path] = (f"wanted {axis} on dim {dim}, "
+                                    f"not divisible -> replicated")
+            axis = None
+        out.append(axis)
+    return P(*out)
+
+
+def _leaf_name(kp) -> str:
+    return str(getattr(kp[-1], "key", getattr(kp[-1], "idx", kp[-1])))
+
+
+def _path_str(kp) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
+
+
+def make_plan(cfg: ArchConfig, mesh, *, fsdp: bool = False,
+              strategy: str = "tp") -> ShardingPlan:
+    return ShardingPlan(mesh, cfg, fsdp, {}, strategy)
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def param_spec(plan: ShardingPlan, kp, leaf) -> P:
+    """PartitionSpec for one param leaf (shape includes stacking dims:
+    blocks are (L, ...), experts (L, E, ...))."""
+    cfg, mesh = plan.cfg, plan.mesh
+    name = _leaf_name(kp)
+    path = _path_str(kp)
+    shape = leaf.shape
+    if plan.strategy == "dp":
+        # pure DP: parameters replicated everywhere
+        return P(*([None] * len(shape)))
+    stacked = path.startswith("blocks")
+    dp = "data" if (plan.fsdp and "data" in mesh.axis_names) else None
+    L = (None,) if stacked else ()
+
+    def guard(*wanted):
+        base = L + tuple(wanted)
+        # align to actual rank (quantized leaves add/remove dims)
+        base = base[:len(shape)] + (None,) * (len(shape) - len(base))
+        return _guard(plan, path, shape, base)
+
+    ep_ok = cfg.n_experts and cfg.n_experts % tp_size(mesh) == 0
+
+    if name in ("embed", "lm_head"):
+        # (V, D) or (K_codebooks, V, D): vocab over model, else d_model
+        if shape[-2] % tp_size(mesh) == 0:
+            spec = (None,) * (len(shape) - 2) + ("model", dp)
+        else:
+            spec = (None,) * (len(shape) - 2) + (None, "model")
+        return _guard(plan, path, shape, spec)
+    if name in ("wq", "wk", "wv"):            # (D, H*hd) col-parallel
+        return guard(dp, "model")
+    if name == "wo":                          # (H*hd, D) row-parallel
+        return guard("model", dp)
+    if name in ("bq", "bk", "bv"):
+        return guard("model")
+    if name in ("gate", "up"):                # (D, F) col-parallel
+        return guard(dp, "model")
+    if name == "down":                        # (F, D) row-parallel
+        return guard("model", dp)
+    if name == "router":
+        return guard(None, None)
+    if name in ("w_gate", "w_up"):            # (E, D, F)
+        return guard("model", dp, None) if ep_ok else guard(None, dp, "model")
+    if name == "w_down":                      # (E, F, D)
+        return guard("model", None, dp) if ep_ok else guard(None, "model", dp)
+    if name == "in_proj":                     # (D, 2DI+2GN+H) col-parallel
+        return guard(dp, "model")
+    if name == "out_proj":                    # (DI, D) row-parallel
+        return guard("model", dp)
+    if name in ("conv_w",):                   # (K, C)
+        return guard(None, "model")
+    if name in ("conv_b", "gate_norm"):
+        return guard("model")
+    if name in ("A_log", "D", "dt_bias"):     # (H,)
+        return guard("model")
+    # norms, scalars: replicated
+    return guard(*([None] * (len(shape) - len(L))))
+
+
+def params_shardings(plan: ShardingPlan, abstract_params) -> Any:
+    """Tree of NamedSharding matching the (possibly quantised) param tree.
+
+    QuantizedTensor leaves: data/scales inherit the logical weight's spec
+    on their shared (K-ish, N) trailing dims."""
+    def visit(kp, leaf):
+        if isinstance(leaf, QuantizedTensor):
+            spec = param_spec(plan, kp, leaf)     # uses logical .shape
+            # data/scales have same rank; K-dim sharding only if divisible
+            d_spec = _guard(plan, _path_str(kp) + ".data", leaf.data.shape,
+                            tuple(spec))
+            s_spec = _guard(plan, _path_str(kp) + ".scales", leaf.scales.shape,
+                            tuple(spec))
+            return QuantizedTensor(plan.named(d_spec), plan.named(s_spec),
+                                   leaf.bits, leaf.path)
+        return plan.named(param_spec(plan, kp, leaf))
+    return jax.tree_util.tree_map_with_path(
+        visit, abstract_params,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor))
+
+
+def opt_state_shardings(plan: ShardingPlan, abstract_opt_state,
+                        *, zero1: bool = False) -> Any:
+    """Moments follow the param layout by default (consistent shardings
+    keep XLA from leaking an FSDP layout into the backward graph — see
+    EXPERIMENTS.md §Perf for the measured ZeRO-1 trade-off).  zero1=True
+    additionally shards moments over the data axes.  Under the pure-DP
+    strategy, moments use the TP layout (ZeRO-1: replicated params,
+    sharded optimizer)."""
+    plan_m = dataclasses.replace(plan, fsdp=True) if zero1 else plan
+    if plan.strategy == "dp":
+        plan_m = dataclasses.replace(plan, strategy="tp", fsdp=True)
+    step, mu, nu = abstract_opt_state
+    return type(abstract_opt_state)(plan.named(P()),
+                                    params_shardings(plan_m, mu),
+                                    params_shardings(plan_m, nu))
+
+
+# --------------------------------------------------------------------------
+# batches and caches
+# --------------------------------------------------------------------------
+
+def batch_shardings(plan: ShardingPlan, batch_specs: Dict) -> Dict:
+    dp = plan.batch_axes
+    out = {}
+    for k, v in batch_specs.items():
+        wanted = (dp,) + (None,) * (len(v.shape) - 1)
+        out[k] = plan.named(_guard(plan, f"batch/{k}", v.shape, wanted))
+    return out
+
+
+def cache_shardings(plan: ShardingPlan, cache_specs: Dict) -> Dict:
+    """KV cache (L, B, S, Hkv, hd): batch over data, seq over model.
+    SSM state (L, B, H, P, N): batch over data, heads over model.
+    B==1 (long-context single stream): seq additionally over data."""
+    mesh = plan.mesh
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in cache_specs.items():
+        shape = v.shape
+        if k in ("k", "v"):
+            B, S = shape[1], shape[2]
+            if B == 1:
+                wanted = (None, None, (dp + ("model",)), None, None)
+                if not _fits(S, mesh, wanted[2]):
+                    wanted = (None, None, "model", None, None)
+            else:
+                wanted = (None, dp, "model", None, None)
+            out[k] = plan.named(_guard(plan, f"cache/{k}", shape, wanted))
+        elif k in ("k_scale", "v_scale"):   # (L, B, S, Hkv) int8-KV scales
+            B = shape[1]
+            wanted = ((None, None, (dp + ("model",)), None) if B == 1
+                      else (None, dp, "model", None))
+            out[k] = plan.named(_guard(plan, f"cache/{k}", shape, wanted))
+        elif k == "h":        # (L, B, H, P, N)
+            wanted = (None, dp, "model", None, None)
+            out[k] = plan.named(_guard(plan, f"cache/{k}", shape, wanted))
+        elif k == "conv":     # (L, B, K-1, C)
+            wanted = (None, dp, None, "model")
+            out[k] = plan.named(_guard(plan, f"cache/{k}", shape, wanted))
+        else:                 # pos scalar
+            out[k] = plan.named(P())
+    return out

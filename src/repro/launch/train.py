@@ -1,0 +1,87 @@
+"""Training launcher.
+
+Real-hardware entry point (and CPU reduced-config driver): builds the
+model + sharding plan for the ambient device set, runs the
+fault-tolerant loop (training/fault_tolerance.py) with atomic
+checkpoints.  On a TPU fleet each process calls
+``jax.distributed.initialize()`` first (--distributed).
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+      --steps 100 --batch 8 --seq-len 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from repro.configs import get_config
+from repro.launch import sharding as shd
+from repro.launch.hints import activation_hints
+from repro.launch.mesh import make_test_mesh
+from repro.models.model import Model
+from repro.training import (AdamW, DataLoader, cosine_schedule, jit_train_step,
+                            make_train_step, run_training)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=["none", "blocks", "full"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data-mode", default="arith", choices=["uniform", "arith"])
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    opt = AdamW(lr=cosine_schedule(args.lr, args.steps // 10 + 1, args.steps))
+
+    n_dev = jax.device_count()
+    mesh = None
+    if n_dev > 1:
+        dp = n_dev
+        mesh = make_test_mesh(data=dp, model=1)
+
+    step = make_train_step(model, opt, remat=args.remat,
+                           microbatches=args.microbatches)
+    step_fn = jit_train_step(step)
+
+    def init_state():
+        params = model.init(jax.random.PRNGKey(args.seed))
+        return (params, opt.init(params))
+
+    loader = DataLoader(cfg, batch=args.batch, seq_len=args.seq_len,
+                        seed=args.seed, mode=args.data_mode)
+
+    ctx = activation_hints(mesh) if mesh is not None else activation_hints(None)
+    import contextlib
+    mesh_ctx = mesh if mesh is not None else contextlib.nullcontext()
+    with mesh_ctx, ctx:
+        result = run_training(train_step=step_fn, init_state=init_state,
+                              loader=loader, ckpt_dir=args.ckpt_dir,
+                              total_steps=args.steps,
+                              ckpt_every=args.ckpt_every)
+    first = result.metrics_history[0]["loss"]
+    last = result.metrics_history[-1]["loss"]
+    print(f"steps={result.step} loss {first:.4f} -> {last:.4f} "
+          f"(restarts={result.restarts})")
+
+
+if __name__ == "__main__":
+    main()

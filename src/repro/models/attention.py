@@ -1,0 +1,289 @@
+"""GQA attention: full-sequence (train/prefill) and cached decode with
+selectable backends (the paper's §6 attention-backend matrix).
+
+Backends for the decode step:
+  sdpa     — fused jnp softmax-attention (the dispatcher default)
+  math     — explicitly decomposed softmax (the paper's MATH fallback)
+  split_kv — flash-decoding style partitioned KV with partial-softmax
+             combine (what GSPMD emits for a sequence-sharded cache)
+  pallas   — the Pallas TPU kernel (kernels/decode_attention), interpret
+             mode on CPU
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch import hints
+from repro.models.common import dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+DECODE_BACKENDS = ("sdpa", "math", "split_kv", "pallas")
+
+# above this sequence length, full attention runs q-block-chunked (exact
+# math, flash-style memory): scores never materialise beyond (bq, S).
+# configure() lets launchers/perf-experiments retune without rebuild.
+CHUNKED_ATTN_THRESHOLD = 8192
+CHUNK_Q = 1024
+
+
+def configure(threshold: Optional[int] = None, chunk_q: Optional[int] = None):
+    global CHUNKED_ATTN_THRESHOLD, CHUNK_Q
+    if threshold is not None:
+        CHUNKED_ATTN_THRESHOLD = threshold
+    if chunk_q is not None:
+        CHUNK_Q = chunk_q
+
+
+def init_attention(key, cfg: ArchConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, hq * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, hkv * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, hkv * hd, dtype),
+        "wo": dense_init(ks[3], hq * hd, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, x: jnp.ndarray, cfg: ArchConfig):
+    from repro.quant.paths import matmul
+    B, S, _ = x.shape
+    q = matmul(x, p["wq"])
+    k = matmul(x, p["wk"])
+    v = matmul(x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = hints.constrain(q.reshape(B, S, cfg.n_heads, cfg.head_dim),
+                        ("dp", None, "tp"))
+    k = hints.constrain(k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                        ("dp", None, "tp"))
+    v = hints.constrain(v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                        ("dp", None, "tp"))
+    return q, k, v
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """q (B,Sq,Hq,hd), k (B,Sk,Hkv,hd) -> scores (B,Hkv,G,Sq,Sk) f32.
+
+    bf16 operands with an f32 accumulator (MXU-native; matches the
+    paper's bf16-tensor-core SDPA semantics)."""
+    B, Sq, Hq, hd = q.shape
+    G = Hq // cfg.n_kv_heads
+    qg = q.reshape(B, Sq, cfg.n_kv_heads, G, hd)
+    return jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                      preferred_element_type=jnp.float32) * (hd ** -0.5)
+
+
+def _gqa_out(probs: jnp.ndarray, v: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """probs (B,Hkv,G,Sq,Sk) f32, v (B,Sk,Hkv,hd) -> (B,Sq,Hq*hd) f32."""
+    B = probs.shape[0]
+    o = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    Sq = o.shape[1]
+    return o.reshape(B, Sq, cfg.n_heads * cfg.head_dim)
+
+
+def _causal_probs(scores: jnp.ndarray, q0: jnp.ndarray, S: int,
+                  window: Optional[int]) -> jnp.ndarray:
+    """scores (B,K,G,bq,S) for q rows starting at q0 -> masked softmax."""
+    bq = scores.shape[3]
+    qpos = q0 + jnp.arange(bq)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def attention_full(p: Params, x: jnp.ndarray, angles: jnp.ndarray,
+                   cfg: ArchConfig, apply_rope_fn,
+                   positions: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full causal attention (train / prefill). Returns (out, (k, v)).
+
+    Long sequences (> CHUNKED_ATTN_THRESHOLD) run q-block-chunked via
+    lax.scan — exact math, (bq, S) score footprint instead of (S, S)."""
+    from repro.quant.paths import matmul
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope_fn(q, angles)
+    k = apply_rope_fn(k, angles)
+
+    if S <= CHUNKED_ATTN_THRESHOLD:
+        # prefer kv-head TP; context-parallel (query-seq) fallback for
+        # head counts that don't divide the model axis
+        scores = hints.constrain_first_fit(
+            _gqa_scores(q, k, cfg),
+            [("dp", "tp"), ("dp", None, None, "tp")])
+        probs = _causal_probs(scores, jnp.int32(0), S, cfg.sliding_window)
+        out = _gqa_out(probs, v, cfg).astype(x.dtype)
+        return matmul(out, p["wo"]), (k, v)
+
+    bq = CHUNK_Q
+    assert S % bq == 0, (S, bq)
+    qb = q.reshape(B, S // bq, bq, cfg.n_heads, cfg.head_dim)
+
+    def body(_, inp):
+        i, qi = inp                                   # qi (B,bq,Hq,hd)
+        scores = hints.constrain_first_fit(
+            _gqa_scores(qi, k, cfg),
+            [("dp", "tp"), ("dp", None, None, "tp")])
+        probs = _causal_probs(scores, i * bq, S, cfg.sliding_window)
+        return None, _gqa_out(probs, v, cfg).astype(x.dtype)
+
+    # chunk body is always rematted: the (bq, S) score tile is recomputed
+    # in backward instead of saved — flash-attention residual behaviour
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, blocks = jax.lax.scan(
+        body, None, (jnp.arange(S // bq), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return matmul(out, p["wo"]), (k, v)
+
+
+# --------------------------------------------------------------------------
+# decode (single new token against a static cache)
+# --------------------------------------------------------------------------
+
+def decode_mask(pos: jnp.ndarray, s_max: int, *, ring: bool = False):
+    """Valid-slot mask for a decode step.
+
+    Full cache (s_max >= ctx): slots 0..pos valid.
+    Ring cache (sliding window == s_max): slots <= pos valid until the
+    ring wraps (pos >= s_max), after which every slot holds an in-window
+    token.  Softmax is permutation-invariant over slots, so slot order
+    never matters; RoPE was applied at absolute positions on write.
+    """
+    idx = jnp.arange(s_max)
+    m = idx <= pos
+    if ring:
+        m = m | (pos >= s_max)
+    return m
+
+
+def _sdpa_decode(q, k_cache, v_cache, mask, cfg, k_scale=None, v_scale=None):
+    """k_scale/v_scale (B,S,Hkv): int8-KV path.  The per-token scales are
+    constant over head_dim, so they FOLD into the score/prob tensors
+    exactly — the int8 codes only convert-fuse into the dots and no bf16
+    KV copy is ever materialised (EXPERIMENTS.md §Perf C)."""
+    scores = _gqa_scores(q, k_cache.astype(q.dtype), cfg)    # (B,K,G,1,S)
+    if k_scale is not None:
+        scores = scores * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    scores = jnp.where(mask[None, None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if v_scale is not None:
+        probs = probs * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    return _gqa_out(probs, v_cache.astype(q.dtype), cfg)
+
+
+def _math_decode(q, k_cache, v_cache, mask, cfg):
+    """Explicitly decomposed softmax (separate max/exp/sum/div ops)."""
+    scores = _gqa_scores(q, k_cache, cfg)
+    neg = jnp.float32(-1e30)
+    scores = jnp.where(mask[None, None, None, None, :], scores, neg)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / z
+    return _gqa_out(probs, v_cache, cfg)
+
+
+def _split_kv_decode(q, k_cache, v_cache, mask, cfg, n_partitions: int = 8):
+    """Flash-decoding: partition the KV axis, partial softmax per
+    partition, numerically-exact combine (log-sum-exp merge)."""
+    B, S, Hkv, hd = k_cache.shape
+    P = n_partitions
+    while S % P:
+        P //= 2
+    sp = S // P
+    kp = k_cache.reshape(B, P, sp, Hkv, hd)
+    vp = v_cache.reshape(B, P, sp, Hkv, hd)
+    maskp = mask.reshape(P, sp)
+
+    def part(kpi, vpi, mi):
+        scores = _gqa_scores(q, kpi, cfg)                    # (B,K,G,1,sp)
+        scores = jnp.where(mi[None, None, None, None, :], scores, -jnp.inf)
+        m = jnp.max(scores, axis=-1)                         # (B,K,G,1)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        e = jnp.exp(scores - m_safe[..., None])
+        e = jnp.where(mi[None, None, None, None, :], e, 0.0)
+        l = jnp.sum(e, axis=-1)
+        acc = jnp.einsum("bkgqs,bskh->bkgqh", e, vpi.astype(jnp.float32))
+        return m, l, acc
+
+    ms, ls, accs = jax.vmap(part, in_axes=(1, 1, 0), out_axes=0)(kp, vp, maskp)
+    m_glob = jnp.max(ms, axis=0)
+    m_glob_safe = jnp.where(jnp.isfinite(m_glob), m_glob, 0.0)
+    scale = jnp.exp(jnp.where(jnp.isfinite(ms), ms - m_glob_safe, -jnp.inf))
+    l_glob = jnp.sum(ls * scale, axis=0)
+    acc = jnp.sum(accs * scale[..., None], axis=0)
+    out = acc / jnp.maximum(l_glob, 1e-30)[..., None]        # (B,K,G,1,hd)
+    B_, K, G, _, hd_ = out.shape
+    return out.transpose(0, 3, 1, 2, 4).reshape(B_, 1, K * G * hd_)
+
+
+def attention_decode(p: Params, x: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, write_pos: jnp.ndarray,
+                     mask: jnp.ndarray, angles: jnp.ndarray, cfg: ArchConfig,
+                     apply_rope_fn, backend: str = "sdpa",
+                     k_scale=None, v_scale=None):
+    """One-token decode.  x (B,1,D); cache (B,S_max,Hkv,hd).
+
+    ``write_pos`` is the cache slot for the new K/V (== absolute pos for a
+    full cache, pos % window for a ring cache); ``mask`` (S_max,) marks
+    valid slots (see ``decode_mask``).  k_scale/v_scale (B,S_max,Hkv)
+    enable the int8-quantised cache (repro.quant.kv).
+
+    Returns (out, new_k, new_v[, new_k_scale, new_v_scale])."""
+    from repro.quant import kv as kvq
+    B, S1, _ = x.shape
+    q, k_new, v_new = _project_qkv(p, x, cfg)
+    q = apply_rope_fn(q, angles)
+    k_new = apply_rope_fn(k_new, angles)
+    quantized = k_scale is not None
+    if quantized:
+        kq, ks = kvq.quantize_kv_write(k_new)
+        vq, vs = kvq.quantize_kv_write(v_new)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kq, write_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vq, write_pos, axis=1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, write_pos, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, write_pos, axis=1)
+        k_read, v_read = k_cache, v_cache    # sdpa folds scales; others
+        if backend != "sdpa":                # take a dequantised view
+            k_read = kvq.dequantize_kv(k_cache, k_scale, x.dtype)
+            v_read = kvq.dequantize_kv(v_cache, v_scale, x.dtype)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), write_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), write_pos, axis=1)
+        k_read, v_read = k_cache, v_cache
+
+    if backend == "sdpa":
+        out = _sdpa_decode(q, k_read, v_read, mask, cfg,
+                           k_scale=k_scale if quantized else None,
+                           v_scale=v_scale if quantized else None
+                           ).astype(x.dtype)
+    elif backend == "math":
+        out = _math_decode(q, k_read, v_read, mask, cfg).astype(x.dtype)
+    elif backend == "split_kv":
+        out = _split_kv_decode(q, k_read, v_read, mask, cfg).astype(x.dtype)
+    elif backend == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+        o = da_ops.decode_attention(q[:, 0], k_read, v_read, mask=mask)
+        out = o.reshape(B, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    else:
+        raise ValueError(f"unknown decode backend {backend!r}")
+    from repro.quant.paths import matmul
+    out = matmul(out, p["wo"])
+    if quantized:
+        return out, k_cache, v_cache, k_scale, v_scale
+    return out, k_cache, v_cache

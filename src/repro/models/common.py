@@ -1,0 +1,149 @@
+"""Shared model primitives: norms, RoPE / M-RoPE, MLPs, init helpers.
+
+Pure-functional: params are nested dicts of jnp arrays; every init
+function is deterministic in its PRNG key so ``jax.eval_shape`` gives
+allocation-free abstract param trees for the dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: Optional[jnp.ndarray], eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm; w=None gives the non-parametric variant (OLMo)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    if w is not None:
+        y = y * w.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def init_norm(cfg: ArchConfig, dtype, d: Optional[int] = None):
+    if cfg.norm == "nonparametric":
+        return None
+    return jnp.ones((d or cfg.d_model,), dtype=dtype)
+
+
+def apply_norm(x, w):
+    return rmsnorm(x, w)
+
+
+# --------------------------------------------------------------------------
+# RoPE (rotate-half convention) and Qwen2-VL M-RoPE
+# --------------------------------------------------------------------------
+
+def rope_inv_freq(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rope_angles(positions: jnp.ndarray, inv_freq: jnp.ndarray) -> jnp.ndarray:
+    """positions (..., S) -> angles (..., S, head_dim/2)."""
+    return positions[..., None].astype(jnp.float32) * inv_freq
+
+
+def mrope_angles(positions_thw: jnp.ndarray, inv_freq: jnp.ndarray,
+                 sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: positions (..., S, 3) (t,h,w ids), sections sum to
+    head_dim/2.  Each frequency band takes its angle from its section's
+    position stream.  Text-only tokens carry t==h==w, reducing to RoPE."""
+    angles = positions_thw[..., None, :].astype(jnp.float32) * inv_freq[:, None]  # (...,S,hd/2,3)
+    sel = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])  # (hd/2,)
+    return jnp.take_along_axis(
+        angles, jnp.broadcast_to(sel[..., None], angles.shape[:-1] + (1,)), axis=-1
+    )[..., 0]
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x (B, S, H, hd); angles (B?, S, hd/2) broadcastable over heads."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    cos = jnp.cos(angles)[..., None, :]     # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+def make_angle_fn(cfg: ArchConfig):
+    """Return positions->angles for this arch (plain RoPE or M-RoPE)."""
+    inv_freq = rope_inv_freq(cfg.head_dim, cfg.rope_theta)
+    if cfg.mrope_sections is not None:
+        sections = cfg.mrope_sections
+
+        def angle_fn(positions):
+            if positions.shape[-1] != 3:   # text-only stream: expand t==h==w
+                positions = jnp.broadcast_to(positions[..., None],
+                                             positions.shape + (3,))
+            return mrope_angles(positions, inv_freq, sections)
+        return angle_fn
+
+    def angle_fn(positions):
+        return _rope_angles(positions, inv_freq)
+    return angle_fn
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU or plain GELU)
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[1], d_model, d_ff, dtype),
+         "down": dense_init(ks[2], d_ff, d_model, dtype)}
+    if gated:
+        p["gate"] = dense_init(ks[0], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_forward(p: Params, x: jnp.ndarray, gated: bool) -> jnp.ndarray:
+    from repro.launch import hints
+    from repro.quant.paths import matmul
+    if gated:
+        h = jax.nn.silu(matmul(x, p["gate"])) * matmul(x, p["up"])
+    else:
+        h = jax.nn.gelu(matmul(x, p["up"]))
+    h = hints.constrain(h, ("dp",) + (None,) * (h.ndim - 2) + ("tp",))
+    return matmul(h, p["down"])
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 0.0) -> jnp.ndarray:
+    """Mean next-token CE; logits (..., V) upcast to f32; labels (...)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse ** 2)
+    return loss

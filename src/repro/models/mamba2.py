@@ -1,0 +1,206 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) blocks.
+
+Train/prefill use the chunked SSD algorithm (intra-chunk quadratic +
+inter-chunk linear recurrence via scan); decode is the O(1) recurrent
+update.  All SSD math in float32, params/activations in model dtype.
+
+Layout: d_inner = expand*d_model channels split into H = d_inner/P heads
+of dim P; B/C projections have G groups of state dim N (G=1 here),
+broadcast over H/G heads per group via a (g, hg) factorization (no
+materialized repeat).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init, rmsnorm
+from repro.quant.paths import matmul
+
+Params = Dict[str, jnp.ndarray]
+
+DEFAULT_CHUNK = 128
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    D, DI, H, N, G = (cfg.d_model, cfg.d_inner, cfg.n_ssm_heads,
+                      cfg.ssm_state, cfg.ssm_groups)
+    conv_ch = cfg.conv_channels
+    d_in_proj = 2 * DI + 2 * G * N + H
+    # dt init: softplus(dt_bias) ~ U[1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[3], (H,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(ks[0], D, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32)
+                   / jnp.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[2], (H,), jnp.float32, 1.0, 16.0)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias,
+        "gate_norm": jnp.ones((DI,), dtype),
+        "out_proj": dense_init(ks[4], DI, D, dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jnp.ndarray):
+    DI, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :DI]
+    xBC = zxbcdt[..., DI:2 * DI + 2 * G * N]
+    dt = zxbcdt[..., 2 * DI + 2 * G * N:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _split_xbc(cfg: ArchConfig, xBC: jnp.ndarray):
+    DI, G, N = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    x = xBC[..., :DI]
+    Bm = xBC[..., DI:DI + G * N]
+    Cm = xBC[..., DI + G * N:]
+    lead = xBC.shape[:-1]
+    return (x.reshape(*lead, cfg.n_ssm_heads, cfg.ssm_head_dim),
+            Bm.reshape(*lead, G, N), Cm.reshape(*lead, G, N))
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """(..., q) -> (..., q, q): sum_{r=s+1..t} x_r below/on diagonal, -inf above."""
+    q = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    d = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def _causal_conv_full(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, width K: xBC (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, h0, chunk: int = DEFAULT_CHUNK):
+    """Chunked SSD scan.
+
+    x (b,l,h,p) f32; dt (b,l,h) f32 (post-softplus); A (h,) f32 (negative);
+    Bm/Cm (b,l,g,n) f32; h0 (b,h,p,n) f32 initial state.
+    Returns (y (b,l,h,p), h_final (b,h,p,n)).
+    """
+    b, l, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hg = H // G
+    q = min(chunk, l)
+    assert l % q == 0, f"seq {l} not divisible by chunk {q}"
+    c = l // q
+
+    xc = (x * dt[..., None]).reshape(b, c, q, G, hg, P)
+    Bc = Bm.reshape(b, c, q, G, N)
+    Cc = Cm.reshape(b, c, q, G, N)
+    dA = (dt * A).reshape(b, c, q, G, hg).transpose(0, 3, 4, 1, 2)  # (b,g,hg,c,q)
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    # 1. intra-chunk
+    L = jnp.exp(_segsum(dA))                                        # (b,g,hg,c,q,q)
+    Y_diag = jnp.einsum("bcqgn,bcsgn,bghcqs,bcsghp->bcqghp", Cc, Bc, L, xc)
+
+    # 2. per-chunk input states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)                 # (b,g,hg,c,q)
+    states = jnp.einsum("bcqgn,bghcq,bcqghp->bcghpn", Bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence (the only sequential part)
+    chunk_decay = jnp.exp(dA_cs[..., -1])                           # (b,g,hg,c)
+    h0g = h0.reshape(b, G, hg, P, N)
+
+    def step(h, inp):
+        s_c, d_c = inp                    # (b,g,hg,p,n), (b,g,hg)
+        h_out = h * d_c[..., None, None] + s_c
+        return h_out, h                   # emit state ENTERING the chunk
+
+    h_fin, h_in = jax.lax.scan(
+        step, h0g,
+        (states.transpose(1, 0, 2, 3, 4, 5), chunk_decay.transpose(3, 0, 1, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4, 5)                         # (b,c,g,hg,p,n)
+
+    # 4. state -> output
+    state_decay_out = jnp.exp(dA_cs)                                # (b,g,hg,c,q)
+    Y_off = jnp.einsum("bcqgn,bcghpn,bghcq->bcqghp", Cc, h_in, state_decay_out)
+
+    y = (Y_diag + Y_off).reshape(b, l, H, P)
+    return y, h_fin.reshape(b, H, P, N)
+
+
+def mamba_forward(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                  h0=None, conv0=None, chunk: int = DEFAULT_CHUNK
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward (train/prefill).
+
+    x (B,S,D).  Returns (y (B,S,D), h_final, conv_state) so prefill can
+    seed decode.
+    """
+    from repro.launch import hints
+    B, S, _ = x.shape
+    H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = hints.constrain(matmul(x, p["in_proj"]), ("dp", None, "tp"))
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv_full(xBC, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = _split_xbc(cfg, xBC)
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    h0 = h0 if h0 is not None else jnp.zeros((B, H, P, N), jnp.float32)
+    y, h_fin = ssd_chunked(xs.astype(jnp.float32), dtf, A,
+                           Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                           h0, chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])
+    out = matmul(y, p["out_proj"])
+    # conv state for decode continuation: last (K-1) pre-conv inputs
+    K = cfg.ssm_conv
+    zxbc_tail = matmul(x[:, -(K - 1):, :], p["in_proj"]) if S >= K - 1 else None
+    if zxbc_tail is not None:
+        _, conv_tail, _ = _split_proj(cfg, zxbc_tail)
+    else:
+        conv_tail = jnp.zeros((B, K - 1, cfg.conv_channels), x.dtype)
+    return out, h_fin, conv_tail.astype(x.dtype)
+
+
+def mamba_decode_step(p: Params, x: jnp.ndarray, h: jnp.ndarray,
+                      conv_state: jnp.ndarray, cfg: ArchConfig
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent step.
+
+    x (B,1,D); h (B,H,P,N) f32; conv_state (B,K-1,conv_ch).
+    Returns (y (B,1,D), h', conv_state')."""
+    B = x.shape[0]
+    zxbcdt = matmul(x[:, 0, :], p["in_proj"])
+    z, xBC_new, dt = _split_proj(cfg, zxbcdt)
+
+    window = jnp.concatenate([conv_state, xBC_new[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xBC_act = jax.nn.silu(conv_out)
+    xs, Bm, Cm = _split_xbc(cfg, xBC_act)            # (B,H,P), (B,G,N), (B,G,N)
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    G = cfg.ssm_groups
+    hg = cfg.n_ssm_heads // G
+    decay = jnp.exp(dtf * A)                                        # (B,H)
+    xg = (xs * dtf[..., None]).reshape(B, G, hg, cfg.ssm_head_dim)
+    hG = h.reshape(B, G, hg, cfg.ssm_head_dim, cfg.ssm_state)
+    dBx = jnp.einsum("bghp,bgn->bghpn", xg.astype(jnp.float32), Bm.astype(jnp.float32))
+    h_new = hG * decay.reshape(B, G, hg)[..., None, None] + dBx
+    y = jnp.einsum("bghpn,bgn->bghp", h_new, Cm.astype(jnp.float32))
+    y = y.reshape(B, cfg.n_ssm_heads, cfg.ssm_head_dim)
+    y = y + xs.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])
+    out = matmul(y, p["out_proj"])[:, None, :]
+    conv_state = window[:, 1:, :].astype(conv_state.dtype)
+    return out, h_new.reshape(*h.shape), conv_state

@@ -1,0 +1,556 @@
+"""Model assembly for all six families (dense / moe / ssm / hybrid /
+vlm / audio).
+
+Pure-functional API (params are pytrees; ``jax.eval_shape`` over ``init``
+gives the allocation-free abstract trees the dry-run lowers with):
+
+    m = Model(cfg)
+    params = m.init(key)
+    logits, aux = m.forward(params, batch)          # train / full-seq
+    loss, metrics = m.loss(params, batch)
+    cache = m.init_cache(batch_size, max_len)
+    logits, cache = m.prefill(params, batch, cache)
+    logits, cache = m.decode_step(params, cache, tokens)
+    program = m.step_program(params, cache_len, batch)  # dispatch A/B
+
+Layer stacks are scanned (stacked params, MaxText-style) so compile time
+is depth-independent; ``unroll=True`` switches to a Python loop for
+dry-run cost-analysis fidelity (XLA counts while bodies once).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.dispatch import StepProgram
+from repro.models import attention as attn
+from repro.models import mamba2, moe
+from repro.models.common import (apply_norm, apply_rope, cross_entropy,
+                                 embed_init, init_mlp, init_norm,
+                                 make_angle_fn, mlp_forward)
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, *, decode_backend: str = "sdpa",
+                 ssd_chunk: int = mamba2.DEFAULT_CHUNK, remat: str = "none"):
+        self.cfg = cfg
+        self.decode_backend = decode_backend
+        self.ssd_chunk = ssd_chunk
+        self.remat = remat   # none | blocks (checkpoint each scan body)
+        self.angle_fn = make_angle_fn(cfg) if cfg.n_heads else None
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def _maybe_remat(self, body):
+        """Block-level rematerialisation: the scan body saves only its
+        carry; internals (scores, MLP intermediates) recompute in bwd.
+        Wrapping the whole loss in jax.checkpoint does NOT reduce scan
+        residuals — the recompute rebuilds them — so remat must live at
+        the body (measured in EXPERIMENTS.md §Dry-run)."""
+        if self.remat == "none":
+            return body
+        return jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def _init_block(self, key) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 4)
+        if cfg.family in ("ssm", "hybrid"):
+            return {"norm1": init_norm(cfg, dt),
+                    "mamba": mamba2.init_mamba(ks[0], cfg, dt)}
+        p: Params = {
+            "norm1": init_norm(cfg, dt),
+            "attn": attn.init_attention(ks[0], cfg, dt),
+            "norm2": init_norm(cfg, dt),
+        }
+        if cfg.family == "moe":
+            p["moe"] = moe.init_moe(ks[1], cfg, dt)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_gated, dt)
+        return p
+
+    def _init_shared_attn(self, key) -> Params:
+        """Zamba2-style shared attention+MLP block (one set of weights)."""
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 2)
+        return {
+            "norm1": init_norm(cfg, dt),
+            "attn": attn.init_attention(ks[0], cfg, dt),
+            "norm2": init_norm(cfg, dt),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_gated, dt),
+        }
+
+    def init(self, key) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 5)
+        n_tables = max(1, cfg.n_codebooks)
+        if n_tables == 1:
+            embed = embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt)
+        else:
+            embed = jax.vmap(
+                lambda k: embed_init(k, cfg.vocab_size, cfg.d_model, dt)
+            )(jax.random.split(ks[0], n_tables))
+        params: Params = {
+            "embed": embed,
+            "blocks": _stack_init(self._init_block, ks[1], cfg.n_layers),
+            "final_norm": init_norm(cfg, dt),
+        }
+        if cfg.family == "hybrid":
+            params["shared_attn"] = self._init_shared_attn(ks[2])
+        if not cfg.tie_embeddings:
+            if n_tables == 1:
+                params["lm_head"] = embed_init(ks[3], cfg.vocab_size, cfg.d_model, dt)
+            else:
+                params["lm_head"] = jax.vmap(
+                    lambda k: embed_init(k, cfg.vocab_size, cfg.d_model, dt)
+                )(jax.random.split(ks[3], n_tables))
+        return params
+
+    def abstract_params(self, seed: int = 0):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(seed)))
+
+    # ------------------------------------------------------------------
+    # embedding / head
+    # ------------------------------------------------------------------
+    def embed_tokens(self, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.n_codebooks:
+            # tokens (B, S, K): sum of per-codebook embeddings (MusicGen)
+            parts = [jnp.take(params["embed"][k], tokens[..., k], axis=0)
+                     for k in range(cfg.n_codebooks)]
+            return functools.reduce(jnp.add, parts)
+        return jnp.take(params["embed"], tokens, axis=0)
+
+    def lm_logits(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        if cfg.n_codebooks:
+            return jnp.einsum("bsd,kvd->bskv", x, head)
+        return x @ head.T
+
+    # ------------------------------------------------------------------
+    # blocks: full-sequence
+    # ------------------------------------------------------------------
+    def _attn_block_full(self, bp: Params, x, angles):
+        cfg = self.cfg
+        a_out, (k, v) = attn.attention_full(bp["attn"], apply_norm(x, bp["norm1"]),
+                                            angles, cfg, apply_rope)
+        x = x + a_out
+        h = apply_norm(x, bp["norm2"])
+        if cfg.family == "moe":
+            m_out, aux = moe.moe_forward(bp["moe"], h, cfg)
+        else:
+            m_out, aux = mlp_forward(bp["mlp"], h, cfg.mlp_gated), 0.0
+        return x + m_out, aux, (k, v)
+
+    def _mamba_block_full(self, bp: Params, x):
+        y, h_fin, conv = mamba2.mamba_forward(
+            bp["mamba"], apply_norm(x, bp.get("norm1")), self.cfg,
+            chunk=self.ssd_chunk)
+        return x + y, h_fin, conv
+
+    # ------------------------------------------------------------------
+    # forward (train / prefill backbone)
+    # ------------------------------------------------------------------
+    def _positions(self, batch: Dict, B: int, S: int):
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        return pos
+
+    def backbone(self, params: Params, batch: Dict, *, collect_cache: bool = False,
+                 unroll: bool = False):
+        """Full-sequence backbone.  Returns (hidden, aux, layer_caches)."""
+        cfg = self.cfg
+        unroll = unroll or getattr(self, "unroll_layers", False)
+        x = batch.get("embeds")
+        tokens = batch.get("tokens")
+        if x is None:
+            x = self.embed_tokens(params, tokens)
+        elif tokens is not None and cfg.family == "vlm":
+            # merged stream: embeds already contain patch + text embeddings
+            pass
+        B, S = x.shape[0], x.shape[1]
+        angles = self.angle_fn(self._positions(batch, B, S)) if self.angle_fn else None
+
+        if cfg.family in ("dense", "vlm", "audio", "moe"):
+            def body(carry, bp):
+                h, aux = carry
+                h, aux_l, (k, v) = self._attn_block_full(bp, h, angles)
+                ys = (k, v) if collect_cache else None
+                return (h, aux + aux_l), ys
+
+            aux0 = jnp.float32(0.0)
+            body = self._maybe_remat(body)
+            if unroll:
+                aux, kvs = aux0, []
+                for i in range(cfg.n_layers):
+                    bp = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+                    (x, aux), ys = body((x, aux), bp)
+                    if collect_cache:
+                        kvs.append(ys)
+                layer_caches = (jnp.stack([kv[0] for kv in kvs]),
+                                jnp.stack([kv[1] for kv in kvs])) if collect_cache else None
+            else:
+                (x, aux), kv = jax.lax.scan(body, (x, aux0), params["blocks"])
+                layer_caches = kv if collect_cache else None
+            return x, aux, layer_caches
+
+        if cfg.family == "ssm":
+            def body(carry, bp):
+                h = carry
+                h, h_fin, conv = self._mamba_block_full(bp, h)
+                ys = (h_fin, conv) if collect_cache else None
+                return h, ys
+
+            body = self._maybe_remat(body)
+            if unroll:
+                states = []
+                for i in range(cfg.n_layers):
+                    bp = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+                    x, ys = body(x, bp)
+                    if collect_cache:
+                        states.append(ys)
+                stacked = ((jnp.stack([s[0] for s in states]),
+                            jnp.stack([s[1] for s in states]))
+                           if collect_cache else None)
+                return x, jnp.float32(0.0), stacked
+            x, states = jax.lax.scan(body, x, params["blocks"])
+            return x, jnp.float32(0.0), (states if collect_cache else None)
+
+        if cfg.family == "hybrid":
+            return self._hybrid_backbone(params, x, angles, collect_cache)
+        raise ValueError(cfg.family)
+
+    def _hybrid_groups(self):
+        cfg = self.cfg
+        ae = cfg.attn_every
+        starts = list(range(0, cfg.n_layers, ae))
+        return [(s, min(s + ae, cfg.n_layers)) for s in starts]
+
+    def _hybrid_backbone(self, params, x, angles, collect_cache):
+        cfg = self.cfg
+        groups = self._hybrid_groups()
+        ssm_states, attn_caches = [], []
+        for (g0, g1) in groups:
+            # shared attention block at the start of each group
+            sp = params["shared_attn"]
+            a_out, (k, v) = attn.attention_full(
+                sp["attn"], apply_norm(x, sp["norm1"]), angles, cfg, apply_rope)
+            x = x + a_out
+            x = x + mlp_forward(sp["mlp"], apply_norm(x, sp["norm2"]), cfg.mlp_gated)
+            if collect_cache:
+                attn_caches.append((k, v))
+            gp = jax.tree_util.tree_map(lambda a: a[g0:g1], params["blocks"])
+
+            def body(h, bp):
+                h, h_fin, conv = self._mamba_block_full(bp, h)
+                return h, (h_fin, conv)
+            x, states = jax.lax.scan(self._maybe_remat(body), x, gp)
+            if collect_cache:
+                ssm_states.append(states)
+        if collect_cache:
+            h_fin = jnp.concatenate([s[0] for s in ssm_states], axis=0)
+            conv = jnp.concatenate([s[1] for s in ssm_states], axis=0)
+            ks = jnp.stack([c[0] for c in attn_caches], axis=0)
+            vs = jnp.stack([c[1] for c in attn_caches], axis=0)
+            return x, 0.0, ((h_fin, conv), (ks, vs))
+        return x, 0.0, None
+
+    def forward(self, params: Params, batch: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        x, aux, _ = self.backbone(params, batch)
+        x = apply_norm(x, params["final_norm"])
+        return self.lm_logits(params, x), aux
+
+    def loss(self, params: Params, batch: Dict, *, aux_weight: float = 0.01,
+             z_loss: float = 0.0) -> Tuple[jnp.ndarray, Dict]:
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        ce = cross_entropy(logits, labels, z_loss)
+        total = ce + aux_weight * aux
+        return total, {"loss": total, "ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int,
+                   kv_dtype=None) -> Cache:
+        cfg = self.cfg
+        kv_dtype = kv_dtype or self.dtype
+        pos = jnp.zeros((), jnp.int32)
+        if cfg.family in ("dense", "vlm", "audio", "moe"):
+            kv_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+            shape = (cfg.n_layers, batch_size, kv_len, cfg.n_kv_heads, cfg.head_dim)
+            cache = {"k": jnp.zeros(shape, kv_dtype), "v": jnp.zeros(shape, kv_dtype),
+                     "pos": pos}
+            if kv_dtype == jnp.int8:
+                # per-(token, head) scales: the int8 KV-quant path
+                cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+                cache["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            return cache
+        if cfg.family == "ssm":
+            return {
+                "h": jnp.zeros((cfg.n_layers, batch_size, cfg.n_ssm_heads,
+                                cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((cfg.n_layers, batch_size, cfg.ssm_conv - 1,
+                                   cfg.conv_channels), self.dtype),
+                "pos": pos,
+            }
+        if cfg.family == "hybrid":
+            n_apps = len(self._hybrid_groups())
+            kv_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+            return {
+                "h": jnp.zeros((cfg.n_layers, batch_size, cfg.n_ssm_heads,
+                                cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((cfg.n_layers, batch_size, cfg.ssm_conv - 1,
+                                   cfg.conv_channels), self.dtype),
+                "k": jnp.zeros((n_apps, batch_size, kv_len, cfg.n_kv_heads,
+                                cfg.head_dim), kv_dtype),
+                "v": jnp.zeros((n_apps, batch_size, kv_len, cfg.n_kv_heads,
+                                cfg.head_dim), kv_dtype),
+                "pos": pos,
+            }
+        raise ValueError(cfg.family)
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+    def prefill(self, params: Params, batch: Dict, cache: Cache
+                ) -> Tuple[jnp.ndarray, Cache]:
+        """Populate the cache from a full prompt; returns last-pos logits."""
+        cfg = self.cfg
+        x, _, caches = self.backbone(params, batch, collect_cache=True)
+        S = x.shape[1]
+
+        def place(slab, dst, pre=None):
+            """Write last min(S, kv_len) keys into the (possibly ring)
+            cache so that token at absolute pos p lands at slot p % kv_len
+            (no-op roll for full caches).  ``pre`` transforms the kept
+            slab first (int8 KV quantisation)."""
+            kv_len = dst.shape[2]
+            s_eff = min(S, kv_len)
+            kept = slab[:, :, S - s_eff:]
+            kept = pre(kept) if pre is not None else kept.astype(dst.dtype)
+            if s_eff == kv_len and S % kv_len:
+                kept = jnp.roll(kept, S % kv_len, axis=2)
+            return jax.lax.dynamic_update_slice_in_dim(dst, kept, 0, axis=2)
+
+        quantized_kv = "k_scale" in cache
+
+        if cfg.family in ("dense", "vlm", "audio", "moe"):
+            k, v = caches    # (L, B, S, Hkv, hd) stacked by scan
+            if quantized_kv:
+                from repro.quant import kv as kvq
+                kq, ks = kvq.quantize_kv_write(k)
+                vq, vs = kvq.quantize_kv_write(v)
+                cache = dict(cache,
+                             k=place(kq, cache["k"], pre=lambda t: t),
+                             v=place(vq, cache["v"], pre=lambda t: t),
+                             k_scale=place(ks[..., None], cache["k_scale"][..., None],
+                                           pre=lambda t: t.astype(jnp.float32))[..., 0],
+                             v_scale=place(vs[..., None], cache["v_scale"][..., None],
+                                           pre=lambda t: t.astype(jnp.float32))[..., 0])
+            else:
+                cache = dict(cache, k=place(k, cache["k"]), v=place(v, cache["v"]))
+        elif cfg.family == "ssm":
+            h, conv = caches
+            cache = dict(cache, h=h, conv=conv.astype(cache["conv"].dtype))
+        else:  # hybrid
+            (h, conv), (ks, vs) = caches
+            cache = dict(cache, h=h, conv=conv.astype(cache["conv"].dtype),
+                         k=place(ks, cache["k"]), v=place(vs, cache["v"]))
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        x_last = apply_norm(x[:, -1:], params["final_norm"])
+        return self.lm_logits(params, x_last), cache
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _attn_block_decode(self, bp, x, k_cache, v_cache, write_pos, mask,
+                           angles, backend=None, k_scale=None, v_scale=None):
+        cfg = self.cfg
+        res = attn.attention_decode(
+            bp["attn"], apply_norm(x, bp["norm1"]), k_cache, v_cache,
+            write_pos, mask, angles, cfg, apply_rope,
+            backend=backend or self.decode_backend,
+            k_scale=k_scale, v_scale=v_scale)
+        if k_scale is not None:
+            a_out, k_cache, v_cache, k_scale, v_scale = res
+        else:
+            a_out, k_cache, v_cache = res
+        x = x + a_out
+        h = apply_norm(x, bp["norm2"])
+        if cfg.family == "moe":
+            m_out, _ = moe.moe_forward(bp["moe"], h, cfg)
+        else:
+            m_out = mlp_forward(bp["mlp"], h, cfg.mlp_gated)
+        if k_scale is not None:
+            return x + m_out, k_cache, v_cache, k_scale, v_scale
+        return x + m_out, k_cache, v_cache
+
+    def _mamba_block_decode(self, bp, x, h, conv):
+        y, h, conv = mamba2.mamba_decode_step(
+            bp["mamba"], apply_norm(x, bp.get("norm1")), h, conv, self.cfg)
+        return x + y, h, conv
+
+    def decode_step(self, params: Params, cache: Cache, tokens: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, Cache]:
+        """One new token per sequence.  tokens (B,1) or (B,1,K)."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        B = x.shape[0]
+        pos = cache["pos"]
+        if self.angle_fn:
+            kv_len = cache["k"].shape[2]
+            ring = bool(cfg.sliding_window) and kv_len <= cfg.sliding_window
+            write_pos = pos % kv_len if ring else pos
+            mask = attn.decode_mask(pos, kv_len, ring=ring)
+            positions = jnp.broadcast_to(pos[None, None], (B, 1))
+            angles = self.angle_fn(positions)
+        else:
+            angles, mask, write_pos = None, None, pos
+
+        new_cache = dict(cache)
+        quantized_kv = "k_scale" in cache
+        if cfg.family in ("dense", "vlm", "audio", "moe"):
+            if quantized_kv:
+                def body(h, inp):
+                    bp, kc, vc, ks, vs = inp
+                    h, kc, vc, ks, vs = self._attn_block_decode(
+                        bp, h, kc, vc, write_pos, mask, angles,
+                        k_scale=ks, v_scale=vs)
+                    return h, (kc, vc, ks, vs)
+                x, (k, v, ks, vs) = jax.lax.scan(
+                    body, x, (params["blocks"], cache["k"], cache["v"],
+                              cache["k_scale"], cache["v_scale"]))
+                new_cache.update(k=k, v=v, k_scale=ks, v_scale=vs)
+            else:
+                def body(h, inp):
+                    bp, kc, vc = inp
+                    h, kc, vc = self._attn_block_decode(bp, h, kc, vc, write_pos,
+                                                        mask, angles)
+                    return h, (kc, vc)
+                x, (k, v) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+                new_cache.update(k=k, v=v)
+        elif cfg.family == "ssm":
+            def body(h, inp):
+                bp, hs, conv = inp
+                h, hs, conv = self._mamba_block_decode(bp, h, hs, conv)
+                return h, (hs, conv)
+            x, (hs, conv) = jax.lax.scan(body, x, (params["blocks"], cache["h"], cache["conv"]))
+            new_cache.update(h=hs, conv=conv)
+        else:  # hybrid
+            groups = self._hybrid_groups()
+            hs_out, conv_out, k_out, v_out = [], [], [], []
+            sp = params["shared_attn"]
+            for a, (g0, g1) in enumerate(groups):
+                x2, kc, vc = self._attn_block_decode(
+                    sp, x, cache["k"][a], cache["v"][a], write_pos, mask, angles)
+                x = x2
+                k_out.append(kc)
+                v_out.append(vc)
+                gp = jax.tree_util.tree_map(lambda arr: arr[g0:g1], params["blocks"])
+
+                def body(h, inp):
+                    bp, hs, conv = inp
+                    h, hs, conv = self._mamba_block_decode(bp, h, hs, conv)
+                    return h, (hs, conv)
+                x, (hs, conv) = jax.lax.scan(
+                    body, x, (gp, cache["h"][g0:g1], cache["conv"][g0:g1]))
+                hs_out.append(hs)
+                conv_out.append(conv)
+            new_cache.update(h=jnp.concatenate(hs_out, axis=0),
+                             conv=jnp.concatenate(conv_out, axis=0),
+                             k=jnp.stack(k_out, axis=0), v=jnp.stack(v_out, axis=0))
+        new_cache["pos"] = pos + 1
+        x = apply_norm(x, params["final_norm"])
+        return self.lm_logits(params, x), new_cache
+
+    # ------------------------------------------------------------------
+    # dispatch A/B decomposition (paper §5)
+    # ------------------------------------------------------------------
+    def step_program(self, params: Params, cache: Cache) -> StepProgram:
+        """Decompose decode_step into [embed] + [block_i]* + [head] stages
+        over a state dict, for the eager / stage_jit / full_jit A/B.
+        Attention-family archs only (the A/B targets the paper's models)."""
+        cfg = self.cfg
+        assert cfg.family in ("dense", "vlm", "audio", "moe")
+
+        def embed_stage(state):
+            tokens = state["tokens"]
+            x = self.embed_tokens(params, tokens)
+            B = x.shape[0]
+            pos = state["cache"]["pos"]
+            positions = jnp.broadcast_to(pos[None, None], (B, 1))
+            return dict(state, x=x, angles=self.angle_fn(positions))
+
+        def make_block_stage(i):
+            bp = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+
+            def stage(state):
+                c = state["cache"]
+                mask = attn.decode_mask(c["pos"], c["k"].shape[2])
+                x, kc, vc = self._attn_block_decode(
+                    bp, state["x"], c["k"][i], c["v"][i], c["pos"], mask,
+                    state["angles"])
+                c = dict(c, k=c["k"].at[i].set(kc), v=c["v"].at[i].set(vc))
+                return dict(state, x=x, cache=c)
+            return stage
+
+        def head_stage(state):
+            x = apply_norm(state["x"], params["final_norm"])
+            c = dict(state["cache"])
+            c["pos"] = c["pos"] + 1
+            return dict(state, logits=self.lm_logits(params, x), cache=c)
+
+        stages = [embed_stage] + [make_block_stage(i) for i in range(cfg.n_layers)] \
+            + [head_stage]
+        return StepProgram(stages)
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation) — dry-run inputs
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, *, seq_len: int, batch: int, kind: str
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for train/prefill/decode steps.
+
+    vlm: precomputed patch embeddings replace token embedding lookups for
+    the full-seq shapes (frontend stub per the assignment); decode feeds
+    tokens.  audio: per-codebook token ids.
+    """
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            specs = {
+                "embeds": jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model), bf16),
+                "positions": jax.ShapeDtypeStruct((batch, seq_len, 3), i32),
+            }
+        elif cfg.family == "audio":
+            specs = {"tokens": jax.ShapeDtypeStruct(
+                (batch, seq_len, cfg.n_codebooks), i32)}
+        else:
+            specs = {"tokens": jax.ShapeDtypeStruct((batch, seq_len), i32)}
+        if kind == "train":
+            lab_shape = ((batch, seq_len, cfg.n_codebooks) if cfg.family == "audio"
+                         else (batch, seq_len))
+            specs["labels"] = jax.ShapeDtypeStruct(lab_shape, i32)
+        return specs
+    # decode: one new token, KV cache of seq_len handled separately
+    if cfg.family == "audio":
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1, cfg.n_codebooks), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((batch, 1), i32)}

@@ -1,0 +1,63 @@
+"""Quantisation paths (paper §7): bf16 / int8 / int4, dequant vs fused."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.paths import matmul, weight_bytes_streamed  # noqa: F401
+from repro.quant.quantize import (DEFAULT_GROUP, QuantizedTensor,  # noqa: F401
+                                  dequantize, quantize, quantize_int4,
+                                  quantize_int8, unpack_int4)
+
+# weight leaf names eligible for quantisation (embeddings, norms, biases,
+# routers, convs and SSM scalars stay bf16 — standard practice)
+QUANTIZABLE = {"wq", "wk", "wv", "wo", "gate", "up", "down",
+               "w_gate", "w_up", "w_down", "in_proj", "out_proj"}
+
+WEIGHT_PATHS = ("bf16", "int8_dequant", "int8_fused", "int4_dequant", "int4_fused")
+
+
+def parse_path(path: str):
+    """'int4_fused' -> (4, 'fused'); 'bf16' -> None."""
+    if path == "bf16":
+        return None
+    bits_s, mode = path.split("_")
+    return int(bits_s[3:]), mode
+
+
+def quantize_tree(params: Dict, path: str, group: int = DEFAULT_GROUP) -> Dict:
+    """Replace eligible linear weights with QuantizedTensor leaves."""
+    spec = parse_path(path)
+    if spec is None:
+        return params
+    bits, mode = spec
+
+    def visit(kp, leaf):
+        if not isinstance(leaf, jnp.ndarray) or leaf.ndim < 2:
+            return leaf
+        name = kp[-1].key if hasattr(kp[-1], "key") else str(kp[-1])
+        if name not in QUANTIZABLE:
+            return leaf
+        k = leaf.shape[-2]
+        g = min(group, k)
+        if (bits == 4 and k % 2) or k % g:
+            return leaf
+        return quantize(leaf, bits, g, mode)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def tree_weight_traffic(params: Any) -> float:
+    """Total per-step analytic weight HBM traffic (bytes) for a params
+    tree under its current quant layout (floor-model numerator)."""
+    total = 0.0
+
+    def visit(leaf):
+        nonlocal total
+        total += weight_bytes_streamed(leaf)
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+        visit(leaf)
+    return total

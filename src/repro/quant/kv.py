@@ -1,0 +1,34 @@
+"""Int8 KV-cache quantisation (per-token, per-head scales).
+
+The decode memory term is weights + KV (paper §3.4); once weights are
+int4-fused the KV sweep dominates at long context.  Scheme: each written
+K/V vector (head_dim values) stores int8 codes + one f32 scale —
+1/(2*hd) relative overhead — and dequantises into the QK/PV matmuls on
+read (fused into the GEMM operand read on TPU, like the weight path).
+
+This is the KV side of the paper's §7 lesson and the KVQuant/KIVI
+related-work row, adapted to TPU.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def quantize_kv_write(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (..., hd) bf16 -> (codes int8 (..., hd), scales f32 (...))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(codes: jnp.ndarray, scales: jnp.ndarray,
+                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    """codes (..., hd) int8, scales (...) f32 -> (..., hd) dtype."""
+    return (codes.astype(jnp.float32) * scales[..., None]).astype(dtype)
+
+
+def is_quantized_cache(cache) -> bool:
+    return "k_scale" in cache

@@ -1,0 +1,57 @@
+"""The single matmul entry point all models route linear layers through.
+
+Plain arrays take the bf16 fast path; ``QuantizedTensor`` weights
+dispatch on their ``path``:
+
+  dequant — materialise bf16 then matmul (traffic >= W_bf16: the trap)
+  fused   — fused dequant-matmul (Pallas kernel for 2D int4 on the K//2
+            packed layout; jnp fallback keeps semantics identical
+            elsewhere).  Traffic ~= W_q + scales: the saving lands.
+
+``matmul_traffic_bytes`` gives the analytic per-call HBM traffic used by
+the floor model and the Table-7 benchmark.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.quantize import QuantizedTensor, dequantize, unpack_int4
+
+
+def matmul(x: jnp.ndarray, w) -> jnp.ndarray:
+    """x (..., K) @ w (K, N) with quant-path dispatch."""
+    if isinstance(w, QuantizedTensor):
+        if w.path == "dequant":
+            return x @ dequantize(w, x.dtype)
+        # fused path.  The Pallas kernel runs on real TPU only (it is not
+        # GSPMD-partitionable: under a multi-device jit it would force
+        # full-weight all-gathers — measured in EXPERIMENTS.md §Perf B).
+        # Elsewhere the same semantics are expressed as an XLA-fusable
+        # dequant-into-GEMM read (kernel==ref equivalence is tested).
+        import jax
+        if w.bits == 4 and w.ndim == 2 and jax.default_backend() == "tpu":
+            from repro.kernels.int4_matmul import ops as int4_ops
+            lead = x.shape[:-1]
+            x2 = x.reshape(-1, x.shape[-1])
+            y = int4_ops.int4_matmul(x2, w.data, w.scales, group=w.group)
+            return y.reshape(*lead, w.n).astype(x.dtype)
+        return x @ dequantize(w, jnp.bfloat16)
+    return x @ w
+
+
+def expert_einsum(spec: str, x: jnp.ndarray, w) -> jnp.ndarray:
+    """Batched expert matmul 'ecd,edf->ecf' / 'ecf,efd->ecd' with
+    quant-path dispatch on stacked (E, K, N) weights.  Both quant paths
+    dequantise per expert; the distinction (materialise-to-HBM vs
+    fuse-into-GEMM-read) is a traffic-accounting property on TPU — XLA
+    fuses the bf16 cast into the GEMM operand read for the fused path."""
+    if isinstance(w, QuantizedTensor):
+        return jnp.einsum(spec, x, dequantize(w, x.dtype))
+    return jnp.einsum(spec, x, w)
+
+
+def weight_bytes_streamed(w) -> float:
+    """Per-use analytic HBM weight traffic (bytes) for the floor model."""
+    if isinstance(w, QuantizedTensor):
+        return w.nbytes_streamed
+    return w.size * w.dtype.itemsize

@@ -1,0 +1,133 @@
+"""Weight quantisation: int8 and packed-int4 with per-group scales.
+
+The paper's §7 lesson is encoded in the *path* attached to each
+quantised tensor:
+
+  dequant — dequantise the whole weight to bf16, then matmul.  This is
+            the bnb-nf4 trap: HBM traffic = quantised bytes + the full
+            bf16 materialisation, so the 4x saving never lands.
+  fused   — stream packed weights through VMEM and dequantise in-register
+            inside the matmul kernel (Pallas: kernels/int4_matmul).  This
+            is the ExLlamaV2 lesson: traffic ~= W/4 + scales.
+
+Layout is general over leading dims: weights are (..., K, N) — a single
+linear (K, N), a scan-stacked layer weight (L, K, N), or stacked experts
+(L, E, K, N).  int4 packs two adjacent-K nibbles per uint8 along axis -2
+(low nibble = even k).  Metadata (shape/group) is DERIVED from the
+children so lax.scan / vmap slicing of a stacked QuantizedTensor yields a
+valid per-layer QuantizedTensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_GROUP = 128
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """A quantised weight living in a params pytree.
+
+    data:   int8 (..., K, N) for w8, or uint8 (..., K//2, N) for w4
+    scales: f32 (..., K//group, N)
+    """
+    data: jnp.ndarray
+    scales: jnp.ndarray
+    bits: int
+    path: str  # "dequant" | "fused"
+
+    def tree_flatten(self):
+        return (self.data, self.scales), (self.bits, self.path)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+    # ---- derived metadata (valid after scan/vmap slicing) ----
+    @property
+    def k(self) -> int:
+        return self.data.shape[-2] * (2 if self.bits == 4 else 1)
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[-1]
+
+    @property
+    def group(self) -> int:
+        return self.k // self.scales.shape[-2]
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.data.shape[:-2]) + (self.k, self.n)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def dtype(self):  # duck-type for shape/dtype probes
+        return jnp.bfloat16
+
+    @property
+    def nbytes_streamed(self) -> float:
+        """Analytic HBM bytes streamed per use (floor-model numerator)."""
+        d = self.data.size * self.data.dtype.itemsize
+        s = self.scales.size * self.scales.dtype.itemsize
+        if self.path == "dequant":
+            # write + read back the materialised bf16 copy
+            return d + s + 2 * math.prod(self.shape) * 2
+        return d + s
+
+
+def quantize(w: jnp.ndarray, bits: int, group: int = DEFAULT_GROUP,
+             path: str = "fused") -> QuantizedTensor:
+    """w (..., K, N) -> QuantizedTensor, per-group scales along K."""
+    assert bits in (4, 8)
+    K, N = w.shape[-2], w.shape[-1]
+    group = min(group, K)
+    assert K % group == 0
+    qmax = 7 if bits == 4 else 127
+    g = w.astype(jnp.float32).reshape(*w.shape[:-2], K // group, group, N)
+    scales = jnp.max(jnp.abs(g), axis=-2) / qmax + 1e-12     # (..., K//group, N)
+    q = jnp.clip(jnp.round(g / scales[..., None, :]), -qmax - 1, qmax)
+    q = q.astype(jnp.int8).reshape(w.shape)
+    if bits == 8:
+        return QuantizedTensor(q, scales, 8, path)
+    assert K % 2 == 0, "int4 packing needs even K"
+    lo = (q[..., 0::2, :] & 0xF).astype(jnp.uint8)
+    hi = (q[..., 1::2, :] & 0xF).astype(jnp.uint8)
+    return QuantizedTensor((lo | (hi << 4)).astype(jnp.uint8), scales, 4, path)
+
+
+def quantize_int8(w, group: int = DEFAULT_GROUP, path: str = "fused"):
+    return quantize(w, 8, group, path)
+
+
+def quantize_int4(w, group: int = DEFAULT_GROUP, path: str = "fused"):
+    return quantize(w, 4, group, path)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """uint8 (..., K//2, N) -> int8 (..., K, N) in [-8, 7]."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-2)           # (..., K//2, 2, N)
+    return out.reshape(*packed.shape[:-2], 2 * packed.shape[-2], packed.shape[-1])
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Reshape-free: codes * repeat(scales) in the target dtype, which
+    XLA fuses into the consuming GEMM's operand read (keeping the
+    sharding of the packed data; an f32 reshape detour was measured to
+    trigger full-weight all-gathers under GSPMD — EXPERIMENTS.md §Perf B)."""
+    q = unpack_int4(qt.data) if qt.bits == 4 else qt.data
+    s = jnp.repeat(qt.scales.astype(dtype), qt.group, axis=-2)
+    return q.astype(dtype) * s

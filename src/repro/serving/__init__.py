@@ -1,0 +1,2 @@
+from repro.serving.engine import DecodeEngine, GenerationResult  # noqa: F401
+from repro.serving.sampling import sample  # noqa: F401

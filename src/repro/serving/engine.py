@@ -1,0 +1,120 @@
+"""Batch-1 / batched streaming decode engine — the paper's workload.
+
+The engine is built around the paper's own conclusion: the decode step
+must be ONE compiled program (the CUDA-Graphs-equivalent ``full_jit``
+mode), with the KV cache donated so steps run allocation-free.  For the
+dispatch A/B experiments the engine can be opened up to ``stage_jit`` /
+``eager`` execution of the same math (core.dispatch).
+
+Generation offers two drivers:
+  step-streamed — one host dispatch per token (what a Python serving
+                  loop does; pays the launch tax once per token)
+  fused-loop    — ``lax.scan`` over N tokens inside ONE program (the
+                  TPU-idiomatic schedule: zero per-token host work;
+                  this is "CUDA Graphs over the whole generation")
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.dispatch import StepProgram
+from repro.models.model import Model
+from repro.quant import quantize_tree
+from repro.serving.sampling import sample
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jnp.ndarray           # (B, n_new)
+    step_times_s: List[float]     # per-token wall times (step-streamed only)
+    tokens_per_s: float
+
+
+class DecodeEngine:
+    def __init__(self, model: Model, params, *, quant_path: str = "bf16",
+                 kv_dtype=None, donate_cache: bool = True):
+        self.model = model
+        self.cfg: ArchConfig = model.cfg
+        self.params = quantize_tree(params, quant_path) if quant_path != "bf16" else params
+        self.quant_path = quant_path
+        self.kv_dtype = kv_dtype
+        donate = (1,) if donate_cache else ()
+        self._prefill = jax.jit(model.prefill)
+        self._step = jax.jit(model.decode_step, donate_argnums=donate)
+
+    # -------------------------------------------------------------- API
+    def new_cache(self, batch: int, max_len: int):
+        return self.model.init_cache(batch, max_len, kv_dtype=self.kv_dtype)
+
+    def prefill(self, batch: Dict, max_len: int):
+        B = next(iter(batch.values())).shape[0]
+        cache = self.new_cache(B, max_len)
+        logits, cache = self._prefill(self.params, batch, cache)
+        return logits, cache
+
+    def _token_shape(self, ids: jnp.ndarray) -> jnp.ndarray:
+        if self.cfg.n_codebooks and ids.ndim == 2:
+            return ids[:, None, :]          # (B, K) -> (B, 1, K)
+        if ids.ndim == 1:
+            return ids[:, None]
+        return ids
+
+    def generate_streamed(self, batch: Dict, *, max_len: int, n_new: int,
+                          temperature: float = 0.0, top_k: int = 0,
+                          seed: int = 0, timed: bool = False) -> GenerationResult:
+        """One host dispatch per token (the paper's streaming workload)."""
+        logits, cache = self.prefill(batch, max_len)
+        key = jax.random.PRNGKey(seed)
+        out, times = [], []
+        tok = sample(logits[:, -1], key, temperature=temperature, top_k=top_k)
+        out.append(tok)
+        for i in range(n_new - 1):
+            key = jax.random.fold_in(key, i)
+            t0 = time.perf_counter()
+            logits, cache = self._step(self.params, cache, self._token_shape(tok))
+            tok = sample(logits[:, -1], key, temperature=temperature, top_k=top_k)
+            jax.block_until_ready(tok)
+            if timed:
+                times.append(time.perf_counter() - t0)
+            out.append(tok)
+        tokens = jnp.stack(out, axis=1)
+        tps = (len(times) / sum(times)) if times else float("nan")
+        return GenerationResult(tokens, times, tps)
+
+    def generate_fused(self, batch: Dict, *, max_len: int, n_new: int,
+                       seed: int = 0) -> GenerationResult:
+        """N tokens inside one compiled program (lax.scan over decode
+        steps): zero per-token host dispatch — the beyond-CUDA-Graphs
+        schedule available on an AOT-compiled stack."""
+        logits, cache = self.prefill(batch, max_len)
+        tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+        @jax.jit
+        def roll(params, cache, tok0):
+            def body(carry, _):
+                cache, tok = carry
+                logits, cache = self.model.decode_step(params, cache,
+                                                       self._token_shape(tok))
+                tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return (cache, tok), tok
+            (cache, _), toks = jax.lax.scan(body, (cache, tok0), None,
+                                            length=n_new - 1)
+            return toks
+
+        t0 = time.perf_counter()
+        toks = jax.block_until_ready(roll(self.params, cache, tok0))
+        dt = time.perf_counter() - t0
+        tokens = jnp.concatenate([tok0[:, None],
+                                  jnp.moveaxis(toks, 0, 1)], axis=1)
+        return GenerationResult(tokens, [], (n_new - 1) / dt)
+
+    # ------------------------------------------------- dispatch A/B hooks
+    def step_program(self, cache) -> StepProgram:
+        return self.model.step_program(self.params, cache)

@@ -1,0 +1,17 @@
+"""Token sampling: greedy / temperature / top-k, batched, jit-safe."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jnp.ndarray, key, *, temperature: float = 0.0,
+           top_k: int = 0) -> jnp.ndarray:
+    """logits (..., V) -> token ids (...)."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jnp.sort(lf, axis=-1)[..., -top_k][..., None]
+        lf = jnp.where(lf < kth, -jnp.inf, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

@@ -1,0 +1,6 @@
+from repro.training.checkpoint import latest_step, restore, save  # noqa: F401
+from repro.training.data import DataCursor, DataLoader, synthetic_batch  # noqa: F401
+from repro.training.fault_tolerance import Preemption, run_training  # noqa: F401
+from repro.training.optimizer import AdamW, cosine_schedule, global_norm  # noqa: F401
+from repro.training.train_loop import (jit_train_step, make_loss_fn,  # noqa: F401
+                                       make_train_step)

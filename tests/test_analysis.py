@@ -1,0 +1,102 @@
+"""HLO collective parser + analytic model + roofline assembly."""
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import analytic
+from repro.analysis.hlo import (CollectiveOp, _shape_bytes,
+                                collective_summary, parse_collectives)
+from repro.analysis.roofline import RooflineRow, build_row, markdown_table
+from repro.configs import SHAPES, get_config
+
+
+class TestHloParser:
+    def test_shape_bytes(self):
+        assert _shape_bytes("bf16[8,128]") == 8 * 128 * 2
+        assert _shape_bytes("f32[4]") == 16
+        assert _shape_bytes("(bf16[2,2], f32[2])") == 8 + 8
+        assert _shape_bytes("u8[100]") == 100
+
+    def test_parse_simple_allreduce(self):
+        hlo = """
+HloModule m
+ENTRY %main (a: f32[16,16]) -> f32[16,16] {
+  %a = f32[16,16] parameter(0)
+  %ar = f32[16,16] all-reduce(%a), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+        ops = parse_collectives(hlo, n_devices=4)
+        assert len(ops) == 1
+        assert ops[0].kind == "all-reduce"
+        assert ops[0].group_size == 4
+        # ring all-reduce: 2*(n-1)/n * bytes
+        assert ops[0].wire_bytes_per_chip == pytest.approx(
+            2 * 3 / 4 * 16 * 16 * 4)
+
+    def test_while_body_multiplier(self):
+        hlo = """
+HloModule m
+%region_1.10 (arg: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[8] all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+}
+ENTRY %main () -> f32[8] {
+  %w = (s32[], f32[8]) while(%init), condition=%region_2.20, body=%region_1.10
+  %ar2 = f32[8] all-reduce(%y), replica_groups={{0,1}}, to_apply=%add
+}
+"""
+        ops = parse_collectives(hlo, n_devices=2, loop_multiplier=24)
+        mult = {o.computation: o.multiplier for o in ops}
+        assert mult["region_1.10"] == 24
+        assert [o for o in ops if o.multiplier == 1]
+        s = collective_summary(ops)
+        assert s["by_kind"]["all-reduce"]["count"] == 25
+
+    def test_collective_cost_model(self):
+        ag = CollectiveOp("all-gather", 1000, 4, "e", 1)
+        rs = CollectiveOp("reduce-scatter", 250, 4, "e", 1)
+        ar = CollectiveOp("all-reduce", 1000, 4, "e", 1)
+        # AR == AG(result) + RS(same logical tensor) wire bytes
+        assert ar.wire_bytes_per_chip == pytest.approx(
+            ag.wire_bytes_per_chip + rs.wire_bytes_per_chip)
+
+
+class TestAnalytic:
+    def test_decode_flops_scale_with_batch(self):
+        cfg = get_config("qwen2.5-3b")
+        f1 = analytic.decode_flops(cfg, 1, 2048)
+        f2 = analytic.decode_flops(cfg, 2, 2048)
+        assert f2 == pytest.approx(2 * f1)
+
+    def test_train_flops_vs_model_flops(self):
+        cfg = get_config("olmo-1b")
+        est = analytic.estimate(cfg, SHAPES["train_4k"], n_chips=256,
+                                tp=16, dp=16)
+        # 6ND <= total (remat adds a fwd; attention adds seq^2 term)
+        assert est.model_flops < est.flops < 3 * est.model_flops
+
+    def test_ssm_decode_ctx_invariant(self):
+        cfg = get_config("mamba2-2.7b")
+        assert (analytic.decode_flops(cfg, 1, 2048)
+                == analytic.decode_flops(cfg, 1, 524288))
+
+
+class TestRoofline:
+    def _cell(self):
+        return {
+            "arch": "olmo-1b", "shape": "decode_32k", "mesh": "pod",
+            "n_chips": 256,
+            "analytic": {"flops": 851e9, "hbm_bytes_per_chip": 2.29e9,
+                         "model_flops": 301e9},
+            "collectives": {"total_wire_bytes_per_chip": 9.0e6},
+        }
+
+    def test_build_row(self):
+        r = build_row(self._cell())
+        assert r.dominant == "memory"
+        assert r.memory_t == pytest.approx(2.29e9 / 819e9)
+        assert r.compute_t == pytest.approx(851e9 / (256 * 197e12))
+        assert r.collective_t == pytest.approx(9.0e6 / 50e9)
+        assert 0 < r.useful_ratio < 1
+
+    def test_markdown_table(self):
+        md = markdown_table([build_row(self._cell())])
+        assert "olmo-1b" in md and "memory" in md

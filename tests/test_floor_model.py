@@ -1,0 +1,139 @@
+"""Floor-model validation: exact reproduction of the paper's own numbers
+(Table 9, §3.3, §3.4) + hypothesis property tests on the invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import PAPER_MODELS, get_config, list_configs
+from repro.core import floor as fl
+from repro.core.hardware import (GPU_A100, GPU_H100, GPU_L4, GPU_L40S,
+                                 TPU_V5E, get_chip)
+
+QWEN = get_config("qwen2.5-7b")
+MISTRAL = get_config("mistral-7b-v0.3")
+LLAMA = get_config("llama-3.1-8b")
+
+
+class TestPaperValidation:
+    """Every number here is quoted in the paper text."""
+
+    def test_qwen_weight_bytes(self):
+        # paper §3.3: W = 15.23 GB decimal
+        assert fl.weight_bytes(QWEN) == pytest.approx(15.23e9, rel=0.002)
+
+    def test_mistral_weight_bytes(self):
+        assert fl.weight_bytes(MISTRAL) == pytest.approx(14.50e9, rel=0.002)
+
+    def test_llama_weight_bytes(self):
+        assert fl.weight_bytes(LLAMA) == pytest.approx(16.06e9, rel=0.002)
+
+    def test_qwen_kv_bytes_per_token(self):
+        # paper §3.3: 2*28*4*128*2 = 56 KB per token
+        assert fl.kv_bytes_per_token(QWEN) == 2 * 28 * 4 * 128 * 2 == 57344
+
+    def test_mistral_kv_bytes_per_token(self):
+        # paper §3.3: 128 KB per token
+        assert fl.kv_bytes_per_token(MISTRAL) == 131072
+
+    # paper Table 9 floors (ms), spot-checked across the grid
+    @pytest.mark.parametrize("cfg,chip,ctx,expected_ms", [
+        (QWEN, GPU_H100, 2048, 4.58),
+        (QWEN, GPU_H100, 16384, 4.82),
+        (QWEN, GPU_A100, 2048, 7.54),
+        (QWEN, GPU_L40S, 2048, 17.78),
+        (QWEN, GPU_L4, 2048, 51.17),
+        (MISTRAL, GPU_H100, 2048, 4.40),
+        (MISTRAL, GPU_L4, 16384, 55.55),
+        (LLAMA, GPU_A100, 8192, 8.41),
+        (LLAMA, GPU_L40S, 16384, 21.09),
+    ])
+    def test_table9_floors(self, cfg, chip, ctx, expected_ms):
+        cell = fl.floor_cell(cfg, chip, ctx)
+        assert cell.t_floor_ms == pytest.approx(expected_ms, rel=0.005)
+
+    def test_r_floor_headline(self):
+        # paper Table 1: Qwen H100 ctx=2048 t_obs=16.97ms -> R=0.270
+        cell = fl.floor_cell(QWEN, GPU_H100, 2048)
+        assert cell.r_floor(16.97e-3) == pytest.approx(0.270, abs=0.002)
+        # L4: t_obs=63.15ms -> R=0.810
+        cell = fl.floor_cell(QWEN, GPU_L4, 2048)
+        assert cell.r_floor(63.15e-3) == pytest.approx(0.810, abs=0.002)
+
+    def test_l4_quant_floor(self):
+        # paper Table 7: int4 floor 13.09 ms on L4 (4x weight reduction)
+        cell = fl.floor_cell(QWEN, GPU_L4, 2048, weight_dtype_bytes=0.5)
+        assert cell.t_floor_ms == pytest.approx(13.09, rel=0.01)
+
+
+class TestAssignedArchCounts:
+    @pytest.mark.parametrize("name,total_b,active_b", [
+        ("qwen2-moe-a2.7b", 14.3, 2.7),
+        ("llama4-scout-17b-a16e", 107.8, 17.2),
+        ("mamba2-2.7b", 2.7, 2.7),
+        ("phi4-mini-3.8b", 3.8, 3.8),
+        ("olmo-1b", 1.18, 1.18),
+        ("internlm2-1.8b", 1.89, 1.89),
+        ("qwen2.5-3b", 3.09, 3.09),
+        ("zamba2-1.2b", 1.10, 1.10),
+    ])
+    def test_param_counts(self, name, total_b, active_b):
+        cfg = get_config(name)
+        assert fl.param_count(cfg) / 1e9 == pytest.approx(total_b, rel=0.03)
+        assert fl.active_param_count(cfg) / 1e9 == pytest.approx(active_b, rel=0.03)
+
+    def test_ssm_floor_ctx_independent(self):
+        cfg = get_config("mamba2-2.7b")
+        f1 = fl.floor_cell(cfg, TPU_V5E, 2048).t_floor_s
+        f2 = fl.floor_cell(cfg, TPU_V5E, 524288).t_floor_s
+        assert f1 == f2  # the paper's K-growth term degenerates for SSM
+
+    def test_hybrid_kv_slower_growth(self):
+        dense = get_config("qwen2.5-3b")
+        hybrid = get_config("zamba2-1.2b")
+        assert (fl.kv_bytes_per_token(hybrid)
+                < fl.kv_bytes_per_token(dense.replace(
+                    n_kv_heads=32, head_dim=64, n_layers=38)))
+
+
+class TestFloorProperties:
+    @given(ctx=st.integers(1, 10 ** 6))
+    @settings(max_examples=50, deadline=None)
+    def test_floor_monotone_in_ctx(self, ctx):
+        f1 = fl.floor_cell(QWEN, GPU_H100, ctx).t_floor_s
+        f2 = fl.floor_cell(QWEN, GPU_H100, ctx + 1).t_floor_s
+        assert f2 >= f1
+
+    @given(ctx=st.integers(1, 10 ** 6),
+           bw_a=st.floats(1e9, 1e13), bw_b=st.floats(1e9, 1e13))
+    @settings(max_examples=50, deadline=None)
+    def test_floor_antitone_in_bandwidth(self, ctx, bw_a, bw_b):
+        import dataclasses
+        a = dataclasses.replace(GPU_H100, hbm_bw=min(bw_a, bw_b))
+        b = dataclasses.replace(GPU_H100, hbm_bw=max(bw_a, bw_b))
+        assert (fl.floor_cell(QWEN, a, ctx).t_floor_s
+                >= fl.floor_cell(QWEN, b, ctx).t_floor_s)
+
+    @given(ctx=st.integers(1, 10 ** 5), t_obs=st.floats(1e-4, 10))
+    @settings(max_examples=50, deadline=None)
+    def test_r_floor_bounded_when_obs_above_floor(self, ctx, t_obs):
+        cell = fl.floor_cell(QWEN, GPU_L4, ctx)
+        t = max(t_obs, cell.t_floor_s)
+        assert 0 < cell.r_floor(t) <= 1.0 + 1e-9
+
+    @given(batch=st.integers(1, 512))
+    @settings(max_examples=30, deadline=None)
+    def test_moe_coverage_interpolation(self, batch):
+        """batch-1 streams W_active; large batch approaches W_total."""
+        cfg = get_config("qwen2-moe-a2.7b")
+        w1 = fl.floor_cell(cfg, TPU_V5E, 2048, batch=1).weight_bytes
+        wb = fl.floor_cell(cfg, TPU_V5E, 2048, batch=batch).weight_bytes
+        winf = fl.floor_cell(cfg, TPU_V5E, 2048, batch=10 ** 6).weight_bytes
+        assert w1 - 1e-6 <= wb <= winf + 1e-6
+
+    @given(st.sampled_from(list_configs()))
+    @settings(max_examples=13, deadline=None)
+    def test_active_leq_total(self, name):
+        cfg = get_config(name)
+        assert fl.active_param_count(cfg) <= fl.param_count(cfg)

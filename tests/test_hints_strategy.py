@@ -1,0 +1,90 @@
+"""Activation hints + sharding strategies + roofline CLI robustness."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.launch import hints
+from repro.launch import sharding as shd
+from jax.sharding import PartitionSpec as P
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+class TestHints:
+    def test_noop_without_mesh(self):
+        x = jnp.ones((4, 8))
+        assert hints.constrain(x, ("dp", "tp")) is x
+
+    def test_tp_divides_requires_mesh(self):
+        assert not hints.tp_divides(16)
+
+    def test_dp_all_disables_tp(self):
+        hints.enable(FakeMesh(), dp_all=True)
+        try:
+            assert not hints.tp_divides(16)
+            assert hints._resolve("tp", FakeMesh()) is None
+            assert hints._resolve("dp", FakeMesh()) == ("data", "model")
+        finally:
+            hints.disable()
+
+    def test_context_manager_restores(self):
+        with hints.activation_hints(None):
+            pass
+        assert hints._STATE["mesh"] is None
+
+
+class TestStrategies:
+    def test_dp_strategy_replicates_params(self):
+        cfg = get_config("olmo-1b")
+        plan = shd.ShardingPlan(FakeMesh(), cfg, False, {}, strategy="dp")
+
+        class Leaf:
+            shape = (16, 2048, 8192)
+        kp = (type("K", (), {"key": "blocks"})(),
+              type("K", (), {"key": "mlp"})(),
+              type("K", (), {"key": "up"})())
+        assert tuple(shd.param_spec(plan, kp, Leaf())) == (None, None, None)
+
+    def test_dp_strategy_batch_over_all_axes(self):
+        cfg = get_config("olmo-1b")
+        plan = shd.ShardingPlan(FakeMesh(), cfg, False, {}, strategy="dp")
+        assert plan.batch_axes == ("data", "model")
+
+    def test_tp_strategy_default(self):
+        cfg = get_config("olmo-1b")
+        plan = shd.make_plan(cfg, FakeMesh())
+        assert plan.strategy == "tp"
+        assert plan.batch_axes == ("data",)
+
+    def test_kv_scale_sharding_rule(self, monkeypatch):
+        cfg = get_config("qwen2.5-3b")
+        plan = shd.ShardingPlan(FakeMesh(), cfg, False, {})
+        monkeypatch.setattr(shd.ShardingPlan, "named", lambda self, spec: spec)
+        specs = shd.cache_shardings(plan, {
+            "k_scale": jax.ShapeDtypeStruct((36, 128, 32768, 2), jnp.float32),
+        })
+        # batch over data, seq over model; heads (2) replicated
+        assert tuple(specs["k_scale"]) == (None, "data", "model", None)
+
+
+class TestRooflineCLI:
+    def test_main_skips_non_ok_cells(self, tmp_path, capsys):
+        from repro.analysis import roofline
+        ok = {"arch": "a", "shape": "decode_32k", "mesh": "pod",
+              "status": "ok", "n_chips": 256,
+              "analytic": {"flops": 1e12, "hbm_bytes_per_chip": 1e9,
+                           "model_flops": 5e11},
+              "collectives": {"total_wire_bytes_per_chip": 1e6}}
+        skip = {"arch": "b", "shape": "long_500k", "mesh": "pod",
+                "status": "skipped", "reason": "full attention"}
+        (tmp_path / "a.json").write_text(json.dumps(ok))
+        (tmp_path / "b.json").write_text(json.dumps(skip))
+        roofline.main(str(tmp_path), "pod")
+        out = capsys.readouterr().out
+        assert "| a |" in out and "b" not in out.split("\n")[2]

@@ -1,0 +1,117 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs the
+ref.py pure-jnp oracles (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.int4_matmul.ops import int4_matmul
+from repro.kernels.int4_matmul.ref import int4_matmul_ref, unpack_int4_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.quant import quantize_int4
+
+KEY = jax.random.PRNGKey(42)
+
+
+class TestInt4Matmul:
+    @pytest.mark.parametrize("M,K,N,group", [
+        (1, 128, 128, 128),      # decode shape
+        (4, 256, 384, 128),
+        (16, 64, 96, 64),
+        (130, 512, 300, 128),    # non-divisible M/N (padding path)
+        (8, 128, 128, 32),       # small groups
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    def test_matches_ref(self, M, K, N, group, dtype):
+        kx, kw = jax.random.split(jax.random.fold_in(KEY, M * K + N))
+        x = jax.random.normal(kx, (M, K), dtype)
+        w = jax.random.normal(kw, (K, N), jnp.float32) * 0.1
+        qt = quantize_int4(w, group=group)
+        ref = int4_matmul_ref(x, qt.data, qt.scales, qt.group)
+        out = int4_matmul(x, qt.data, qt.scales, group=qt.group)
+        np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                                   rtol=0.02, atol=0.05 * float(jnp.std(ref)))
+
+    def test_pack_unpack_roundtrip(self):
+        w = jax.random.normal(KEY, (64, 32), jnp.float32)
+        qt = quantize_int4(w, group=32)
+        q = unpack_int4_ref(qt.data)
+        assert q.shape == (64, 32)
+        assert int(jnp.min(q)) >= -8 and int(jnp.max(q)) <= 7
+
+    def test_quantization_error_bounded(self):
+        """int4 with per-group scales: elementwise error <= scale/2."""
+        w = jax.random.normal(KEY, (256, 128), jnp.float32)
+        qt = quantize_int4(w, group=64)
+        from repro.quant import dequantize
+        wd = dequantize(qt, jnp.float32)
+        err = jnp.abs(wd - w)
+        bound = jnp.repeat(qt.scales, 64, axis=0) * 0.5 + 1e-6
+        assert bool(jnp.all(err <= bound))
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("B,Hq,Hkv,hd,S", [
+        (1, 28, 4, 128, 512),    # Qwen-2.5-7B decode shape (paper)
+        (2, 8, 2, 64, 256),
+        (3, 16, 4, 64, 384),
+        (2, 4, 4, 128, 128),     # MHA
+        (1, 2, 1, 32, 96),       # MQA, non-divisible S
+    ])
+    def test_matches_ref(self, B, Hq, Hkv, hd, S):
+        ks = jax.random.split(jax.random.fold_in(KEY, B * S + Hq), 3)
+        q = jax.random.normal(ks[0], (B, Hq, hd), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.bfloat16)
+        mask = jnp.arange(S) <= (S * 2) // 3
+        ref = decode_attention_ref(q, k, v, mask)
+        out = decode_attention(q, k, v, mask=mask, block=128)
+        np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                                   atol=0.02, rtol=0.02)
+
+    @given(pos=st.integers(0, 255))
+    @settings(max_examples=12, deadline=None)
+    def test_any_mask_prefix(self, pos):
+        B, Hq, Hkv, hd, S = 1, 4, 2, 32, 256
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, Hq, hd), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.bfloat16)
+        mask = jnp.arange(S) <= pos
+        ref = decode_attention_ref(q, k, v, mask)
+        out = decode_attention(q, k, v, mask=mask, block=64)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref), atol=0.03)
+
+    def test_length_api(self):
+        B, Hq, Hkv, hd, S = 2, 4, 2, 32, 128
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, Hq, hd), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.bfloat16)
+        a = decode_attention(q, k, v, length=jnp.int32(40))
+        b = decode_attention(q, k, v, mask=jnp.arange(S) < 40)
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-3)
+
+
+class TestRmsnorm:
+    @pytest.mark.parametrize("R,D", [(1, 64), (4, 128), (100, 256), (257, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    def test_matches_ref(self, R, D, dtype):
+        x = jax.random.normal(KEY, (R, D), dtype)
+        w = jax.random.normal(jax.random.fold_in(KEY, 1), (D,), jnp.float32)
+        out = rmsnorm(x, w)
+        ref = rmsnorm_ref(x, w)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), atol=0.02)
+
+    def test_leading_dims(self):
+        x = jax.random.normal(KEY, (2, 3, 64), jnp.bfloat16)
+        w = jnp.ones((64,), jnp.float32)
+        assert rmsnorm(x, w).shape == (2, 3, 64)

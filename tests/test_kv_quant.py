@@ -1,0 +1,70 @@
+"""Int8 KV-cache quantisation (repro.quant.kv): numerics + plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.quant.kv import dequantize_kv, quantize_kv_write
+
+KEY = jax.random.PRNGKey(21)
+
+
+@given(st.integers(1, 4), st.integers(8, 64))
+@settings(max_examples=20, deadline=None)
+def test_roundtrip_error_bounded(b, hd):
+    x = jax.random.normal(jax.random.fold_in(KEY, b * hd), (b, 3, hd),
+                          jnp.bfloat16) * 3
+    q, s = quantize_kv_write(x)
+    back = dequantize_kv(q, s, jnp.float32)
+    # per-vector max-abs scaling: error <= scale/2 (+bf16 noise)
+    bound = np.asarray(s)[..., None] * 0.55 + 0.02
+    assert np.all(np.abs(np.asarray(back) - np.asarray(x, np.float32)) <= bound)
+
+
+def test_scales_shape():
+    x = jnp.ones((2, 5, 4, 16), jnp.bfloat16)
+    q, s = quantize_kv_write(x)
+    assert q.shape == x.shape and q.dtype == jnp.int8
+    assert s.shape == (2, 5, 4) and s.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "qwen2-moe-a2.7b",
+                                  "musicgen-large"])
+def test_int8_cache_decode_close_to_bf16(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.family == "moe":
+        cfg = cfg.replace(capacity_factor=8.0)
+    m = Model(cfg)
+    params = m.init(KEY)
+    B, S = 2, 24
+    shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+    tokens = jax.random.randint(KEY, shape, 0, cfg.vocab_size)
+    ref, _ = m.forward(params, {"tokens": tokens})
+
+    cache = m.init_cache(B, 48, kv_dtype=jnp.int8)
+    assert "k_scale" in cache
+    _, cache = jax.jit(m.prefill)(params, {"tokens": tokens[:, :S - 1]}, cache)
+    ld, cache = jax.jit(m.decode_step)(params, cache, tokens[:, S - 1:])
+    err = float(jnp.max(jnp.abs(ld[:, 0].astype(jnp.float32)
+                                - ref[:, -1].astype(jnp.float32))))
+    assert err < 0.15, err     # int8 KV noise, bounded
+
+
+def test_folded_scales_equal_dequant_view():
+    """sdpa (folded scales) == math backend (dequantised view): the
+    algebraic rearrangement is exact up to dtype rounding."""
+    cfg = get_config("qwen2.5-3b").reduced()
+    params = Model(cfg).init(KEY)
+    tokens = jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
+    outs = {}
+    for backend in ("sdpa", "math"):
+        m = Model(cfg, decode_backend=backend)
+        cache = m.init_cache(1, 32, kv_dtype=jnp.int8)
+        _, cache = m.prefill(params, {"tokens": tokens[:, :-1]}, cache)
+        ld, _ = m.decode_step(params, cache, tokens[:, -1:])
+        outs[backend] = ld.astype(jnp.float32)
+    assert float(jnp.max(jnp.abs(outs["sdpa"] - outs["math"]))) < 0.05

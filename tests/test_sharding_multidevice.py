@@ -1,0 +1,207 @@
+"""Sharding-plan + multi-device tests.
+
+Multi-device cases run in a SUBPROCESS with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
+process keeps its single CPU device (assignment requirement: the flag
+must not leak into smoke tests/benches).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import get_config
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh  # noqa: F401 (import safety)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(code: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_mesh_import_does_not_touch_devices():
+    """Importing mesh.py must not initialise jax devices."""
+    code = textwrap.dedent("""
+        import json, sys
+        import repro.launch.mesh  # noqa
+        import jax
+        # jax not yet initialised: device count resolves to 8 ONLY if the
+        # flag was respected (i.e. nothing initialised the backend early)
+        print(json.dumps({"n": jax.device_count()}))
+    """)
+    assert run_subprocess(code)["n"] == 8
+
+
+def test_small_mesh_train_step_runs():
+    """A real sharded train step executes on a 4x2 fake-device mesh and
+    matches the single-device loss."""
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import Model
+        from repro.launch import sharding as shd
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch.hints import activation_hints
+        from repro.training import AdamW, make_train_step, synthetic_batch
+        from repro.training.data import DataCursor
+
+        cfg = get_config("internlm2-1.8b").reduced()
+        m = Model(cfg)
+        opt = AdamW(lr=1e-3)
+        params = m.init(jax.random.PRNGKey(0))
+        state = (params, opt.init(params))
+        batch = synthetic_batch(cfg, DataCursor(0, 0), batch=8, seq_len=32)
+        step = make_train_step(m, opt, remat="blocks")
+
+        # single device reference
+        (p1, _), m1 = jax.jit(step)(state, batch)
+
+        mesh = make_test_mesh(data=4, model=2)
+        plan = shd.make_plan(cfg, mesh)
+        p_sh = shd.params_shardings(plan, jax.eval_shape(lambda: params))
+        o_sh = shd.opt_state_shardings(plan, jax.eval_shape(opt.init, params))
+        b_sh = shd.batch_shardings(
+            plan, jax.eval_shape(lambda: batch))
+        with mesh, activation_hints(mesh):
+            fn = jax.jit(step, in_shardings=((p_sh, o_sh), b_sh))
+            (p2, _), m2 = fn(state, batch)
+        print(json.dumps({
+            "loss1": float(m1["loss"]), "loss2": float(m2["loss"]),
+            "n_shards": len(jax.tree_util.tree_leaves(p2)[0].sharding.device_set),
+        }))
+    """)
+    r = run_subprocess(code)
+    assert abs(r["loss1"] - r["loss2"]) < 0.05
+    assert r["n_shards"] == 8
+
+
+def test_decode_step_seq_sharded_cache():
+    """Decode with a sequence-sharded KV cache matches single-device."""
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import Model
+        from repro.launch import sharding as shd
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch.hints import activation_hints
+
+        cfg = get_config("qwen2.5-3b").reduced()
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                    cfg.vocab_size)
+        cache = m.init_cache(2, 64)
+        _, cache = m.prefill(params, {"tokens": tokens}, cache)
+        ref, _ = m.decode_step(params, cache, tokens[:, :1])
+
+        mesh = make_test_mesh(data=2, model=4)
+        plan = shd.make_plan(cfg, mesh)
+        p_sh = shd.params_shardings(plan, jax.eval_shape(lambda: params))
+        c_sh = shd.cache_shardings(plan, jax.eval_shape(lambda: cache))
+        with mesh, activation_hints(mesh):
+            fn = jax.jit(m.decode_step, in_shardings=(p_sh, c_sh, None))
+            out, _ = fn(params, cache, tokens[:, :1])
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                    - ref.astype(jnp.float32))))
+        print(json.dumps({"err": err}))
+    """)
+    assert run_subprocess(code)["err"] < 0.05
+
+
+def test_elastic_checkpoint_remesh():
+    """A checkpoint saved unsharded restores onto a 8-device mesh
+    (elastic re-mesh path) and produces the same loss."""
+    code = textwrap.dedent("""
+        import json, tempfile
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import Model
+        from repro.launch import sharding as shd
+        from repro.launch.mesh import make_test_mesh
+        from repro.training import AdamW, save, restore, synthetic_batch
+        from repro.training.data import DataCursor
+
+        cfg = get_config("olmo-1b").reduced()
+        m = Model(cfg)
+        opt = AdamW(lr=1e-3)
+        params = m.init(jax.random.PRNGKey(0))
+        state = (params, opt.init(params))
+        batch = synthetic_batch(cfg, DataCursor(0, 0), batch=8, seq_len=16)
+        loss_ref = float(m.loss(params, batch)[0])
+
+        with tempfile.TemporaryDirectory() as d:
+            save(d, 1, state)
+            mesh = make_test_mesh(data=2, model=4)
+            plan = shd.make_plan(cfg, mesh)
+            like = jax.eval_shape(lambda: state)
+            shardings = (shd.params_shardings(plan, like[0]),
+                         shd.opt_state_shardings(plan, like[1]))
+            state2, _ = restore(d, like, shardings=shardings)
+            with mesh:
+                loss2 = float(m.loss(state2[0], batch)[0])
+        print(json.dumps({"ref": loss_ref, "remesh": loss2}))
+    """)
+    r = run_subprocess(code)
+    assert abs(r["ref"] - r["remesh"]) < 1e-3
+
+
+class TestPlanRules:
+    def test_divisibility_fallback_recorded(self):
+        """mamba2 vocab 50280 %16 != 0 -> embed shards d_model instead."""
+        import jax
+
+        code_free = get_config("mamba2-2.7b")
+        mesh = None
+        # plan without touching real devices: use abstract mesh via
+        # make_production_mesh is device-bound; emulate with test mesh in
+        # subprocess instead — here just check the spec logic with a
+        # fake mesh-like object.
+        import numpy as np
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        plan = shd.ShardingPlan(FakeMesh(), code_free, False, {})
+        import jax.numpy as jnp
+
+        class Leaf:
+            shape = (50280, 2560)
+        spec = shd.param_spec(plan, (type("K", (), {"key": "embed"})(),), Leaf())
+        assert tuple(spec) == (None, "model")
+
+    def test_moe_ep_vs_tp(self):
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+
+        class Leaf:
+            shape = (24, 60, 2048, 1408)   # stacked qwen2-moe experts
+
+        plan = shd.ShardingPlan(FakeMesh(), get_config("qwen2-moe-a2.7b"),
+                                False, {})
+        kp = (type("K", (), {"key": "blocks"})(),
+              type("K", (), {"key": "moe"})(),
+              type("K", (), {"key": "w_up"})())
+        spec = shd.param_spec(plan, kp, Leaf())
+        assert tuple(spec) == (None, None, None, "model")   # TP inside experts
+
+        class Leaf4:
+            shape = (48, 16, 5120, 8192)   # llama4: E=16 -> EP
+        plan4 = shd.ShardingPlan(FakeMesh(), get_config("llama4-scout-17b-a16e"),
+                                 False, {})
+        spec4 = shd.param_spec(plan4, kp, Leaf4())
+        assert tuple(spec4) == (None, "model", None, None)

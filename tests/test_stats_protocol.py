@@ -1,0 +1,81 @@
+"""Measurement-protocol machinery (paper §3.1/§5/App D) + hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import stats
+from repro.core.protocol import measure_cell, run_ab
+
+
+class TestStats:
+    def test_p50(self):
+        assert stats.p50([1, 2, 3, 4, 100]) == 3
+
+    def test_cv(self):
+        assert stats.cv([10.0, 10.0, 10.0]) == 0.0
+
+    @given(st.lists(st.floats(0.1, 100), min_size=5, max_size=50))
+    @settings(max_examples=30, deadline=None)
+    def test_bootstrap_ci_contains_mean_mostly(self, xs):
+        lo, hi = stats.bootstrap_ci_mean(xs, n_resamples=500, seed=1)
+        assert lo <= np.mean(xs) + 1e-9
+        assert hi >= np.mean(xs) - 1e-9
+
+    def test_bootstrap_ci_deterministic_in_seed(self):
+        xs = [1.0, 2.0, 3.0, 4.0]
+        assert (stats.bootstrap_ci_mean(xs, seed=3)
+                == stats.bootstrap_ci_mean(xs, seed=3))
+
+    def test_paired_speedups(self):
+        sp = stats.paired_speedups([2.0, 4.0], [1.0, 2.0])
+        assert np.allclose(sp, [2.0, 2.0])
+
+    def test_paper_table2_statistics(self):
+        """Feed the paper's own N=10 session data through our machinery
+        and reproduce its summary row (mean 1.259, CI [1.253, 1.267])."""
+        eager = [14.749, 14.721, 14.776, 14.896, 14.800,
+                 14.869, 14.847, 15.147, 14.667, 14.812]
+        graphed = [11.850, 11.764, 11.770, 11.784, 11.766,
+                   11.760, 11.775, 11.763, 11.755, 11.775]
+        sp = stats.paired_speedups(eager, graphed)
+        assert stats.mean(sp) == pytest.approx(1.259, abs=0.001)
+        assert stats.mean(eager) == pytest.approx(14.828, abs=0.002)
+        assert stats.cv(eager) == pytest.approx(0.009, abs=0.002)
+        assert stats.cv(graphed) == pytest.approx(0.002, abs=0.001)
+        lo, hi = stats.bootstrap_ci_mean(sp, seed=0)
+        assert lo == pytest.approx(1.253, abs=0.003)
+        assert hi == pytest.approx(1.267, abs=0.003)
+
+
+class TestProtocol:
+    def test_measure_cell_window(self):
+        calls = {"n": 0}
+
+        def step():
+            calls["n"] += 1
+            return jnp.zeros(())
+        res = measure_cell(step, warmup=2, steps=5, name="t")
+        assert calls["n"] == 7
+        assert len(res.step_times_s) == 5
+        assert res.p50_ms >= 0
+
+    def test_run_ab_paired(self):
+        def mk_slow(s):
+            def f():
+                return jnp.ones(200_000).sum()   # more work
+            return f
+
+        def mk_fast(s):
+            def f():
+                return jnp.ones(16).sum()
+            return f
+        ab = run_ab(mk_slow, mk_fast, n_sessions=2, warmup=1, steps=5,
+                    fresh_session=False)
+        summary = ab.summary()
+        assert summary["n_sessions"] == 2
+        assert len(summary["per_session"]) == 2
+        assert summary["speedup_ci95"][0] <= summary["mean_speedup"] \
+            <= summary["speedup_ci95"][1]
