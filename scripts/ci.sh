@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 test suite + a continuous-batching serve smoke run.
+# Usage: bash scripts/ci.sh   (from the repo root; exits nonzero on failure)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: continuous-batching serve =="
+python -m repro.launch.serve --arch qwen2.5-3b --reduced --continuous \
+    --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 --timed
+
+echo "== ci green =="

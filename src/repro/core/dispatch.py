@@ -63,6 +63,11 @@ class StepProgram:
             return jax.jit(self.compose())
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
 
+    def launch_count(self, mode: str) -> int:
+        """Host-dispatch count per step for ``mode`` (method form of the
+        module-level ``launch_count``)."""
+        return launch_count(self, mode)
+
 
 def launch_count(program: StepProgram, mode: str) -> int:
     """Host-dispatch count per step (the paper's ~283-launch anchor, App D).

@@ -15,8 +15,9 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      block: int = 512) -> jnp.ndarray:
     """q (B, Hq, hd); k/v (B, S, Hkv, hd) -> (B, Hq, hd).
 
-    Provide either ``mask`` (S,) valid-slot mask or ``length`` (valid
-    prefix length).  Pads S up to a block multiple with masked slots."""
+    Provide either ``mask`` — (S,) shared or (B, S) per-sequence
+    valid-slot mask — or ``length`` (valid prefix length).  Pads S up to
+    a block multiple with masked slots."""
     B, Hq, hd = q.shape
     S = k.shape[1]
     if mask is None:

@@ -209,6 +209,9 @@ def cache_shardings(plan: ShardingPlan, cache_specs: Dict) -> Dict:
     B==1 (long-context single stream): seq additionally over data."""
     mesh = plan.mesh
     dp = dp_axes(mesh)
+    # single data axis shards as the flat name (P-spec equivalent to the
+    # 1-tuple, and what callers comparing specs expect)
+    dpf = dp[0] if len(dp) == 1 else dp
     out = {}
     for k, v in cache_specs.items():
         shape = v.shape
@@ -219,18 +222,18 @@ def cache_shardings(plan: ShardingPlan, cache_specs: Dict) -> Dict:
                 if not _fits(S, mesh, wanted[2]):
                     wanted = (None, None, "model", None, None)
             else:
-                wanted = (None, dp, "model", None, None)
+                wanted = (None, dpf, "model", None, None)
             out[k] = plan.named(_guard(plan, f"cache/{k}", shape, wanted))
         elif k in ("k_scale", "v_scale"):   # (L, B, S, Hkv) int8-KV scales
             B = shape[1]
             wanted = ((None, None, (dp + ("model",)), None) if B == 1
-                      else (None, dp, "model", None))
+                      else (None, dpf, "model", None))
             out[k] = plan.named(_guard(plan, f"cache/{k}", shape, wanted))
         elif k == "h":        # (L, B, H, P, N)
-            wanted = (None, dp, "model", None, None)
+            wanted = (None, dpf, "model", None, None)
             out[k] = plan.named(_guard(plan, f"cache/{k}", shape, wanted))
         elif k == "conv":     # (L, B, K-1, C)
-            wanted = (None, dp, None, "model")
+            wanted = (None, dpf, None, "model")
             out[k] = plan.named(_guard(plan, f"cache/{k}", shape, wanted))
         else:                 # pos scalar
             out[k] = plan.named(P())

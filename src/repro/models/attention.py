@@ -163,23 +163,59 @@ def decode_mask(pos: jnp.ndarray, s_max: int, *, ring: bool = False):
     ring wraps (pos >= s_max), after which every slot holds an in-window
     token.  Softmax is permutation-invariant over slots, so slot order
     never matters; RoPE was applied at absolute positions on write.
+
+    ``pos`` may be a scalar (one shared position, the static-batch path)
+    or a (B,) vector of per-slot positions (continuous batching) — the
+    latter yields a (B, s_max) per-slot length mask.
     """
     idx = jnp.arange(s_max)
+    if jnp.ndim(pos):
+        m = idx[None, :] <= pos[:, None]
+        if ring:
+            m = m | (pos[:, None] >= s_max)
+        return m
     m = idx <= pos
     if ring:
         m = m | (pos >= s_max)
     return m
 
 
+def _kv_write(dst: jnp.ndarray, new: jnp.ndarray, write_pos: jnp.ndarray):
+    """Write the new (B, 1, ...) row into the cache's sequence axis.
+
+    Scalar ``write_pos`` writes every sequence at the same slot (static
+    batch); a (B,) vector writes each sequence at its own slot (slotted
+    continuous batching) via a vmapped single-row update.
+    """
+    new = new.astype(dst.dtype)
+    if jnp.ndim(write_pos) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(dst, new, write_pos, axis=1)
+    return jax.vmap(
+        lambda d, n, p: jax.lax.dynamic_update_slice_in_dim(d, n, p, axis=0)
+    )(dst, new, write_pos)
+
+
+def _bmask(mask: jnp.ndarray, B: int) -> jnp.ndarray:
+    """Normalise a valid-slot mask to (B, S): a shared (S,) mask (static
+    batch, one position for all sequences) broadcasts; a (B, S) per-slot
+    mask (continuous batching) passes through."""
+    if mask.ndim == 2:
+        return mask
+    return jnp.broadcast_to(mask[None, :], (B, mask.shape[0]))
+
+
 def _sdpa_decode(q, k_cache, v_cache, mask, cfg, k_scale=None, v_scale=None):
     """k_scale/v_scale (B,S,Hkv): int8-KV path.  The per-token scales are
     constant over head_dim, so they FOLD into the score/prob tensors
     exactly — the int8 codes only convert-fuse into the dots and no bf16
-    KV copy is ever materialised (EXPERIMENTS.md §Perf C)."""
+    KV copy is ever materialised (EXPERIMENTS.md §Perf C).
+
+    ``mask`` is (S,) shared or (B, S) per-slot."""
+    mask = _bmask(mask, q.shape[0])
     scores = _gqa_scores(q, k_cache.astype(q.dtype), cfg)    # (B,K,G,1,S)
     if k_scale is not None:
         scores = scores * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
-    scores = jnp.where(mask[None, None, None, None, :], scores, -jnp.inf)
+    scores = jnp.where(mask[:, None, None, None, :], scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1)
     if v_scale is not None:
         probs = probs * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
@@ -188,9 +224,10 @@ def _sdpa_decode(q, k_cache, v_cache, mask, cfg, k_scale=None, v_scale=None):
 
 def _math_decode(q, k_cache, v_cache, mask, cfg):
     """Explicitly decomposed softmax (separate max/exp/sum/div ops)."""
+    mask = _bmask(mask, q.shape[0])
     scores = _gqa_scores(q, k_cache, cfg)
     neg = jnp.float32(-1e30)
-    scores = jnp.where(mask[None, None, None, None, :], scores, neg)
+    scores = jnp.where(mask[:, None, None, None, :], scores, neg)
     m = jnp.max(scores, axis=-1, keepdims=True)
     e = jnp.exp(scores - m)
     z = jnp.sum(e, axis=-1, keepdims=True)
@@ -201,6 +238,7 @@ def _math_decode(q, k_cache, v_cache, mask, cfg):
 def _split_kv_decode(q, k_cache, v_cache, mask, cfg, n_partitions: int = 8):
     """Flash-decoding: partition the KV axis, partial softmax per
     partition, numerically-exact combine (log-sum-exp merge)."""
+    mask = _bmask(mask, q.shape[0])
     B, S, Hkv, hd = k_cache.shape
     P = n_partitions
     while S % P:
@@ -208,20 +246,20 @@ def _split_kv_decode(q, k_cache, v_cache, mask, cfg, n_partitions: int = 8):
     sp = S // P
     kp = k_cache.reshape(B, P, sp, Hkv, hd)
     vp = v_cache.reshape(B, P, sp, Hkv, hd)
-    maskp = mask.reshape(P, sp)
+    maskp = mask.reshape(B, P, sp)
 
     def part(kpi, vpi, mi):
         scores = _gqa_scores(q, kpi, cfg)                    # (B,K,G,1,sp)
-        scores = jnp.where(mi[None, None, None, None, :], scores, -jnp.inf)
+        scores = jnp.where(mi[:, None, None, None, :], scores, -jnp.inf)
         m = jnp.max(scores, axis=-1)                         # (B,K,G,1)
         m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
         e = jnp.exp(scores - m_safe[..., None])
-        e = jnp.where(mi[None, None, None, None, :], e, 0.0)
+        e = jnp.where(mi[:, None, None, None, :], e, 0.0)
         l = jnp.sum(e, axis=-1)
         acc = jnp.einsum("bkgqs,bskh->bkgqh", e, vpi.astype(jnp.float32))
         return m, l, acc
 
-    ms, ls, accs = jax.vmap(part, in_axes=(1, 1, 0), out_axes=0)(kp, vp, maskp)
+    ms, ls, accs = jax.vmap(part, in_axes=(1, 1, 1), out_axes=0)(kp, vp, maskp)
     m_glob = jnp.max(ms, axis=0)
     m_glob_safe = jnp.where(jnp.isfinite(m_glob), m_glob, 0.0)
     scale = jnp.exp(jnp.where(jnp.isfinite(ms), ms - m_glob_safe, -jnp.inf))
@@ -240,9 +278,11 @@ def attention_decode(p: Params, x: jnp.ndarray, k_cache: jnp.ndarray,
     """One-token decode.  x (B,1,D); cache (B,S_max,Hkv,hd).
 
     ``write_pos`` is the cache slot for the new K/V (== absolute pos for a
-    full cache, pos % window for a ring cache); ``mask`` (S_max,) marks
-    valid slots (see ``decode_mask``).  k_scale/v_scale (B,S_max,Hkv)
-    enable the int8-quantised cache (repro.quant.kv).
+    full cache, pos % window for a ring cache) — scalar for a static
+    batch, (B,) for per-slot positions (continuous batching); ``mask``
+    (S_max,) or (B,S_max) marks valid slots (see ``decode_mask``).
+    k_scale/v_scale (B,S_max,Hkv) enable the int8-quantised cache
+    (repro.quant.kv).
 
     Returns (out, new_k, new_v[, new_k_scale, new_v_scale])."""
     from repro.quant import kv as kvq
@@ -254,17 +294,17 @@ def attention_decode(p: Params, x: jnp.ndarray, k_cache: jnp.ndarray,
     if quantized:
         kq, ks = kvq.quantize_kv_write(k_new)
         vq, vs = kvq.quantize_kv_write(v_new)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kq, write_pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vq, write_pos, axis=1)
-        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, write_pos, axis=1)
-        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, write_pos, axis=1)
+        k_cache = _kv_write(k_cache, kq, write_pos)
+        v_cache = _kv_write(v_cache, vq, write_pos)
+        k_scale = _kv_write(k_scale, ks, write_pos)
+        v_scale = _kv_write(v_scale, vs, write_pos)
         k_read, v_read = k_cache, v_cache    # sdpa folds scales; others
         if backend != "sdpa":                # take a dequantised view
             k_read = kvq.dequantize_kv(k_cache, k_scale, x.dtype)
             v_read = kvq.dequantize_kv(v_cache, v_scale, x.dtype)
     else:
-        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), write_pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), write_pos, axis=1)
+        k_cache = _kv_write(k_cache, k_new, write_pos)
+        v_cache = _kv_write(v_cache, v_new, write_pos)
         k_read, v_read = k_cache, v_cache
 
     if backend == "sdpa":

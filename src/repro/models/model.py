@@ -287,10 +287,20 @@ class Model:
     # caches
     # ------------------------------------------------------------------
     def init_cache(self, batch_size: int, max_len: int,
-                   kv_dtype=None) -> Cache:
+                   kv_dtype=None, slotted: bool = False) -> Cache:
+        """KV/state cache.  ``slotted=True`` makes ``pos`` a (batch,)
+        vector of per-slot positions — the continuous-batching layout
+        where each batch row is an independent session slot and the
+        decode step stays ONE compiled program at constant shapes while
+        sessions churn (see repro.serving.scheduler)."""
         cfg = self.cfg
         kv_dtype = kv_dtype or self.dtype
-        pos = jnp.zeros((), jnp.int32)
+        if slotted and cfg.family not in ("dense", "vlm", "audio", "moe"):
+            raise NotImplementedError(
+                "slotted (continuous-batching) caches target the "
+                f"attention families, got {cfg.family!r}")
+        pos = (jnp.zeros((batch_size,), jnp.int32) if slotted
+               else jnp.zeros((), jnp.int32))
         if cfg.family in ("dense", "vlm", "audio", "moe"):
             kv_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
             shape = (cfg.n_layers, batch_size, kv_len, cfg.n_kv_heads, cfg.head_dim)
@@ -376,6 +386,43 @@ class Model:
         x_last = apply_norm(x[:, -1:], params["final_norm"])
         return self.lm_logits(params, x_last), cache
 
+    def prefill_into_slot(self, params: Params, batch: Dict, cache: Cache,
+                          slot: jnp.ndarray) -> Tuple[jnp.ndarray, Cache]:
+        """Prefill ONE session (batch-1 prompt) into one slot of a
+        slotted cache (per-slot ``pos`` vector; see ``init_cache``).
+
+        ``slot`` is a traced scalar, so admission into any slot reuses
+        one compiled program per distinct prompt length; K/V land at
+        positions ``0..S-1`` of the slot's row and ``pos[slot] = S``.
+        Stale K/V beyond ``S`` from a previous occupant stay masked out
+        by the per-slot length mask until overwritten.  Returns the
+        last-position logits (1, 1, V) and the updated cache."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "vlm", "audio", "moe"):
+            raise NotImplementedError(
+                f"prefill_into_slot targets attention families, got "
+                f"{cfg.family!r}")
+        if "k_scale" in cache:
+            raise NotImplementedError(
+                "prefill_into_slot: int8-quantised KV not yet supported")
+        x, _, caches = self.backbone(params, batch, collect_cache=True)
+        S = x.shape[1]
+        k, v = caches                            # (L, 1, S, Hkv, hd)
+        kv_len = cache["k"].shape[2]
+        assert x.shape[0] == 1, "prefill_into_slot takes a batch-1 prompt"
+        assert S <= kv_len, (S, kv_len)
+        zero = jnp.int32(0)
+        start = (zero, jnp.asarray(slot, jnp.int32), zero, zero, zero)
+        cache = dict(
+            cache,
+            k=jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), start),
+            v=jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), start),
+            pos=cache["pos"].at[slot].set(S))
+        x_last = apply_norm(x[:, -1:], params["final_norm"])
+        return self.lm_logits(params, x_last), cache
+
     # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
@@ -408,17 +455,24 @@ class Model:
 
     def decode_step(self, params: Params, cache: Cache, tokens: jnp.ndarray
                     ) -> Tuple[jnp.ndarray, Cache]:
-        """One new token per sequence.  tokens (B,1) or (B,1,K)."""
+        """One new token per sequence.  tokens (B,1) or (B,1,K).
+
+        With a slotted cache (``pos`` is a (B,) vector) every sequence
+        advances at its own position: per-slot write offsets and (B, S)
+        length masks, same compiled program every step regardless of
+        which sessions occupy which slots."""
         cfg = self.cfg
         x = self.embed_tokens(params, tokens)
         B = x.shape[0]
         pos = cache["pos"]
+        slotted = pos.ndim == 1
         if self.angle_fn:
             kv_len = cache["k"].shape[2]
             ring = bool(cfg.sliding_window) and kv_len <= cfg.sliding_window
             write_pos = pos % kv_len if ring else pos
             mask = attn.decode_mask(pos, kv_len, ring=ring)
-            positions = jnp.broadcast_to(pos[None, None], (B, 1))
+            positions = (pos[:, None] if slotted
+                         else jnp.broadcast_to(pos[None, None], (B, 1)))
             angles = self.angle_fn(positions)
         else:
             angles, mask, write_pos = None, None, pos
@@ -494,7 +548,8 @@ class Model:
             x = self.embed_tokens(params, tokens)
             B = x.shape[0]
             pos = state["cache"]["pos"]
-            positions = jnp.broadcast_to(pos[None, None], (B, 1))
+            positions = (pos[:, None] if pos.ndim == 1
+                         else jnp.broadcast_to(pos[None, None], (B, 1)))
             return dict(state, x=x, angles=self.angle_fn(positions))
 
         def make_block_stage(i):

@@ -1,2 +1,5 @@
 from repro.serving.engine import DecodeEngine, GenerationResult  # noqa: F401
 from repro.serving.sampling import sample  # noqa: F401
+from repro.serving.scheduler import (ContinuousResult,  # noqa: F401
+                                     SessionRequest, SessionResult,
+                                     SlotScheduler)

@@ -115,6 +115,25 @@ class DecodeEngine:
                                   jnp.moveaxis(toks, 0, 1)], axis=1)
         return GenerationResult(tokens, [], (n_new - 1) / dt)
 
+    def generate_continuous(self, sessions, *, n_slots: int, max_len: int,
+                            temperature: float = 0.0, top_k: int = 0,
+                            seed: int = 0, dispatch_mode: str = "full_jit"):
+        """Continuous batching: serve ``sessions`` (SessionRequest list)
+        through a fixed-capacity slotted cache — admission, per-slot
+        prefill, shared batched decode, eviction, FIFO backfill.  The
+        decode step is the same ONE compiled program for the whole run
+        (``dispatch_mode='full_jit'``); the eager/stage_jit executors
+        remain available for the dispatch-tax A/B on the live workload.
+        Returns a ``ContinuousResult`` (see repro.serving.scheduler)."""
+        from repro.serving.scheduler import SlotScheduler
+        sched = SlotScheduler(self.model, self.params, n_slots=n_slots,
+                              max_len=max_len, dispatch_mode=dispatch_mode,
+                              temperature=temperature, top_k=top_k,
+                              seed=seed, kv_dtype=self.kv_dtype)
+        for req in sessions:
+            sched.submit(req)
+        return sched.run()
+
     # ------------------------------------------------- dispatch A/B hooks
     def step_program(self, cache) -> StepProgram:
         return self.model.step_program(self.params, cache)

@@ -1,0 +1,286 @@
+"""Continuous-batching session scheduler over a slotted KV cache.
+
+The paper's conclusion (batch-1 decode is launch-bound, fixed by keeping
+the whole step inside ONE compiled program) scales to multi-user serving
+only if session churn never forces a recompile.  The scheduler therefore
+serves K concurrent sessions out of a **fixed-capacity slotted cache**:
+
+  * the decode batch dimension is the (constant) slot count — the step
+    program, its shapes, and its compiled executable never change;
+  * each slot carries its own write position (``cache["pos"]`` is a
+    (n_slots,) vector) and a per-slot length mask, so sequences of
+    different ages decode together (models/attention.py);
+  * admission prefills a session's prompt **into** its slot
+    (``Model.prefill_into_slot`` — one compile per distinct prompt
+    length, amortised across all future admissions);
+  * completed sessions are evicted and their slot is backfilled from a
+    FIFO waiting queue; free slots ride along in the batch as masked
+    lanes (their outputs are discarded, their stale K/V stays masked).
+
+Scheduling is host-side Python; the per-token hot path is exactly the
+paper's ``full_jit`` arm — one dispatch per decode step for the whole
+slot batch — and the eager / stage_jit executors (core.dispatch) remain
+available for the dispatch-tax A/B on the live continuous workload.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dispatch import MODES, launch_count
+from repro.models.model import Model
+from repro.serving.sampling import sample
+
+Event = Tuple  # ("admit"|"token"|"finish", session_id, slot[, token])
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionRequest:
+    """One user session: a prompt and a token budget."""
+    session_id: str
+    prompt: Sequence[int]            # (S,) token ids
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class SessionResult:
+    session_id: str
+    tokens: np.ndarray               # (max_new_tokens,) generated ids
+    slot: int                        # slot the session was served in
+    admitted_tick: int
+    finished_tick: int
+    step_times_s: List[float]        # shared-batch decode-step walls
+
+
+@dataclasses.dataclass
+class ContinuousResult:
+    """Outcome of one continuous-batching run."""
+    sessions: Dict[str, SessionResult]
+    ticks: int                       # scheduler iterations
+    decode_steps: int                # batched decode dispatches
+    wall_s: float
+    tokens_per_s: float              # aggregate generated tokens / wall
+    step_cache_size: Optional[int]   # compiled decode-step count (full_jit)
+    launches_per_step: int           # host dispatches per decode step
+    events: List[Event]
+
+    def tokens_for(self, session_id: str) -> np.ndarray:
+        return self.sessions[session_id].tokens
+
+
+@dataclasses.dataclass
+class _Session:
+    request: SessionRequest
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    admitted_tick: int = -1
+    finished_tick: int = -1
+    step_times_s: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.request.max_new_tokens
+
+
+class SlotScheduler:
+    """Admission / decode / eviction / backfill over a slotted cache."""
+
+    def __init__(self, model: Model, params, *, n_slots: int, max_len: int,
+                 dispatch_mode: str = "full_jit", temperature: float = 0.0,
+                 top_k: int = 0, seed: int = 0, kv_dtype=None,
+                 max_ticks: Optional[int] = None):
+        assert n_slots >= 1
+        assert dispatch_mode in MODES, dispatch_mode
+        cfg = model.cfg
+        if cfg.n_codebooks:
+            raise NotImplementedError(
+                "continuous batching serves single-codebook archs")
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.dispatch_mode = dispatch_mode
+        self.temperature = temperature
+        self.top_k = top_k
+        self.key = jax.random.PRNGKey(seed)
+        self.max_ticks = max_ticks
+
+        self.cache = model.init_cache(n_slots, max_len, kv_dtype=kv_dtype,
+                                      slotted=True)
+        self.slots: List[Optional[_Session]] = [None] * n_slots
+        self.waiting: Deque[_Session] = collections.deque()
+        self.finished: List[_Session] = []
+        self.events: List[Event] = []
+        self.tick_count = 0
+        self.decode_steps = 0
+        self._admit_count = 0
+
+        self._prefill_slot = jax.jit(model.prefill_into_slot,
+                                     donate_argnums=(2,))
+        if dispatch_mode == "full_jit":
+            # the production hot path: the whole step is one program,
+            # cache donated so steps run allocation-free
+            self._step_jit = jax.jit(model.decode_step, donate_argnums=(1,))
+            self._program = None
+        else:
+            # dispatch A/B hooks: same math through the eager/stage_jit
+            # executors of the StepProgram decomposition
+            self._step_jit = None
+            self._program = model.step_program(params, self.cache)
+            self._executor = self._program.executor(dispatch_mode)
+
+    # ------------------------------------------------------------- intro
+    @property
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    @property
+    def active_sessions(self) -> List[str]:
+        return [s.request.session_id for s in self.slots if s is not None]
+
+    def step_cache_size(self) -> Optional[int]:
+        """Number of compiled decode-step executables (the recompile
+        guard: must be 1 after any amount of session churn)."""
+        if self._step_jit is not None:
+            return self._step_jit._cache_size()
+        return None
+
+    @property
+    def launches_per_step(self) -> int:
+        if self._program is not None:
+            return launch_count(self._program, self.dispatch_mode)
+        return 1  # full_jit
+
+    # ------------------------------------------------------------- queue
+    def submit(self, request: SessionRequest) -> None:
+        prompt = np.asarray(request.prompt, np.int32).reshape(-1)
+        assert prompt.size >= 1, "empty prompt"
+        assert request.max_new_tokens >= 1
+        # last decode write lands at S + max_new - 2; keep it in-cache
+        assert prompt.size + request.max_new_tokens - 1 <= self.max_len, (
+            f"session {request.session_id}: prompt {prompt.size} + "
+            f"{request.max_new_tokens} new tokens exceeds max_len "
+            f"{self.max_len}")
+        req = dataclasses.replace(request, prompt=prompt)
+        self.waiting.append(_Session(req))
+
+    # ----------------------------------------------------------- serving
+    def _sample(self, logits: jnp.ndarray, salt: int) -> jnp.ndarray:
+        key = jax.random.fold_in(self.key, salt)
+        return sample(logits, key, temperature=self.temperature,
+                      top_k=self.top_k)
+
+    def _finish(self, slot: int, sess: _Session) -> None:
+        sess.finished_tick = self.tick_count
+        self.slots[slot] = None
+        self.finished.append(sess)
+        self.events.append(("finish", sess.request.session_id, slot))
+
+    def _backfill(self) -> None:
+        """FIFO admission into free slots; prefill-into-slot per session."""
+        for slot in range(self.n_slots):
+            while self.slots[slot] is None and self.waiting:
+                sess = self.waiting.popleft()
+                prompt = jnp.asarray(sess.request.prompt)[None, :]
+                logits, self.cache = self._prefill_slot(
+                    self.params, {"tokens": prompt}, self.cache,
+                    jnp.int32(slot))
+                sess.slot = slot
+                sess.admitted_tick = self.tick_count
+                self.slots[slot] = sess
+                sid = sess.request.session_id
+                self.events.append(("admit", sid, slot))
+                # even salts for admissions (one per admission, counted
+                # monotonically), odd for decode steps — never collide
+                salt = 2 * self._admit_count
+                self._admit_count += 1
+                tok = int(self._sample(logits[:, -1], salt)[0])
+                sess.tokens.append(tok)
+                self.events.append(("token", sid, slot, tok))
+                if sess.done:     # 1-token session: retire immediately,
+                    self._finish(slot, sess)   # loop backfills the slot
+        occupied = [s for s in self.slots if s is not None]
+        assert len(set(map(id, occupied))) == len(occupied), \
+            "slot double-assignment"
+        assert all(s is None or s.slot == i
+                   for i, s in enumerate(self.slots)), "slot bookkeeping"
+
+    def _run_step(self, tokens: jnp.ndarray):
+        if self._step_jit is not None:
+            return self._step_jit(self.params, self.cache, tokens)
+        state = self._executor({"tokens": tokens, "cache": self.cache})
+        return state["logits"], state["cache"]
+
+    def tick(self) -> List[Event]:
+        """One scheduler iteration: backfill, one batched decode step
+        for every occupied slot, evict completed sessions."""
+        n_before = len(self.events)
+        self._backfill()
+        active = [(i, s) for i, s in enumerate(self.slots) if s is not None]
+        if active:
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            for slot, sess in active:
+                toks[slot, 0] = sess.tokens[-1]
+            t0 = time.perf_counter()
+            logits, self.cache = self._run_step(jnp.asarray(toks))
+            nxt = self._sample(logits[:, -1], 2 * self.tick_count + 1)
+            nxt = np.asarray(jax.block_until_ready(nxt))
+            dt = time.perf_counter() - t0
+            self.decode_steps += 1
+            for slot, sess in active:
+                tok = int(nxt[slot])
+                sess.tokens.append(tok)
+                sess.step_times_s.append(dt)
+                self.events.append(
+                    ("token", sess.request.session_id, slot, tok))
+                if sess.done:
+                    self._finish(slot, sess)
+        self.tick_count += 1
+        return self.events[n_before:]
+
+    def run(self) -> ContinuousResult:
+        """Drive until the waiting queue and all slots drain.
+
+        May be called repeatedly (submit → run → submit → run) on one
+        scheduler — compiled programs are reused across waves.  The
+        returned ``sessions`` map is cumulative; ``tokens_per_s`` and
+        ``wall_s`` cover only the sessions this call finished."""
+        fin0 = len(self.finished)
+        tick0 = self.tick_count
+        limit = self.max_ticks
+        if limit is None:
+            budget = sum(s.request.max_new_tokens
+                         for s in list(self.waiting))
+            budget += sum(s.request.max_new_tokens
+                          for s in self.slots if s is not None)
+            limit = 2 * budget + 16
+        t0 = time.perf_counter()
+        while self.waiting or any(s is not None for s in self.slots):
+            self.tick()
+            if self.tick_count - tick0 > limit:
+                raise RuntimeError(
+                    f"scheduler made no progress within {limit} ticks")
+        wall = time.perf_counter() - t0
+        n_tokens = sum(len(s.tokens) for s in self.finished[fin0:])
+        sessions = {
+            s.request.session_id: SessionResult(
+                session_id=s.request.session_id,
+                tokens=np.asarray(s.tokens, np.int32),
+                slot=s.slot,
+                admitted_tick=s.admitted_tick,
+                finished_tick=s.finished_tick,
+                step_times_s=s.step_times_s)
+            for s in self.finished}
+        return ContinuousResult(
+            sessions=sessions, ticks=self.tick_count,
+            decode_steps=self.decode_steps, wall_s=wall,
+            tokens_per_s=n_tokens / wall if wall > 0 else float("nan"),
+            step_cache_size=self.step_cache_size(),
+            launches_per_step=self.launches_per_step,
+            events=self.events)

@@ -7,3 +7,94 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_threefry_partitionable", True)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fallback shim
+#
+# The property tests use a small slice of the hypothesis API
+# (@given/@settings + integers/floats/sampled_from/lists strategies).
+# When the real package is absent we degrade gracefully: each @given test
+# runs against a deterministic fixed set of examples — the strategy's
+# boundary values first, then seeded pseudo-random draws — instead of
+# failing at collection.  With hypothesis installed this block is a no-op.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import random
+    import sys
+    import types
+
+    _DEFAULT_EXAMPLES = 6
+    _MAX_EXAMPLES_CAP = 12
+
+    class _Strategy:
+        """A strategy = boundary examples + a seeded random draw."""
+
+        def __init__(self, draw, edges=()):
+            self._draw = draw
+            self._edges = tuple(edges)
+
+        def example_at(self, i, rng):
+            if i < len(self._edges):
+                return self._edges[i]
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value),
+                         (min_value, max_value))
+
+    def _floats(min_value, max_value, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value),
+                         (min_value, max_value))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements), elements)
+
+    def _lists(elem, *, min_size=0, max_size=10, **_kw):
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            return [elem._draw(r) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _settings(max_examples=None, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def _given(*pos_strats, **kw_strats):
+        def deco(fn):
+            n = getattr(fn, "_shim_max_examples", None) or _DEFAULT_EXAMPLES
+            n = min(n, _MAX_EXAMPLES_CAP)
+
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xC0FFEE)
+                for i in range(n):
+                    pos = tuple(s.example_at(i, rng) for s in pos_strats)
+                    kws = {k: s.example_at(i, rng)
+                           for k, s in kw_strats.items()}
+                    fn(*args, *pos, **kws, **kwargs)
+            # NOT functools.wraps: __wrapped__ would make pytest resolve
+            # the original signature and demand fixtures for the
+            # strategy-filled parameters
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.sampled_from = _sampled_from
+    _st.lists = _lists
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -104,3 +104,15 @@ class TestDispatchModes:
         assert launch_count(program, "full_jit") == 1
         assert launch_count(program, "stage_jit") == CFG.n_layers + 2
         assert launch_count(program, "eager") == -1
+
+    def test_launch_count_method_regression(self):
+        """StepProgram.launch_count (method form) == module function for
+        every mode — the paper's launch-term accounting must not drift."""
+        from repro.core.dispatch import launch_count
+        program = _engine().step_program(None)
+        for mode in MODES:
+            assert program.launch_count(mode) == launch_count(program, mode)
+        assert program.launch_count("full_jit") == 1
+        assert program.launch_count("stage_jit") == len(program.stages)
+        with pytest.raises(ValueError):
+            program.executor("not_a_mode")

