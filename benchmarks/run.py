@@ -20,7 +20,8 @@ def main() -> None:
     from benchmarks import (fig9_cost_ladder, table1_rfloor_matrix,
                             table2_dispatch_ab, table4_batch_sweep,
                             table6_attention_backends, table7_quant_matrix,
-                            table8_accounting, table9_continuous_batching)
+                            table8_accounting, table9_continuous_batching,
+                            table10_paged_kv)
     suites = {
         "table1": table1_rfloor_matrix.run,
         "table2": lambda: table2_dispatch_ab.run(quick=quick),
@@ -30,6 +31,7 @@ def main() -> None:
         "table8": table8_accounting.run,
         "fig9": fig9_cost_ladder.run,
         "table9": lambda: table9_continuous_batching.run(quick=quick),
+        "table10": lambda: table10_paged_kv.run(quick=quick),
     }
     t0 = time.time()
     for name, fn in suites.items():

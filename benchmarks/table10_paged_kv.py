@@ -1,0 +1,109 @@
+"""Table 10 (extension): paged KV cache — page size x oversubscription.
+
+The paper's serving lesson is that memory savings only matter when the
+runtime realises them: once the launch tax is gone (one compiled decode
+step), *capacity* — every slot reserving a full ``max_len`` KV row —
+caps concurrency, not bandwidth.  The paged cache (slot -> block-table
+-> page-pool indirection, repro.serving.scheduler) breaks that
+reservation; this sweep measures what the indirection costs and what the
+oversubscription buys:
+
+  * page-size sweep at full backing: gather/scatter overhead vs the
+    contiguous slotted baseline (same session mix, same slots);
+  * oversubscription sweep at fixed page size: the pool shrinks to a
+    fraction of ``n_slots * ceil(max_len/page)`` pages; admission gating,
+    reclaim, and preemption keep the workload flowing.
+
+Reported per cell: aggregate tokens/s, shared-batch step p50/p95, pool
+pages vs full backing, preemption count — and the compiled-step guard
+(the decode step must stay ONE compiled program through page churn).
+
+A warmup wave runs through the same scheduler first so the measured wave
+sees only steady-state dispatches (the paper's warmup discipline).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.launch.serve import mixed_requests
+from repro.models import Model
+from repro.serving import SessionRequest, SlotScheduler
+
+PAGE_SIZES = (4, 8, 16)
+OVERSUB_FRACTIONS = (1.0, 0.75, 0.5)   # pool as a fraction of full backing
+
+
+def _serve(model, params, reqs, *, slots, max_len, warm=True, **kw):
+    sched = SlotScheduler(model, params, n_slots=slots, max_len=max_len,
+                          **kw)
+    if warm:
+        for r in reqs:   # warmup wave: compile prefill lengths + step
+            sched.submit(SessionRequest("warm_" + r.session_id,
+                                        r.prompt, r.max_new_tokens))
+        sched.run()
+    for r in reqs:
+        sched.submit(r)
+    res = sched.run()
+    steps = np.concatenate([
+        s.step_times_s for s in res.sessions.values()
+        if s.step_times_s and not s.session_id.startswith("warm_")])
+    p50, p95 = np.percentile(steps, [50, 95]) * 1e3
+    return res, p50, p95
+
+
+def run(quick: bool = False) -> None:
+    header("table10: paged KV — page size x oversubscription")
+    cfg = get_config("qwen2.5-3b").reduced().replace(
+        vocab_size=512, d_model=192, d_ff=384, n_layers=4,
+        n_heads=4, n_kv_heads=2, head_dim=32)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    slots = 4
+    n_sessions = 6 if quick else 12
+    base_prompt, base_new = 8, 8 if quick else 16
+    reqs = mixed_requests(cfg, n_sessions, base_prompt=base_prompt,
+                          base_new=base_new, seed=0)
+    max_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 1
+
+    # contiguous slotted baseline (PR 1) for the indirection-cost column
+    res, p50, p95 = _serve(model, params, reqs, slots=slots,
+                           max_len=max_len)
+    emit("paged/contiguous_baseline", p50 * 1e3,
+         f"tok_s={res.tokens_per_s:.1f} step_p50_ms={p50:.3f} "
+         f"step_p95_ms={p95:.3f} compiled_steps={res.step_cache_size}")
+    assert res.step_cache_size in (1, None), "decode step recompiled!"
+
+    page_sizes = PAGE_SIZES[1:2] if quick else PAGE_SIZES
+    for page in page_sizes:
+        res, p50, p95 = _serve(model, params, reqs, slots=slots,
+                               max_len=max_len, paged=True, page_size=page)
+        emit(f"paged/page{page}_full", p50 * 1e3,
+             f"tok_s={res.tokens_per_s:.1f} step_p50_ms={p50:.3f} "
+             f"step_p95_ms={p95:.3f} compiled_steps={res.step_cache_size} "
+             f"preemptions={res.preemptions}")
+        assert res.step_cache_size in (1, None), "paged decode step recompiled!"
+
+    page = 8
+    max_blocks = -(-max_len // page)
+    full = slots * max_blocks
+    fractions = OVERSUB_FRACTIONS[::2] if quick else OVERSUB_FRACTIONS
+    for frac in fractions:
+        n_pages = 1 + max(2, int(full * frac))
+        res, p50, p95 = _serve(model, params, reqs, slots=slots,
+                               max_len=max_len, paged=True, page_size=page,
+                               n_pages=n_pages)
+        emit(f"paged/oversub{int(frac * 100)}", p50 * 1e3,
+             f"tok_s={res.tokens_per_s:.1f} step_p50_ms={p50:.3f} "
+             f"step_p95_ms={p95:.3f} pages={n_pages - 1}/{full} "
+             f"compiled_steps={res.step_cache_size} "
+             f"preemptions={res.preemptions}")
+        assert res.step_cache_size in (1, None), "paged decode step recompiled!"
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

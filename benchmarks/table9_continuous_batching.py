@@ -58,7 +58,7 @@ def run(quick: bool = False) -> None:
              f"tok_s={res.tokens_per_s:.1f} step_p50_ms={p50:.3f} "
              f"step_p95_ms={p95:.3f} compiled_steps={res.step_cache_size} "
              f"decode_steps={res.decode_steps}")
-        assert res.step_cache_size == 1, "decode step recompiled!"
+        assert res.step_cache_size in (1, None), "decode step recompiled!"
     gain = throughputs[-1] / throughputs[0]
     emit("continuous/scaling", 0.0,
          f"tok_s={['%.1f' % t for t in throughputs]} "

@@ -14,4 +14,12 @@ echo "== smoke: continuous-batching serve =="
 python -m repro.launch.serve --arch qwen2.5-3b --reduced --continuous \
     --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 --timed
 
+echo "== smoke: paged KV serve (oversubscribed, chunked prefill) =="
+python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+    --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
+    --page-size 8 --pages 9 --prefill-chunk 8 --timed
+
+echo "== smoke: paged KV sweep (table10 --quick) =="
+python -m benchmarks.run --quick --only=table10
+
 echo "== ci green =="

@@ -44,7 +44,24 @@ def main():
     ap.add_argument("--sessions", type=int, default=8)
     ap.add_argument("--dispatch", default="full_jit",
                     choices=["eager", "stage_jit", "full_jit"])
+    # paged KV cache (slot->block-table->page-pool indirection)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve out of a paged KV cache: a page pool + "
+                         "per-slot block tables instead of per-slot "
+                         "max_len rows (implies --continuous)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="total pool pages incl. the garbage sentinel; "
+                         "below 1 + slots*ceil(max_len/page_size) the "
+                         "pool is oversubscribed (default: full backing)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admit prompts in chunks of this many tokens "
+                         "(multiple of --page-size), interleaved with "
+                         "decode ticks")
     args = ap.parse_args()
+    if args.paged:
+        args.continuous = True
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -103,12 +120,23 @@ def serve_continuous(engine: DecodeEngine, cfg, args):
     res = engine.generate_continuous(
         reqs, n_slots=args.slots, max_len=max_len,
         temperature=args.temperature, seed=args.seed,
-        dispatch_mode=args.dispatch)
+        dispatch_mode=args.dispatch, paged=args.paged,
+        page_size=args.page_size, n_pages=args.pages,
+        prefill_chunk=args.prefill_chunk)
     n_tok = sum(len(s.tokens) for s in res.sessions.values())
+    layout = "paged" if args.paged else "contiguous"
     print(f"served {len(res.sessions)} sessions through {args.slots} slots "
-          f"({args.dispatch}): {n_tok} tokens in {res.ticks} ticks / "
-          f"{res.decode_steps} decode steps, {res.tokens_per_s:.1f} tok/s "
-          f"aggregate")
+          f"({args.dispatch}, {layout}): {n_tok} tokens in {res.ticks} "
+          f"ticks / {res.decode_steps} decode steps, "
+          f"{res.tokens_per_s:.1f} tok/s aggregate")
+    if args.paged:
+        max_blocks = -(-max_len // args.page_size)
+        full = 1 + args.slots * max_blocks
+        pages = args.pages or full
+        print(f"paged: page_size={args.page_size} pages={pages} "
+              f"(full backing {full}, "
+              f"oversubscription x{(full - 1) / max(pages - 1, 1):.2f}), "
+              f"preemptions={res.preemptions}")
     compiled = (f"compiled {res.step_cache_size}x"
                 if res.step_cache_size is not None else
                 "compile count n/a (staged/eager executors)")

@@ -270,6 +270,27 @@ def _split_kv_decode(q, k_cache, v_cache, mask, cfg, n_partitions: int = 8):
     return out.transpose(0, 3, 1, 2, 4).reshape(B_, 1, K * G * hd_)
 
 
+def _decode_attend(q, k_read, v_read, mask, cfg: ArchConfig, backend: str,
+                   out_dtype, k_scale=None, v_scale=None) -> jnp.ndarray:
+    """Run the selected decode backend over an (already updated) K/V view.
+
+    Shared by the contiguous and paged decode paths — the backend matrix
+    (§6) is identical in both layouts."""
+    if backend == "sdpa":
+        return _sdpa_decode(q, k_read, v_read, mask, cfg,
+                            k_scale=k_scale, v_scale=v_scale).astype(out_dtype)
+    if backend == "math":
+        return _math_decode(q, k_read, v_read, mask, cfg).astype(out_dtype)
+    if backend == "split_kv":
+        return _split_kv_decode(q, k_read, v_read, mask, cfg).astype(out_dtype)
+    if backend == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+        B = q.shape[0]
+        o = da_ops.decode_attention(q[:, 0], k_read, v_read, mask=mask)
+        return o.reshape(B, 1, cfg.n_heads * cfg.head_dim).astype(out_dtype)
+    raise ValueError(f"unknown decode backend {backend!r}")
+
+
 def attention_decode(p: Params, x: jnp.ndarray, k_cache: jnp.ndarray,
                      v_cache: jnp.ndarray, write_pos: jnp.ndarray,
                      mask: jnp.ndarray, angles: jnp.ndarray, cfg: ArchConfig,
@@ -307,23 +328,107 @@ def attention_decode(p: Params, x: jnp.ndarray, k_cache: jnp.ndarray,
         v_cache = _kv_write(v_cache, v_new, write_pos)
         k_read, v_read = k_cache, v_cache
 
-    if backend == "sdpa":
-        out = _sdpa_decode(q, k_read, v_read, mask, cfg,
-                           k_scale=k_scale if quantized else None,
-                           v_scale=v_scale if quantized else None
-                           ).astype(x.dtype)
-    elif backend == "math":
-        out = _math_decode(q, k_read, v_read, mask, cfg).astype(x.dtype)
-    elif backend == "split_kv":
-        out = _split_kv_decode(q, k_read, v_read, mask, cfg).astype(x.dtype)
-    elif backend == "pallas":
-        from repro.kernels.decode_attention import ops as da_ops
-        o = da_ops.decode_attention(q[:, 0], k_read, v_read, mask=mask)
-        out = o.reshape(B, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
-    else:
-        raise ValueError(f"unknown decode backend {backend!r}")
+    out = _decode_attend(q, k_read, v_read, mask, cfg, backend, x.dtype,
+                         k_scale=k_scale if quantized else None,
+                         v_scale=v_scale if quantized else None)
     from repro.quant.paths import matmul
     out = matmul(out, p["wo"])
     if quantized:
         return out, k_cache, v_cache, k_scale, v_scale
     return out, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# paged decode (slot -> block-table -> page-pool indirection)
+# --------------------------------------------------------------------------
+
+def paged_view(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    """Gather a slot-major contiguous K/V view out of a page pool.
+
+    pool (n_pages, page_size, Hkv, hd); block_table (B, max_blocks) of
+    page indices -> (B, max_blocks * page_size, Hkv, hd).  Every slot's
+    view has the same (constant) virtual length, so the decode step stays
+    ONE compiled program; which physical pages back it is pure data."""
+    B, max_blocks = block_table.shape
+    pages = jnp.take(pool, block_table, axis=0)
+    return pages.reshape(B, max_blocks * pool.shape[1], *pool.shape[2:])
+
+
+def attention_decode_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, block_table: jnp.ndarray,
+                           pos: jnp.ndarray, mask: jnp.ndarray,
+                           angles: jnp.ndarray, cfg: ArchConfig,
+                           apply_rope_fn, backend: str = "sdpa"):
+    """One-token decode through a paged KV cache.
+
+    x (B,1,D); k_pool/v_pool (n_pages, page_size, Hkv, hd);
+    block_table (B, max_blocks); pos (B,) absolute per-slot positions.
+    The new K/V row is scattered into the slot's current page
+    (``block_table[b, pos[b] // page_size]`` at offset
+    ``pos[b] % page_size``), then the slot-major view is gathered and the
+    regular masked decode backend runs over it.  ``mask`` is the
+    (B, max_blocks*page_size) valid-slot mask (``decode_mask(pos, ...)``).
+
+    Lanes whose block-table row points at the reserved garbage page
+    (free / mid-prefill slots) write there and read finite junk — their
+    outputs are discarded by the scheduler.  Returns
+    (out, new_k_pool, new_v_pool)."""
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, x, cfg)
+    q = apply_rope_fn(q, angles)
+    k_new = apply_rope_fn(k_new, angles)
+    page_size = k_pool.shape[1]
+    page = jnp.take_along_axis(block_table, (pos // page_size)[:, None],
+                               axis=1)[:, 0]
+    off = pos % page_size
+    k_pool = k_pool.at[page, off].set(k_new[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[page, off].set(v_new[:, 0].astype(v_pool.dtype))
+    k_view = paged_view(k_pool, block_table)
+    v_view = paged_view(v_pool, block_table)
+    out = _decode_attend(q, k_view, v_view, mask, cfg, backend, x.dtype)
+    from repro.quant.paths import matmul
+    return matmul(out, p["wo"]), k_pool, v_pool
+
+
+def attention_prefill_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
+                            v_pool: jnp.ndarray, slot_pages: jnp.ndarray,
+                            start_pos: jnp.ndarray, angles: jnp.ndarray,
+                            cfg: ArchConfig, apply_rope_fn):
+    """Prefill one chunk of ONE session through the paged cache.
+
+    x (1, C, D) is the chunk's hidden states; ``slot_pages``
+    (max_blocks,) is the session's block-table row; ``start_pos`` is the
+    (page-aligned, traced) absolute position of chunk token 0.  The
+    chunk's K/V are written into the slot's pages, then the chunk
+    attends causally over the cached prefix + itself through the
+    gathered view — exact math (masked positions contribute exact
+    zeros), so chunked prefill is token-identical to whole-prompt
+    prefill.  Returns (out (1, C, D), new_k_pool, new_v_pool)."""
+    _, C, _ = x.shape
+    page_size = k_pool.shape[1]
+    q, k_new, v_new = _project_qkv(p, x, cfg)
+    q = apply_rope_fn(q, angles)
+    k_new = apply_rope_fn(k_new, angles)
+    n_chunk_pages = -(-C // page_size)
+    pad = n_chunk_pages * page_size - C
+
+    def to_pages(t):          # (1, C, Hkv, hd) -> (n_pages_c, page, Hkv, hd)
+        t = jnp.pad(t[0], ((0, pad), (0, 0), (0, 0)))
+        return t.reshape(n_chunk_pages, page_size,
+                         t.shape[1], t.shape[2]).astype(k_pool.dtype)
+
+    first = start_pos // page_size
+    idx = jax.lax.dynamic_slice_in_dim(slot_pages, first, n_chunk_pages)
+    k_pool = k_pool.at[idx].set(to_pages(k_new))
+    v_pool = v_pool.at[idx].set(to_pages(v_new))
+    k_view = paged_view(k_pool, slot_pages[None, :])
+    v_view = paged_view(v_pool, slot_pages[None, :])
+    virtual = k_view.shape[1]
+    qpos = start_pos + jnp.arange(C)
+    mask = jnp.arange(virtual)[None, :] <= qpos[:, None]      # (C, virtual)
+    scores = _gqa_scores(q, k_view.astype(q.dtype), cfg)      # (1,K,G,C,virt)
+    scores = jnp.where(mask[None, None, None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v_view.astype(q.dtype), cfg).astype(x.dtype)
+    from repro.quant.paths import matmul
+    return matmul(out, p["wo"]), k_pool, v_pool

@@ -287,18 +287,52 @@ class Model:
     # caches
     # ------------------------------------------------------------------
     def init_cache(self, batch_size: int, max_len: int,
-                   kv_dtype=None, slotted: bool = False) -> Cache:
+                   kv_dtype=None, slotted: bool = False,
+                   paged: bool = False, page_size: int = 16,
+                   n_pages: Optional[int] = None) -> Cache:
         """KV/state cache.  ``slotted=True`` makes ``pos`` a (batch,)
         vector of per-slot positions — the continuous-batching layout
         where each batch row is an independent session slot and the
         decode step stays ONE compiled program at constant shapes while
-        sessions churn (see repro.serving.scheduler)."""
+        sessions churn (see repro.serving.scheduler).
+
+        ``paged=True`` (implies slotted) replaces the per-slot
+        ``max_len`` K/V rows with a **page pool** plus a per-slot block
+        table: ``k``/``v`` become (L, n_pages, page_size, Hkv, hd) and
+        ``block_table`` (batch, max_blocks) maps each slot's virtual
+        positions onto pool pages.  Page 0 is the reserved garbage
+        sentinel (never allocated; free lanes point at it).  With
+        ``n_pages < 1 + batch_size * max_blocks`` the pool is
+        *oversubscribed*: slots no longer each reserve a full
+        ``max_len`` row, capacity follows live tokens instead
+        (repro.serving.scheduler manages allocation/reclaim)."""
         cfg = self.cfg
         kv_dtype = kv_dtype or self.dtype
+        if paged:
+            slotted = True
         if slotted and cfg.family not in ("dense", "vlm", "audio", "moe"):
             raise NotImplementedError(
                 "slotted (continuous-batching) caches target the "
                 f"attention families, got {cfg.family!r}")
+        if paged:
+            if cfg.sliding_window:
+                raise NotImplementedError(
+                    "paged KV + sliding-window (ring) caches not supported")
+            if kv_dtype == jnp.int8:
+                raise NotImplementedError(
+                    "paged KV + int8-quantised cache not supported")
+            assert page_size >= 1
+            max_blocks = -(-max_len // page_size)
+            if n_pages is None:
+                n_pages = 1 + batch_size * max_blocks   # full backing
+            assert n_pages >= 2, "need the garbage page plus >=1 real page"
+            shape = (cfg.n_layers, n_pages, page_size,
+                     cfg.n_kv_heads, cfg.head_dim)
+            return {"k": jnp.zeros(shape, kv_dtype),
+                    "v": jnp.zeros(shape, kv_dtype),
+                    "pos": jnp.zeros((batch_size,), jnp.int32),
+                    "block_table": jnp.zeros((batch_size, max_blocks),
+                                             jnp.int32)}
         pos = (jnp.zeros((batch_size,), jnp.int32) if slotted
                else jnp.zeros((), jnp.int32))
         if cfg.family in ("dense", "vlm", "audio", "moe"):
@@ -405,6 +439,11 @@ class Model:
         if "k_scale" in cache:
             raise NotImplementedError(
                 "prefill_into_slot: int8-quantised KV not yet supported")
+        if "block_table" in cache:
+            # paged cache: the whole prompt is one chunk (the scheduler
+            # must have pointed block_table[slot] at allocated pages)
+            return self.prefill_chunk_into_slot(params, batch, cache, slot,
+                                                jnp.int32(0))
         x, _, caches = self.backbone(params, batch, collect_cache=True)
         S = x.shape[1]
         k, v = caches                            # (L, 1, S, Hkv, hd)
@@ -420,6 +459,54 @@ class Model:
             v=jax.lax.dynamic_update_slice(
                 cache["v"], v.astype(cache["v"].dtype), start),
             pos=cache["pos"].at[slot].set(S))
+        x_last = apply_norm(x[:, -1:], params["final_norm"])
+        return self.lm_logits(params, x_last), cache
+
+    def prefill_chunk_into_slot(self, params: Params, batch: Dict,
+                                cache: Cache, slot: jnp.ndarray,
+                                start_pos: jnp.ndarray
+                                ) -> Tuple[jnp.ndarray, Cache]:
+        """Prefill one CHUNK of a session's prompt into a paged cache.
+
+        ``batch["tokens"]`` is (1, C) — chunk tokens at absolute
+        positions ``start_pos .. start_pos + C - 1``; ``start_pos`` must
+        be page-aligned (chunk boundaries land on page boundaries, so a
+        chunk's K/V writes cover whole pages).  The chunk attends over
+        the session's cached prefix plus itself (exact math — see
+        ``attention_prefill_paged``), so feeding a prompt chunk-by-chunk
+        is token-identical to one whole-prompt prefill.  ``slot`` and
+        ``start_pos`` are traced: one compiled program per distinct
+        chunk length, amortised over all admissions.  Returns the
+        chunk's last-position logits (1, 1, V) and the updated cache
+        (``pos[slot] = start_pos + C``)."""
+        cfg = self.cfg
+        assert "block_table" in cache, "prefill_chunk_into_slot needs paged"
+        tokens = batch["tokens"]
+        assert tokens.shape[0] == 1, "chunk prefill takes one session"
+        x = self.embed_tokens(params, tokens)
+        C = x.shape[1]
+        start_pos = jnp.asarray(start_pos, jnp.int32)
+        positions = (start_pos + jnp.arange(C))[None, :]
+        angles = self.angle_fn(positions)
+        slot_pages = cache["block_table"][slot]
+
+        def body(h, inp):
+            bp, kp, vp = inp
+            a_out, kp, vp = attn.attention_prefill_paged(
+                bp["attn"], apply_norm(h, bp["norm1"]), kp, vp, slot_pages,
+                start_pos, angles, cfg, apply_rope)
+            h = h + a_out
+            hn = apply_norm(h, bp["norm2"])
+            if cfg.family == "moe":
+                m_out, _ = moe.moe_forward(bp["moe"], hn, cfg)
+            else:
+                m_out = mlp_forward(bp["mlp"], hn, cfg.mlp_gated)
+            return h + m_out, (kp, vp)
+
+        x, (k, v) = jax.lax.scan(body, x,
+                                 (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=k, v=v,
+                     pos=cache["pos"].at[slot].set(start_pos + C))
         x_last = apply_norm(x[:, -1:], params["final_norm"])
         return self.lm_logits(params, x_last), cache
 
@@ -448,6 +535,21 @@ class Model:
             return x + m_out, k_cache, v_cache, k_scale, v_scale
         return x + m_out, k_cache, v_cache
 
+    def _attn_block_decode_paged(self, bp, x, k_pool, v_pool, block_table,
+                                 pos, mask, angles, backend=None):
+        cfg = self.cfg
+        a_out, k_pool, v_pool = attn.attention_decode_paged(
+            bp["attn"], apply_norm(x, bp["norm1"]), k_pool, v_pool,
+            block_table, pos, mask, angles, cfg, apply_rope,
+            backend=backend or self.decode_backend)
+        x = x + a_out
+        h = apply_norm(x, bp["norm2"])
+        if cfg.family == "moe":
+            m_out, _ = moe.moe_forward(bp["moe"], h, cfg)
+        else:
+            m_out = mlp_forward(bp["mlp"], h, cfg.mlp_gated)
+        return x + m_out, k_pool, v_pool
+
     def _mamba_block_decode(self, bp, x, h, conv):
         y, h, conv = mamba2.mamba_decode_step(
             bp["mamba"], apply_norm(x, bp.get("norm1")), h, conv, self.cfg)
@@ -466,10 +568,18 @@ class Model:
         B = x.shape[0]
         pos = cache["pos"]
         slotted = pos.ndim == 1
+        paged = "block_table" in cache
         if self.angle_fn:
-            kv_len = cache["k"].shape[2]
-            ring = bool(cfg.sliding_window) and kv_len <= cfg.sliding_window
-            write_pos = pos % kv_len if ring else pos
+            if paged:
+                # virtual per-slot length = block-table span; the write
+                # position is resolved through the block table inside
+                # attention_decode_paged
+                kv_len = cache["block_table"].shape[1] * cache["k"].shape[2]
+                ring, write_pos = False, pos
+            else:
+                kv_len = cache["k"].shape[2]
+                ring = bool(cfg.sliding_window) and kv_len <= cfg.sliding_window
+                write_pos = pos % kv_len if ring else pos
             mask = attn.decode_mask(pos, kv_len, ring=ring)
             positions = (pos[:, None] if slotted
                          else jnp.broadcast_to(pos[None, None], (B, 1)))
@@ -480,7 +590,18 @@ class Model:
         new_cache = dict(cache)
         quantized_kv = "k_scale" in cache
         if cfg.family in ("dense", "vlm", "audio", "moe"):
-            if quantized_kv:
+            if paged:
+                block_table = cache["block_table"]
+
+                def body(h, inp):
+                    bp, kp, vp = inp
+                    h, kp, vp = self._attn_block_decode_paged(
+                        bp, h, kp, vp, block_table, pos, mask, angles)
+                    return h, (kp, vp)
+                x, (k, v) = jax.lax.scan(
+                    body, x, (params["blocks"], cache["k"], cache["v"]))
+                new_cache.update(k=k, v=v)
+            elif quantized_kv:
                 def body(h, inp):
                     bp, kc, vc, ks, vs = inp
                     h, kc, vc, ks, vs = self._attn_block_decode(
@@ -539,9 +660,18 @@ class Model:
     def step_program(self, params: Params, cache: Cache) -> StepProgram:
         """Decompose decode_step into [embed] + [block_i]* + [head] stages
         over a state dict, for the eager / stage_jit / full_jit A/B.
-        Attention-family archs only (the A/B targets the paper's models)."""
+        Attention-family archs only (the A/B targets the paper's models).
+
+        Block stages mirror ``decode_step``'s cache semantics exactly —
+        ring (sliding-window) write offsets/masks and int8-KV scale
+        threading included — so the A/B touches the launch term and ONLY
+        the launch term on every cache layout it accepts."""
         cfg = self.cfg
         assert cfg.family in ("dense", "vlm", "audio", "moe")
+        if cache is not None and "block_table" in cache:
+            raise NotImplementedError(
+                "step_program does not decompose the paged decode step; "
+                "paged serving runs the full_jit arm only")
 
         def embed_stage(state):
             tokens = state["tokens"]
@@ -557,11 +687,29 @@ class Model:
 
             def stage(state):
                 c = state["cache"]
-                mask = attn.decode_mask(c["pos"], c["k"].shape[2])
-                x, kc, vc = self._attn_block_decode(
-                    bp, state["x"], c["k"][i], c["v"][i], c["pos"], mask,
-                    state["angles"])
-                c = dict(c, k=c["k"].at[i].set(kc), v=c["v"].at[i].set(vc))
+                kv_len = c["k"].shape[2]
+                # mirror decode_step's ring handling: once pos >= kv_len
+                # the write must wrap (pos % kv_len) and the mask must
+                # treat every slot as in-window, else the update clamps
+                # to the last slot and attention silently goes wrong
+                ring = bool(cfg.sliding_window) and kv_len <= cfg.sliding_window
+                write_pos = c["pos"] % kv_len if ring else c["pos"]
+                mask = attn.decode_mask(c["pos"], kv_len, ring=ring)
+                if "k_scale" in c:
+                    x, kc, vc, ks, vs = self._attn_block_decode(
+                        bp, state["x"], c["k"][i], c["v"][i], write_pos,
+                        mask, state["angles"],
+                        k_scale=c["k_scale"][i], v_scale=c["v_scale"][i])
+                    c = dict(c, k=c["k"].at[i].set(kc),
+                             v=c["v"].at[i].set(vc),
+                             k_scale=c["k_scale"].at[i].set(ks),
+                             v_scale=c["v_scale"].at[i].set(vs))
+                else:
+                    x, kc, vc = self._attn_block_decode(
+                        bp, state["x"], c["k"][i], c["v"][i], write_pos,
+                        mask, state["angles"])
+                    c = dict(c, k=c["k"].at[i].set(kc),
+                             v=c["v"].at[i].set(vc))
                 return dict(state, x=x, cache=c)
             return stage
 

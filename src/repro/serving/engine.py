@@ -69,12 +69,17 @@ class DecodeEngine:
     def generate_streamed(self, batch: Dict, *, max_len: int, n_new: int,
                           temperature: float = 0.0, top_k: int = 0,
                           seed: int = 0, timed: bool = False) -> GenerationResult:
-        """One host dispatch per token (the paper's streaming workload)."""
+        """One host dispatch per token (the paper's streaming workload).
+
+        The generation wall is always timed (``tokens_per_s`` is real
+        whether or not per-step instrumentation is on); ``timed=True``
+        additionally records per-step walls for percentile reporting."""
         logits, cache = self.prefill(batch, max_len)
         key = jax.random.PRNGKey(seed)
         out, times = [], []
         tok = sample(logits[:, -1], key, temperature=temperature, top_k=top_k)
         out.append(tok)
+        t_gen = time.perf_counter()
         for i in range(n_new - 1):
             key = jax.random.fold_in(key, i)
             t0 = time.perf_counter()
@@ -84,8 +89,10 @@ class DecodeEngine:
             if timed:
                 times.append(time.perf_counter() - t0)
             out.append(tok)
+        jax.block_until_ready(tok)
+        wall = time.perf_counter() - t_gen
         tokens = jnp.stack(out, axis=1)
-        tps = (len(times) / sum(times)) if times else float("nan")
+        tps = (n_new - 1) / wall if n_new > 1 and wall > 0 else float("nan")
         return GenerationResult(tokens, times, tps)
 
     def generate_fused(self, batch: Dict, *, max_len: int, n_new: int,
@@ -117,19 +124,28 @@ class DecodeEngine:
 
     def generate_continuous(self, sessions, *, n_slots: int, max_len: int,
                             temperature: float = 0.0, top_k: int = 0,
-                            seed: int = 0, dispatch_mode: str = "full_jit"):
+                            seed: int = 0, dispatch_mode: str = "full_jit",
+                            paged: bool = False, page_size: int = 16,
+                            n_pages: Optional[int] = None,
+                            prefill_chunk: Optional[int] = None):
         """Continuous batching: serve ``sessions`` (SessionRequest list)
         through a fixed-capacity slotted cache — admission, per-slot
         prefill, shared batched decode, eviction, FIFO backfill.  The
         decode step is the same ONE compiled program for the whole run
         (``dispatch_mode='full_jit'``); the eager/stage_jit executors
         remain available for the dispatch-tax A/B on the live workload.
-        Returns a ``ContinuousResult`` (see repro.serving.scheduler)."""
+        ``paged=True`` serves out of a page pool with per-slot block
+        tables instead of per-slot ``max_len`` rows — ``n_pages`` below
+        full backing oversubscribes memory, ``prefill_chunk`` admits
+        long prompts chunk-by-chunk between decode ticks.  Returns a
+        ``ContinuousResult`` (see repro.serving.scheduler)."""
         from repro.serving.scheduler import SlotScheduler
         sched = SlotScheduler(self.model, self.params, n_slots=n_slots,
                               max_len=max_len, dispatch_mode=dispatch_mode,
                               temperature=temperature, top_k=top_k,
-                              seed=seed, kv_dtype=self.kv_dtype)
+                              seed=seed, kv_dtype=self.kv_dtype,
+                              paged=paged, page_size=page_size,
+                              n_pages=n_pages, prefill_chunk=prefill_chunk)
         for req in sessions:
             sched.submit(req)
         return sched.run()

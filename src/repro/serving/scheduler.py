@@ -17,10 +17,28 @@ serves K concurrent sessions out of a **fixed-capacity slotted cache**:
     FIFO waiting queue; free slots ride along in the batch as masked
     lanes (their outputs are discarded, their stale K/V stays masked).
 
+**Paged mode** (``paged=True``) removes the last capacity cliff: slots
+no longer each reserve a full ``max_len`` K/V row.  The cache becomes a
+pool of fixed-size pages plus a per-slot block table
+(``Model.init_cache(paged=True)``); a host-side ``BlockAllocator``
+free-list hands pages out on demand.  Admission is gated on free pages,
+eviction reclaims them, and the pool may be *oversubscribed*
+(``n_pages`` smaller than full backing) — capacity follows live tokens,
+which is exactly the memory term the paper says dominates once the
+launch tax is gone.  If decode outgrows the pool mid-flight, the
+youngest session is preempted (pages reclaimed, session requeued and
+later re-prefilled from its prompt + generated prefix) so the oldest
+always progresses.  Long prompts can be admitted in fixed-size
+**chunks** (``prefill_chunk``) interleaved with decode ticks, so one big
+admission never stalls live sessions.  Shapes stay constant throughout:
+the paged decode step is still ONE compiled program; page residency is
+pure data (the block table).
+
 Scheduling is host-side Python; the per-token hot path is exactly the
 paper's ``full_jit`` arm — one dispatch per decode step for the whole
 slot batch — and the eager / stage_jit executors (core.dispatch) remain
-available for the dispatch-tax A/B on the live continuous workload.
+available for the dispatch-tax A/B on the live continuous workload
+(contiguous layout only; paged serving is full_jit-only).
 """
 from __future__ import annotations
 
@@ -37,7 +55,52 @@ from repro.core.dispatch import MODES, launch_count
 from repro.models.model import Model
 from repro.serving.sampling import sample
 
-Event = Tuple  # ("admit"|"token"|"finish", session_id, slot[, token])
+Event = Tuple  # ("admit"|"token"|"finish"|"preempt", session_id, slot[, token])
+
+GARBAGE_PAGE = 0   # reserved pool page free/mid-prefill lanes point at
+
+
+def jit_cache_size(fn) -> Optional[int]:
+    """Compiled-executable count of a ``jax.jit`` callable.
+
+    ``_cache_size()`` is a private jax internal (the only hook that
+    exposes the per-callable executable cache today); wrap it so a jax
+    upgrade that renames it degrades the recompile guard to ``None``
+    (= "unknown") instead of crashing the scheduler.
+    """
+    try:
+        return fn._cache_size()
+    except Exception:
+        return None
+
+
+class BlockAllocator:
+    """LIFO free-list over a fixed pool of KV pages.
+
+    Page ``GARBAGE_PAGE`` (0) is reserved as the write sink for lanes
+    that have no real page under their current position (free slots,
+    blocks beyond a session's allocation) and is never handed out."""
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 2, "need the garbage page plus >= 1 real page"
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages, or None (and no change) if under-supplied."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def release(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            assert 0 < p < self.n_pages, f"bad page id {p}"
+            assert p not in self._free, f"double free of page {p}"
+            self._free.append(p)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +132,8 @@ class ContinuousResult:
     step_cache_size: Optional[int]   # compiled decode-step count (full_jit)
     launches_per_step: int           # host dispatches per decode step
     events: List[Event]
+    preemptions: int = 0             # paged: sessions requeued for pages
+                                     # (this run() call only, like wall_s)
 
     def tokens_for(self, session_id: str) -> np.ndarray:
         return self.sessions[session_id].tokens
@@ -82,10 +147,23 @@ class _Session:
     admitted_tick: int = -1
     finished_tick: int = -1
     step_times_s: List[float] = dataclasses.field(default_factory=list)
+    # ---- paged bookkeeping ----
+    pages: List[int] = dataclasses.field(default_factory=list)
+    pos: int = 0                     # host mirror of cache["pos"][slot]
+    prefilled: int = 0               # prefill_seq tokens written so far
+    prefill_seq: Optional[np.ndarray] = None   # sequence being prefilled
+    resume: bool = False             # re-admission after preemption
+    admit_seq: int = -1              # monotone admission order (preempt prio)
 
     @property
     def done(self) -> bool:
         return len(self.tokens) >= self.request.max_new_tokens
+
+    @property
+    def decoding(self) -> bool:
+        """Prefill complete: the session takes part in decode steps."""
+        return (self.prefill_seq is not None
+                and self.prefilled >= len(self.prefill_seq))
 
 
 class SlotScheduler:
@@ -94,7 +172,9 @@ class SlotScheduler:
     def __init__(self, model: Model, params, *, n_slots: int, max_len: int,
                  dispatch_mode: str = "full_jit", temperature: float = 0.0,
                  top_k: int = 0, seed: int = 0, kv_dtype=None,
-                 max_ticks: Optional[int] = None):
+                 max_ticks: Optional[int] = None, paged: bool = False,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         assert n_slots >= 1
         assert dispatch_mode in MODES, dispatch_mode
         cfg = model.cfg
@@ -111,18 +191,50 @@ class SlotScheduler:
         self.key = jax.random.PRNGKey(seed)
         self.max_ticks = max_ticks
 
-        self.cache = model.init_cache(n_slots, max_len, kv_dtype=kv_dtype,
-                                      slotted=True)
+        self.paged = paged
+        if paged:
+            if dispatch_mode != "full_jit":
+                raise NotImplementedError(
+                    "paged serving runs the full_jit arm only (the "
+                    "stage/eager A/B targets the contiguous layout)")
+            if prefill_chunk is not None:
+                assert prefill_chunk >= page_size and \
+                    prefill_chunk % page_size == 0, (
+                        "prefill_chunk must be a positive multiple of "
+                        "page_size so chunk boundaries stay page-aligned")
+            self.page_size = page_size
+            self.max_blocks = -(-max_len // page_size)
+            if n_pages is None:
+                n_pages = 1 + n_slots * self.max_blocks   # full backing
+            self.n_pages = n_pages
+            self.prefill_chunk = prefill_chunk
+            self.allocator = BlockAllocator(n_pages)
+            self.preemptions = 0
+            self._bt = np.zeros((n_slots, self.max_blocks), np.int32)
+            self._bt_dirty = True
+            self._pos = np.zeros((n_slots,), np.int32)
+            self.cache = model.init_cache(
+                n_slots, max_len, kv_dtype=kv_dtype, paged=True,
+                page_size=page_size, n_pages=n_pages)
+        else:
+            self.preemptions = 0
+            self.cache = model.init_cache(n_slots, max_len,
+                                          kv_dtype=kv_dtype, slotted=True)
         self.slots: List[Optional[_Session]] = [None] * n_slots
         self.waiting: Deque[_Session] = collections.deque()
         self.finished: List[_Session] = []
         self.events: List[Event] = []
         self.tick_count = 0
         self.decode_steps = 0
-        self._admit_count = 0
+        self._admit_count = 0       # sampling-salt counter (even salts)
+        self._admission_order = 0   # monotone admission id (preempt prio)
 
-        self._prefill_slot = jax.jit(model.prefill_into_slot,
-                                     donate_argnums=(2,))
+        if paged:
+            self._prefill_chunk_jit = jax.jit(model.prefill_chunk_into_slot,
+                                              donate_argnums=(2,))
+        else:
+            self._prefill_slot = jax.jit(model.prefill_into_slot,
+                                         donate_argnums=(2,))
         if dispatch_mode == "full_jit":
             # the production hot path: the whole step is one program,
             # cache donated so steps run allocation-free
@@ -144,11 +256,17 @@ class SlotScheduler:
     def active_sessions(self) -> List[str]:
         return [s.request.session_id for s in self.slots if s is not None]
 
+    @property
+    def free_pages(self) -> Optional[int]:
+        return self.allocator.n_free if self.paged else None
+
     def step_cache_size(self) -> Optional[int]:
         """Number of compiled decode-step executables (the recompile
-        guard: must be 1 after any amount of session churn)."""
+        guard: must be 1 after any amount of session churn).  ``None``
+        when unknown (staged/eager executors, or a jax version that
+        dropped the private cache-size hook — see ``jit_cache_size``)."""
         if self._step_jit is not None:
-            return self._step_jit._cache_size()
+            return jit_cache_size(self._step_jit)
         return None
 
     @property
@@ -167,6 +285,11 @@ class SlotScheduler:
             f"session {request.session_id}: prompt {prompt.size} + "
             f"{request.max_new_tokens} new tokens exceeds max_len "
             f"{self.max_len}")
+        if self.paged:
+            need = self._pages_for(prompt.size + request.max_new_tokens - 1)
+            assert need <= self.n_pages - 1, (
+                f"session {request.session_id} needs {need} pages but the "
+                f"pool only holds {self.n_pages - 1}")
         req = dataclasses.replace(request, prompt=prompt)
         self.waiting.append(_Session(req))
 
@@ -180,10 +303,159 @@ class SlotScheduler:
         sess.finished_tick = self.tick_count
         self.slots[slot] = None
         self.finished.append(sess)
+        if self.paged:
+            self._release_slot(slot, sess)
         self.events.append(("finish", sess.request.session_id, slot))
 
+    # ------------------------------------------------------ paged plumbing
+    def _pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def _release_slot(self, slot: int, sess: _Session) -> None:
+        """Reclaim a session's pages and park the lane on the sentinel."""
+        self.allocator.release(sess.pages)
+        sess.pages = []
+        self._bt[slot, :] = GARBAGE_PAGE
+        self._bt_dirty = True
+        self._pos[slot] = 0
+
+    def _sync_device(self) -> None:
+        """Push the host-authoritative block table + positions into the
+        cache pytree (pure data: never changes compiled shapes).
+        Positions re-sync every tick (the decode step advances every
+        lane's device pos, including masked ones); the block table only
+        uploads when admission/eviction/allocation dirtied it, keeping
+        steady-state decode free of the extra H2D transfer."""
+        if self._bt_dirty:
+            self.cache["block_table"] = jnp.asarray(self._bt)
+            self._bt_dirty = False
+        self.cache["pos"] = jnp.asarray(self._pos)
+
+    def _preempt(self, slot: int, sess: _Session) -> None:
+        """Requeue a session to reclaim its pages.  It keeps its
+        generated tokens and is later re-prefilled from prompt +
+        generated prefix, so its stream is unchanged — preemption costs
+        recompute, never correctness."""
+        self._release_slot(slot, sess)
+        self.slots[slot] = None
+        sess.slot = -1
+        sess.prefilled = 0
+        sess.prefill_seq = None
+        sess.resume = True
+        self.preemptions += 1
+        self.events.append(("preempt", sess.request.session_id, slot))
+        self.waiting.appendleft(sess)   # it was admitted before the waiters
+
+    def _alloc_or_preempt(self, n: int, needy: _Session) -> Optional[List[int]]:
+        """Allocate ``n`` pages, preempting strictly-younger sessions
+        (later ``admit_seq``) one at a time until it fits.  Returns None
+        if it still can't fit with only the needy session (and older
+        ones) resident."""
+        while True:
+            got = self.allocator.alloc(n)
+            if got is not None:
+                return got
+            victims = [(s.admit_seq, i, s)
+                       for i, s in enumerate(self.slots)
+                       if s is not None and s is not needy
+                       and s.admit_seq > needy.admit_seq]
+            if not victims:
+                return None
+            _, vslot, vsess = max(victims)
+            self._preempt(vslot, vsess)
+
+    def _next_chunk_len(self, sess: _Session) -> int:
+        remaining = len(sess.prefill_seq) - sess.prefilled
+        if self.prefill_chunk is None:
+            return remaining
+        return min(self.prefill_chunk, remaining)
+
+    def _prefill_next_chunk(self, slot: int, sess: _Session) -> bool:
+        """Run ONE prefill chunk for the session in ``slot`` (allocate
+        its pages first).  Returns False if pages are short even after
+        preempting younger sessions — the chunk retries next tick."""
+        start = sess.prefilled
+        C = self._next_chunk_len(sess)
+        need = self._pages_for(start + C) - len(sess.pages)
+        if need > 0:
+            got = self._alloc_or_preempt(need, sess)
+            if got is None:
+                return False
+            base = len(sess.pages)
+            sess.pages.extend(got)
+            self._bt[slot, base:base + need] = got
+            self._bt_dirty = True
+        self._sync_device()
+        chunk = jnp.asarray(sess.prefill_seq[start:start + C])[None, :]
+        logits, self.cache = self._prefill_chunk_jit(
+            self.params, {"tokens": chunk}, self.cache, jnp.int32(slot),
+            jnp.int32(start))
+        sess.prefilled = start + C
+        sess.pos = sess.prefilled
+        self._pos[slot] = sess.prefilled
+        if sess.decoding:
+            # prefill complete: sample the first token — unless resuming
+            # after preemption, where the last generated token is still
+            # waiting to be fed through the next decode step
+            if sess.resume and sess.tokens:
+                sess.resume = False
+            else:
+                sess.resume = False
+                salt = 2 * self._admit_count
+                self._admit_count += 1
+                tok = int(self._sample(logits[:, -1], salt)[0])
+                sess.tokens.append(tok)
+                self.events.append(
+                    ("token", sess.request.session_id, slot, tok))
+                if sess.done:
+                    self._finish(slot, sess)
+        return True
+
+    def _admit_paged(self, slot: int, sess: _Session) -> None:
+        sess.prefill_seq = (
+            np.concatenate([sess.request.prompt,
+                            np.asarray(sess.tokens[:-1], np.int32)])
+            if sess.resume and sess.tokens else
+            np.asarray(sess.request.prompt, np.int32))
+        sess.prefilled = 0
+        sess.pages = []
+        sess.slot = slot
+        sess.admitted_tick = self.tick_count
+        sess.admit_seq = self._admission_order
+        self._admission_order += 1
+        self.slots[slot] = sess
+        self._bt[slot, :] = GARBAGE_PAGE
+        self._bt_dirty = True
+        self._pos[slot] = 0
+        self.events.append(("admit", sess.request.session_id, slot))
+
+    def _backfill_paged(self) -> None:
+        """FIFO admission gated on free pages: the queue head is
+        admitted only when its first chunk's pages are available
+        (head-of-line blocking is deliberate — skipping ahead would
+        starve long prompts)."""
+        for slot in range(self.n_slots):
+            while self.slots[slot] is None and self.waiting:
+                head = self.waiting[0]
+                seq_len = (len(head.request.prompt) +
+                           max(len(head.tokens) - 1, 0))
+                first = (seq_len if self.prefill_chunk is None
+                         else min(self.prefill_chunk, seq_len))
+                if self.allocator.n_free < self._pages_for(first):
+                    return          # gate: wait for reclaim
+                self._admit_paged(slot, self.waiting.popleft())
+                ok = self._prefill_next_chunk(slot, self.slots[slot])
+                assert ok, "gated admission must have its first chunk"
+                if self.slots[slot] is not None and \
+                        not self.slots[slot].decoding:
+                    break           # chunked prefill continues next ticks
+
+    # -------------------------------------------------------- contiguous
     def _backfill(self) -> None:
         """FIFO admission into free slots; prefill-into-slot per session."""
+        if self.paged:
+            self._backfill_paged()
+            return
         for slot in range(self.n_slots):
             while self.slots[slot] is None and self.waiting:
                 sess = self.waiting.popleft()
@@ -217,12 +489,42 @@ class SlotScheduler:
         state = self._executor({"tokens": tokens, "cache": self.cache})
         return state["logits"], state["cache"]
 
+    def _ensure_decode_page(self, slot: int, sess: _Session) -> bool:
+        """Guarantee the page under ``sess.pos`` (this tick's KV write)
+        exists, preempting younger sessions if the pool is dry.  If even
+        that fails, the needy session itself is preempted (an older
+        session holds the pool — it will finish and reclaim)."""
+        blk = sess.pos // self.page_size
+        if blk < len(sess.pages):
+            return True
+        assert blk == len(sess.pages), "page allocation skipped a block"
+        got = self._alloc_or_preempt(1, sess)
+        if got is None:
+            self._preempt(slot, sess)
+            return False
+        self._bt[slot, blk] = got[0]
+        self._bt_dirty = True
+        sess.pages.extend(got)
+        return True
+
     def tick(self) -> List[Event]:
-        """One scheduler iteration: backfill, one batched decode step
-        for every occupied slot, evict completed sessions."""
+        """One scheduler iteration: continue chunked prefills, backfill,
+        one batched decode step for every decoding slot, evict completed
+        sessions."""
         n_before = len(self.events)
+        if self.paged:
+            for slot, sess in enumerate(self.slots):
+                if sess is not None and not sess.decoding:
+                    self._prefill_next_chunk(slot, sess)
         self._backfill()
-        active = [(i, s) for i, s in enumerate(self.slots) if s is not None]
+        if self.paged:
+            for slot, sess in list(enumerate(self.slots)):
+                if sess is not None and sess.decoding and \
+                        self.slots[slot] is sess:
+                    self._ensure_decode_page(slot, sess)
+            self._sync_device()
+        active = [(i, s) for i, s in enumerate(self.slots)
+                  if s is not None and (not self.paged or s.decoding)]
         if active:
             toks = np.zeros((self.n_slots, 1), np.int32)
             for slot, sess in active:
@@ -234,6 +536,9 @@ class SlotScheduler:
             dt = time.perf_counter() - t0
             self.decode_steps += 1
             for slot, sess in active:
+                sess.pos += 1
+                if self.paged:
+                    self._pos[slot] = sess.pos
                 tok = int(nxt[slot])
                 sess.tokens.append(tok)
                 sess.step_times_s.append(dt)
@@ -253,13 +558,21 @@ class SlotScheduler:
         ``wall_s`` cover only the sessions this call finished."""
         fin0 = len(self.finished)
         tick0 = self.tick_count
+        pre0 = self.preemptions
         limit = self.max_ticks
         if limit is None:
-            budget = sum(s.request.max_new_tokens
-                         for s in list(self.waiting))
-            budget += sum(s.request.max_new_tokens
+            def ticks_for(s: _Session) -> int:
+                t = s.request.max_new_tokens
+                if self.paged and self.prefill_chunk:
+                    # chunked admission spends one tick per chunk, and a
+                    # preempted session re-prefills prompt + generated
+                    seq = len(s.request.prompt) + s.request.max_new_tokens
+                    t += -(-seq // self.prefill_chunk)
+                return t
+            budget = sum(ticks_for(s) for s in list(self.waiting))
+            budget += sum(ticks_for(s)
                           for s in self.slots if s is not None)
-            limit = 2 * budget + 16
+            limit = 4 * budget + 16
         t0 = time.perf_counter()
         while self.waiting or any(s is not None for s in self.slots):
             self.tick()
@@ -283,4 +596,4 @@ class SlotScheduler:
             tokens_per_s=n_tokens / wall if wall > 0 else float("nan"),
             step_cache_size=self.step_cache_size(),
             launches_per_step=self.launches_per_step,
-            events=self.events)
+            events=self.events, preemptions=self.preemptions - pre0)

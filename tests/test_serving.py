@@ -30,6 +30,15 @@ class TestEngine:
         assert res.tokens.shape == (1, 8)
         assert len(res.step_times_s) == 7
 
+    def test_streamed_reports_throughput_untimed(self):
+        """tokens_per_s must be real even with timed=False (regression:
+        it was nan because it was derived from the gated per-step
+        walls); per-step times stay gated on ``timed``."""
+        eng = _engine()
+        res = eng.generate_streamed(_prompt(), max_len=64, n_new=6)
+        assert res.step_times_s == []
+        assert np.isfinite(res.tokens_per_s) and res.tokens_per_s > 0
+
     def test_fused_equals_streamed_greedy(self):
         """One-program lax.scan generation == step-streamed greedy."""
         eng = _engine()
@@ -104,6 +113,74 @@ class TestDispatchModes:
         assert launch_count(program, "full_jit") == 1
         assert launch_count(program, "stage_jit") == CFG.n_layers + 2
         assert launch_count(program, "eager") == -1
+
+    def test_ring_cache_stage_equivalence_past_wrap(self):
+        """Regression: the block stages used the raw position as the
+        write offset and a non-ring mask, so a sliding-window cache
+        wrapped (pos >= kv_len) clamped every write to the last slot and
+        stage_jit/eager silently diverged from full_jit/decode_step."""
+        cfg = CFG.replace(sliding_window=8)
+        m = Model(cfg)
+        params = m.init(KEY)
+
+        def fresh_cache():
+            cache = m.init_cache(1, 32)            # kv_len capped to 8
+            assert cache["k"].shape[2] == 8
+            prompt = jax.random.randint(KEY, (1, 6), 0, cfg.vocab_size)
+            _, cache = jax.jit(m.prefill)(params, {"tokens": prompt}, cache)
+            return cache
+
+        program = m.step_program(params, fresh_cache())
+        runs = {mode: program.executor(mode) for mode in MODES}
+        states = {mode: {"tokens": None, "cache": fresh_cache()}
+                  for mode in MODES}
+        step = jax.jit(m.decode_step)
+        ref_cache = fresh_cache()
+        for i in range(12):                        # pos 6..17 wraps at 8
+            tok = jnp.array([[(3 * i + 1) % cfg.vocab_size]], jnp.int32)
+            logits_ref, ref_cache = step(params, ref_cache, tok)
+            for mode in MODES:
+                states[mode]["tokens"] = tok
+                states[mode] = runs[mode](states[mode])
+                np.testing.assert_allclose(
+                    np.asarray(states[mode]["logits"], np.float32),
+                    np.asarray(logits_ref, np.float32), atol=1e-2,
+                    err_msg=f"{mode} diverged at step {i} (pos {6 + i})")
+
+    def test_int8_kv_scales_threaded_through_stages(self):
+        """Regression: the block stages dropped k_scale/v_scale, so new
+        bf16 K/V rows were astype-cast into the int8 cache as garbage
+        codes against stale scales.  All three executors must now match
+        decode_step's logits and produce a sane quantised cache."""
+        from repro.quant import kv as kvq
+        m = Model(CFG)
+        params = m.init(KEY)
+
+        def fresh_cache():
+            cache = m.init_cache(1, 32, kv_dtype=jnp.int8)
+            prompt = jax.random.randint(KEY, (1, 6), 0, CFG.vocab_size)
+            _, cache = jax.jit(m.prefill)(params, {"tokens": prompt}, cache)
+            return cache
+
+        tok = jnp.array([[5]], jnp.int32)
+        logits_ref, cache_ref = jax.jit(m.decode_step)(
+            params, fresh_cache(), tok)
+        dq_ref = np.asarray(kvq.dequantize_kv(
+            cache_ref["k"], cache_ref["k_scale"], jnp.float32))
+        program = m.step_program(params, fresh_cache())
+        for mode in MODES:
+            out = program.executor(mode)(
+                {"tokens": tok, "cache": fresh_cache()})
+            np.testing.assert_allclose(
+                np.asarray(out["logits"], np.float32),
+                np.asarray(logits_ref, np.float32), atol=1e-2,
+                err_msg=f"{mode} logits diverged on int8 cache")
+            dq = np.asarray(kvq.dequantize_kv(
+                out["cache"]["k"], out["cache"]["k_scale"], jnp.float32))
+            # garbage codes against stale scales would be off by O(1);
+            # legitimate requantisation noise is bounded by one LSB
+            np.testing.assert_allclose(dq, dq_ref, atol=0.05,
+                                       err_msg=f"{mode} cache corrupted")
 
     def test_launch_count_method_regression(self):
         """StepProgram.launch_count (method form) == module function for
