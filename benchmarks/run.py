@@ -3,11 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.py).
 ``--quick`` shrinks session counts for CI-speed runs; the default run is
 the paper-faithful protocol (N=10 sessions on the headline A/B).
+
+Every selected table runs even if an earlier one fails; any failure
+makes the process exit nonzero (with a ``# FAILED`` line per broken
+table), so a CI stage over a sweep can never silently pass.
 """
 from __future__ import annotations
 
 import sys
 import time
+import traceback
 
 
 def main() -> None:
@@ -33,12 +38,26 @@ def main() -> None:
         "table9": lambda: table9_continuous_batching.run(quick=quick),
         "table10": lambda: table10_paged_kv.run(quick=quick),
     }
+    if only is not None and only not in suites:
+        print(f"# FAILED: unknown table {only!r} "
+              f"(have: {', '.join(suites)})", flush=True)
+        sys.exit(2)
     t0 = time.time()
+    failed = []
     for name, fn in suites.items():
         if only and name != only:
             continue
-        fn()
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            print(f"# FAILED: {name}", flush=True)
+            failed.append(name)
     print(f"# total {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        print(f"# {len(failed)} table(s) failed: {', '.join(failed)}",
+              flush=True)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

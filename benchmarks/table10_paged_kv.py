@@ -1,4 +1,5 @@
-"""Table 10 (extension): paged KV cache — page size x oversubscription.
+"""Table 10 (extension): paged KV cache — page size x oversubscription,
+gather+SDPA reference vs the fused block-table kernel.
 
 The paper's serving lesson is that memory savings only matter when the
 runtime realises them: once the launch tax is gone (one compiled decode
@@ -14,9 +15,18 @@ oversubscription buys:
     fraction of ``n_slots * ceil(max_len/page)`` pages; admission gating,
     reclaim, and preemption keep the workload flowing.
 
+Every paged cell runs TWICE — through the gather+SDPA reference (the
+``paged_view`` materialisation) and through the fused Pallas block-table
+kernel (``decode_backend="pallas"``, kernels/paged_decode_attention;
+interpret mode on CPU) — asserts the two greedy streams are
+token-identical, and reports the analytic per-step KV bytes each route
+moves: the fused kernel reads only the live pages once, the gather route
+pays 3x the constant virtual view (pool read + view write + SDPA read).
+
 Reported per cell: aggregate tokens/s, shared-batch step p50/p95, pool
-pages vs full backing, preemption count — and the compiled-step guard
-(the decode step must stay ONE compiled program through page churn).
+pages vs full backing, preemption count, per-step KV bytes per route —
+and the compiled-step guard (the decode step must stay ONE compiled
+program through page churn).
 
 A warmup wave runs through the same scheduler first so the measured wave
 sees only steady-state dispatches (the paper's warmup discipline).
@@ -28,6 +38,7 @@ import numpy as np
 
 from benchmarks.common import emit, header
 from repro.configs import get_config
+from repro.kernels.paged_decode_attention.ops import serving_traffic_bytes
 from repro.launch.serve import mixed_requests
 from repro.models import Model
 from repro.serving import SessionRequest, SlotScheduler
@@ -54,12 +65,54 @@ def _serve(model, params, reqs, *, slots, max_len, warm=True, **kw):
     return res, p50, p95
 
 
+def _assert_identical(reqs, ref, fused, cell: str) -> None:
+    for r in reqs:
+        np.testing.assert_array_equal(
+            ref.tokens_for(r.session_id), fused.tokens_for(r.session_id),
+            err_msg=f"{r.session_id} diverged fused-vs-gather in {cell}")
+
+
+def _paged_cell(name, models, params, reqs, cfg, *, slots, max_len, page,
+                n_pages=None, extra=""):
+    """Run one paged cell through both routes; assert token identity."""
+    model_ref, model_fused = models
+    kw = dict(slots=slots, max_len=max_len, paged=True, page_size=page,
+              n_pages=n_pages)
+    res, p50, p95 = _serve(model_ref, params, reqs, **kw)
+    fres, fp50, fp95 = _serve(model_fused, params, reqs, **kw)
+    _assert_identical(reqs, res, fres, name)
+    max_blocks = -(-max_len // page)
+    tb = serving_traffic_bytes(fres.step_kv_blocks, cfg, page_size=page,
+                               n_slots=slots, max_blocks=max_blocks)
+    for route, r, q50, q95 in (("gather", res, p50, p95),
+                               ("fused", fres, fp50, fp95)):
+        moved = tb["fused"] if route == "fused" else tb["gather_sdpa"]
+        emit(f"{name}/{route}", q50 * 1e3,
+             f"tok_s={r.tokens_per_s:.1f} step_p50_ms={q50:.3f} "
+             f"step_p95_ms={q95:.3f} kv_step_bytes={moved} "
+             f"compiled_steps={r.step_cache_size} "
+             f"preemptions={r.preemptions}{extra}")
+        assert r.step_cache_size in (1, None), \
+            f"paged decode step recompiled ({route})!"
+    emit(f"{name}/gather_elimination", 0.0,
+         f"fused_over_gather_bytes={tb['fused'] / tb['gather_sdpa']:.3f} "
+         f"token_identical=True")
+    return res, fres
+
+
 def run(quick: bool = False) -> None:
-    header("table10: paged KV — page size x oversubscription")
+    header("table10: paged KV — page size x oversubscription, "
+           "gather vs fused kernel")
+    # f32 so the fused-vs-gather identity column is well-conditioned:
+    # the bf16 SDPA rounds probabilities to bf16 before the PV dot (its
+    # own backend rounding), while the fused kernel accumulates in f32 —
+    # in f32 both routes compute the same real-valued function at the
+    # same precision and the greedy streams coincide exactly.
     cfg = get_config("qwen2.5-3b").reduced().replace(
         vocab_size=512, d_model=192, d_ff=384, n_layers=4,
-        n_heads=4, n_kv_heads=2, head_dim=32)
-    model = Model(cfg)
+        n_heads=4, n_kv_heads=2, head_dim=32, dtype="float32")
+    model = Model(cfg)                                  # gather+SDPA ref
+    model_fused = Model(cfg, decode_backend="pallas")   # fused kernel
     params = model.init(jax.random.PRNGKey(0))
 
     slots = 4
@@ -74,18 +127,14 @@ def run(quick: bool = False) -> None:
                            max_len=max_len)
     emit("paged/contiguous_baseline", p50 * 1e3,
          f"tok_s={res.tokens_per_s:.1f} step_p50_ms={p50:.3f} "
-         f"step_p95_ms={p95:.3f} compiled_steps={res.step_cache_size}")
+         f"step_p95_ms={p95:.3f} compiled_steps={res.step_cache_size} "
+         f"dtype={cfg.dtype}")
     assert res.step_cache_size in (1, None), "decode step recompiled!"
 
     page_sizes = PAGE_SIZES[1:2] if quick else PAGE_SIZES
     for page in page_sizes:
-        res, p50, p95 = _serve(model, params, reqs, slots=slots,
-                               max_len=max_len, paged=True, page_size=page)
-        emit(f"paged/page{page}_full", p50 * 1e3,
-             f"tok_s={res.tokens_per_s:.1f} step_p50_ms={p50:.3f} "
-             f"step_p95_ms={p95:.3f} compiled_steps={res.step_cache_size} "
-             f"preemptions={res.preemptions}")
-        assert res.step_cache_size in (1, None), "paged decode step recompiled!"
+        _paged_cell(f"paged/page{page}_full", (model, model_fused), params,
+                    reqs, cfg, slots=slots, max_len=max_len, page=page)
 
     page = 8
     max_blocks = -(-max_len // page)
@@ -93,15 +142,10 @@ def run(quick: bool = False) -> None:
     fractions = OVERSUB_FRACTIONS[::2] if quick else OVERSUB_FRACTIONS
     for frac in fractions:
         n_pages = 1 + max(2, int(full * frac))
-        res, p50, p95 = _serve(model, params, reqs, slots=slots,
-                               max_len=max_len, paged=True, page_size=page,
-                               n_pages=n_pages)
-        emit(f"paged/oversub{int(frac * 100)}", p50 * 1e3,
-             f"tok_s={res.tokens_per_s:.1f} step_p50_ms={p50:.3f} "
-             f"step_p95_ms={p95:.3f} pages={n_pages - 1}/{full} "
-             f"compiled_steps={res.step_cache_size} "
-             f"preemptions={res.preemptions}")
-        assert res.step_cache_size in (1, None), "paged decode step recompiled!"
+        _paged_cell(f"paged/oversub{int(frac * 100)}", (model, model_fused),
+                    params, reqs, cfg, slots=slots, max_len=max_len,
+                    page=page, n_pages=n_pages,
+                    extra=f" pages={n_pages - 1}/{full}")
 
 
 if __name__ == "__main__":

@@ -1,25 +1,61 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 test suite + a continuous-batching serve smoke run.
-# Usage: bash scripts/ci.sh   (from the repo root; exits nonzero on failure)
+# CI gate: tier-1 test suite + serving smoke stages, named and timed.
+#
+# Usage:
+#   bash scripts/ci.sh           # full staged pipeline (what CI runs)
+#   bash scripts/ci.sh --fast    # tier-1 only (pre-push gate)
+#
+# Stages (each individually timed; first failure aborts, nonzero exit):
+#   tier1             pytest suite (ROADMAP "tier-1 verify")
+#   smoke-continuous  continuous-batching serve (slotted cache)
+#   smoke-paged       paged serve: oversubscribed pool + chunked prefill
+#   smoke-paged-fused paged serve through the fused Pallas block-table
+#                     kernel (--decode-backend pallas; interpret on CPU)
+#   table10-quick     paged sweep incl. fused-vs-gather token identity
+#                     (benchmarks/run.py exits nonzero on any failure)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+FAST=0
+for arg in "$@"; do
+    case "$arg" in
+        --fast) FAST=1 ;;
+        *) echo "unknown argument: $arg" >&2; exit 2 ;;
+    esac
+done
 
-echo "== smoke: continuous-batching serve =="
-python -m repro.launch.serve --arch qwen2.5-3b --reduced --continuous \
-    --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 --timed
+stage() {
+    local name="$1"; shift
+    echo "== stage: $name =="
+    local t0=$SECONDS
+    "$@"
+    echo "== stage: $name ok ($((SECONDS - t0))s) =="
+}
 
-echo "== smoke: paged KV serve (oversubscribed, chunked prefill) =="
-python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
-    --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
-    --page-size 8 --pages 9 --prefill-chunk 8 --timed
+stage tier1 python -m pytest -x -q
 
-echo "== smoke: paged KV sweep (table10 --quick) =="
-python -m benchmarks.run --quick --only=table10
+if [ "$FAST" = 1 ]; then
+    echo "== ci green (--fast: tier-1 only) =="
+    exit 0
+fi
+
+stage smoke-continuous \
+    python -m repro.launch.serve --arch qwen2.5-3b --reduced --continuous \
+        --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 --timed
+
+stage smoke-paged \
+    python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+        --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
+        --page-size 8 --pages 9 --prefill-chunk 8 --timed
+
+stage smoke-paged-fused \
+    python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+        --decode-backend pallas --slots 3 --sessions 6 --prompt-len 8 \
+        --new-tokens 6 --page-size 8 --pages 9 --timed
+
+stage table10-quick python -m benchmarks.run --quick --only=table10
 
 echo "== ci green =="

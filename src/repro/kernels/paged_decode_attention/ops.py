@@ -1,0 +1,62 @@
+"""jit'd public wrapper + analytic traffic accounting for the fused
+paged decode-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_decode_attention.paged_decode_attention import (
+    paged_decode_attention_pallas)
+
+
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, block_table: jnp.ndarray,
+                           lengths: jnp.ndarray) -> jnp.ndarray:
+    """q (B, Hq, hd); k_pool/v_pool (n_pages, page, Hkv, hd);
+    block_table (B, max_blocks); lengths (B,) -> (B, Hq, hd).
+
+    Reads each slot's allocated pages in place through the block table
+    (scalar-prefetch indirection) — no materialised virtual view.
+    Interpret mode off-TPU."""
+    interpret = jax.default_backend() != "tpu"
+    return paged_decode_attention_pallas(q, k_pool, v_pool, block_table,
+                                         lengths, interpret=interpret)
+
+
+def traffic_bytes(live_blocks: int, page_size: int, Hkv: int, hd: int,
+                  *, n_slots: int, max_blocks: int, n_layers: int = 1,
+                  kv_bytes: int = 2) -> dict:
+    """Analytic per-decode-step HBM KV traffic for the two paged routes.
+
+    ``live_blocks`` is the summed ``ceil(live_len/page)`` over slots at
+    that step (what the fused kernel actually walks; skipped sentinel
+    blocks cost nothing).  The gather route is charged per layer for the
+    full virtual view three times: the gather's pool read, the
+    materialised-view write, and the SDPA's read of that view — the two
+    middle terms are the traffic the fused kernel deletes."""
+    kv = 2 * Hkv * hd * kv_bytes               # K + V, per token
+    virtual = n_slots * max_blocks * page_size
+    return {
+        "fused": n_layers * live_blocks * page_size * kv,
+        "gather_sdpa": n_layers * 3 * virtual * kv,
+    }
+
+
+def serving_traffic_bytes(step_kv_blocks: Sequence[int], cfg, *,
+                          page_size: int, n_slots: int, max_blocks: int,
+                          kv_bytes: Optional[int] = None) -> dict:
+    """Mean per-decode-step KV traffic for both routes from a run's
+    live-block trace (``ContinuousResult.step_kv_blocks``).
+
+    ``kv_bytes`` defaults to the KV element size implied by the model
+    dtype (the paged cache stores KV at the model dtype)."""
+    if kv_bytes is None:
+        kv_bytes = 4 if cfg.dtype == "float32" else 2
+    mean_blocks = int(round(float(np.mean(np.asarray(step_kv_blocks)))))
+    return traffic_bytes(mean_blocks, page_size, cfg.n_kv_heads,
+                         cfg.head_dim, n_slots=n_slots,
+                         max_blocks=max_blocks, n_layers=cfg.n_layers,
+                         kv_bytes=kv_bytes)

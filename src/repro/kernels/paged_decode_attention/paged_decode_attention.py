@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused paged GQA single-token decode attention.
+
+The paged decode path used to *materialise* the slot-major virtual KV
+view (``paged_view``: gather every block-table page into a fresh
+(B, max_blocks*page, Hkv, hd) buffer) before the SDPA even ran — per
+layer per step that is a full extra read+write of the virtual KV on top
+of the SDPA's own read, i.e. the exact avoidable data movement the
+paper's realised-vs-floor gap is made of.  This kernel fuses the gather
+into the flash-decoding sweep: the block table rides in as a
+scalar-prefetch operand, the BlockSpec index map dereferences it, and
+each slot's pages are read **in place** from the pool, once, with no
+intermediate view.
+
+Grid (B, Hkv, max_blocks); the page axis is the innermost sequential
+dimension so the (m, l, acc) online-softmax carry lives in VMEM scratch
+across a slot's pages (same scheme as kernels/decode_attention).  Blocks
+past a slot's live length — block-table entries parked on the garbage
+sentinel — are skipped via ``pl.when`` (their DMA re-targets the same
+sentinel page, so consecutive skipped steps cost no new fetch), which is
+what makes the kernel's KV traffic track *allocated* pages instead of
+the constant virtual length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, page: int, scale: float):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    ni = pl.num_programs(2)
+    length = len_ref[b]
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(i * page < length)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)       # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)       # (page, hd)
+        G = q.shape[0]
+        # partial last page: tokens at absolute position >= length mask out
+        tok = i * page + jax.lax.broadcasted_iota(jnp.int32, (G, page), 1)
+        valid = tok < length
+
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (G, page)
+        scores = jnp.where(valid, scores, NEG_INF)
+
+        m_prev = m_ref[...]                          # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)                  # (G, page)
+        p = jnp.where(valid, p, 0.0)
+
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == ni - 1)
+    def _out():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(q: jnp.ndarray, k_pool: jnp.ndarray,
+                                  v_pool: jnp.ndarray,
+                                  block_table: jnp.ndarray,
+                                  lengths: jnp.ndarray, *,
+                                  interpret: bool = False) -> jnp.ndarray:
+    """q (B, Hq, hd); k_pool/v_pool (n_pages, page, Hkv, hd);
+    block_table (B, max_blocks) page ids; lengths (B,) live tokens per
+    slot -> (B, Hq, hd).
+
+    A slot's output attends over virtual positions ``0..lengths[b]-1``,
+    read through its block-table row; a slot with ``lengths[b] == 0``
+    returns zeros (free lane, output discarded by the scheduler)."""
+    B, Hq, hd = q.shape
+    _, page, Hkv, _ = k_pool.shape
+    max_blocks = block_table.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    block_table = block_table.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block table + lengths
+        grid=(B, Hkv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, i, bt, ln: (b, h, 0, 0)),
+            # the fused gather: the index map dereferences the prefetched
+            # block table, so page i of slot b streams straight from the
+            # pool — no materialised view
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, i, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, page=page, scale=hd ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, qg, k_pool, v_pool)
+    return out.reshape(B, Hq, hd)

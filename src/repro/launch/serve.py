@@ -33,6 +33,12 @@ def main():
                     choices=["bf16", "int8_dequant", "int8_fused",
                              "int4_dequant", "int4_fused"])
     ap.add_argument("--mode", default="streamed", choices=["streamed", "fused"])
+    ap.add_argument("--decode-backend", default="sdpa",
+                    choices=["sdpa", "math", "split_kv", "pallas"],
+                    help="decode attention route; with --paged, 'pallas' "
+                         "runs the fused block-table kernel (pages read "
+                         "in place, no gathered view; interpret mode on "
+                         "CPU), anything else the gather+SDPA reference")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--timed", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -66,7 +72,7 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    model = Model(cfg)
+    model = Model(cfg, decode_backend=args.decode_backend)
     params = model.init(jax.random.PRNGKey(args.seed))
     engine = DecodeEngine(model, params, quant_path=args.quant)
 
@@ -125,9 +131,10 @@ def serve_continuous(engine: DecodeEngine, cfg, args):
         prefill_chunk=args.prefill_chunk)
     n_tok = sum(len(s.tokens) for s in res.sessions.values())
     layout = "paged" if args.paged else "contiguous"
+    backend = engine.model.decode_backend
     print(f"served {len(res.sessions)} sessions through {args.slots} slots "
-          f"({args.dispatch}, {layout}): {n_tok} tokens in {res.ticks} "
-          f"ticks / {res.decode_steps} decode steps, "
+          f"({args.dispatch}, {layout}, attn={backend}): {n_tok} tokens in "
+          f"{res.ticks} ticks / {res.decode_steps} decode steps, "
           f"{res.tokens_per_s:.1f} tok/s aggregate")
     if args.paged:
         max_blocks = -(-max_len // args.page_size)
@@ -137,6 +144,18 @@ def serve_continuous(engine: DecodeEngine, cfg, args):
               f"(full backing {full}, "
               f"oversubscription x{(full - 1) / max(pages - 1, 1):.2f}), "
               f"preemptions={res.preemptions}")
+        if res.step_kv_blocks:
+            from repro.kernels.paged_decode_attention.ops import (
+                serving_traffic_bytes)
+            tb = serving_traffic_bytes(res.step_kv_blocks, cfg,
+                                       page_size=args.page_size,
+                                       n_slots=args.slots,
+                                       max_blocks=max_blocks)
+            route = "fused-in-place" if backend == "pallas" else "gather+sdpa"
+            moved = tb["fused"] if backend == "pallas" else tb["gather_sdpa"]
+            print(f"per-step KV traffic ({route}): {moved / 1024:.1f} KiB "
+                  f"(fused would move {tb['fused'] / 1024:.1f}, gather "
+                  f"{tb['gather_sdpa'] / 1024:.1f})")
     compiled = (f"compiled {res.step_cache_size}x"
                 if res.step_cache_size is not None else
                 "compile count n/a (staged/eager executors)")

@@ -7,7 +7,9 @@ Backends for the decode step:
   split_kv — flash-decoding style partitioned KV with partial-softmax
              combine (what GSPMD emits for a sequence-sharded cache)
   pallas   — the Pallas TPU kernel (kernels/decode_attention), interpret
-             mode on CPU
+             mode on CPU; on the paged path this selects the FUSED
+             block-table kernel (kernels/paged_decode_attention) that
+             reads pages in place — no paged_view gather
 """
 from __future__ import annotations
 
@@ -271,11 +273,29 @@ def _split_kv_decode(q, k_cache, v_cache, mask, cfg, n_partitions: int = 8):
 
 
 def _decode_attend(q, k_read, v_read, mask, cfg: ArchConfig, backend: str,
-                   out_dtype, k_scale=None, v_scale=None) -> jnp.ndarray:
+                   out_dtype, k_scale=None, v_scale=None,
+                   paged=None) -> jnp.ndarray:
     """Run the selected decode backend over an (already updated) K/V view.
 
     Shared by the contiguous and paged decode paths — the backend matrix
-    (§6) is identical in both layouts."""
+    (§6) is identical in both layouts, and this is the ONE place backend
+    routing happens.  ``paged`` is the
+    ``(k_pool, v_pool, block_table, lengths)`` tuple of the paged cache
+    (``k_read``/``v_read`` are None then): ``backend="pallas"`` routes
+    to the fused paged kernel, which reads pages in place through the
+    block table — no virtual view is ever materialised — while every
+    other backend runs over the gathered ``paged_view`` reference."""
+    if paged is not None:
+        k_pool, v_pool, block_table, lengths = paged
+        if backend == "pallas":
+            from repro.kernels.paged_decode_attention import ops as pda_ops
+            B = q.shape[0]
+            o = pda_ops.paged_decode_attention(q[:, 0], k_pool, v_pool,
+                                               block_table, lengths)
+            return o.reshape(B, 1,
+                             cfg.n_heads * cfg.head_dim).astype(out_dtype)
+        k_read = paged_view(k_pool, block_table)
+        v_read = paged_view(v_pool, block_table)
     if backend == "sdpa":
         return _sdpa_decode(q, k_read, v_read, mask, cfg,
                             k_scale=k_scale, v_scale=v_scale).astype(out_dtype)
@@ -372,7 +392,14 @@ def attention_decode_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
     Lanes whose block-table row points at the reserved garbage page
     (free / mid-prefill slots) write there and read finite junk — their
     outputs are discarded by the scheduler.  Returns
-    (out, new_k_pool, new_v_pool)."""
+    (out, new_k_pool, new_v_pool).
+
+    ``backend="pallas"`` runs the fused paged kernel
+    (kernels/paged_decode_attention): the gather is fused into the SDPA
+    sweep and pages are read in place, so per-step KV traffic follows
+    *allocated* pages instead of 3x the constant virtual view.  Every
+    other backend takes the gather+SDPA reference route through the
+    materialised ``paged_view``."""
     B = x.shape[0]
     q, k_new, v_new = _project_qkv(p, x, cfg)
     q = apply_rope_fn(q, angles)
@@ -383,9 +410,11 @@ def attention_decode_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
     off = pos % page_size
     k_pool = k_pool.at[page, off].set(k_new[:, 0].astype(k_pool.dtype))
     v_pool = v_pool.at[page, off].set(v_new[:, 0].astype(v_pool.dtype))
-    k_view = paged_view(k_pool, block_table)
-    v_view = paged_view(v_pool, block_table)
-    out = _decode_attend(q, k_view, v_view, mask, cfg, backend, x.dtype)
+    # routing (fused in-place kernel vs gathered-view reference) lives in
+    # _decode_attend; a slot's live length is pos+1 (the row just
+    # written), matching decode_mask(pos, ...) exactly
+    out = _decode_attend(q, None, None, mask, cfg, backend, x.dtype,
+                         paged=(k_pool, v_pool, block_table, pos + 1))
     from repro.quant.paths import matmul
     return matmul(out, p["wo"]), k_pool, v_pool
 

@@ -562,7 +562,13 @@ class Model:
         With a slotted cache (``pos`` is a (B,) vector) every sequence
         advances at its own position: per-slot write offsets and (B, S)
         length masks, same compiled program every step regardless of
-        which sessions occupy which slots."""
+        which sessions occupy which slots.
+
+        With a paged cache the step goes through
+        ``attention_decode_paged``; the model's ``decode_backend``
+        selects the route — ``"pallas"`` runs the fused block-table
+        kernel (pages read in place, no gathered view), anything else
+        the gather+SDPA reference."""
         cfg = self.cfg
         x = self.embed_tokens(params, tokens)
         B = x.shape[0]

@@ -34,6 +34,12 @@ admission never stalls live sessions.  Shapes stay constant throughout:
 the paged decode step is still ONE compiled program; page residency is
 pure data (the block table).
 
+The paged step's attention route follows the Model's ``decode_backend``:
+``"pallas"`` runs the fused block-table kernel
+(kernels/paged_decode_attention — pages read in place, per-step KV
+traffic tracked in ``step_kv_blocks``), any other backend takes the
+gather+SDPA reference through the materialised ``paged_view``.
+
 Scheduling is host-side Python; the per-token hot path is exactly the
 paper's ``full_jit`` arm — one dispatch per decode step for the whole
 slot batch — and the eager / stage_jit executors (core.dispatch) remain
@@ -134,6 +140,10 @@ class ContinuousResult:
     events: List[Event]
     preemptions: int = 0             # paged: sessions requeued for pages
                                      # (this run() call only, like wall_s)
+    step_kv_blocks: Optional[List[int]] = None
+    # paged: per decode step, summed ceil(live_len/page_size) over the
+    # active lanes — the pages the fused kernel actually walks (this
+    # run() call only).  None for contiguous runs.
 
     def tokens_for(self, session_id: str) -> np.ndarray:
         return self.sessions[session_id].tokens
@@ -210,6 +220,7 @@ class SlotScheduler:
             self.prefill_chunk = prefill_chunk
             self.allocator = BlockAllocator(n_pages)
             self.preemptions = 0
+            self.step_kv_blocks: List[int] = []
             self._bt = np.zeros((n_slots, self.max_blocks), np.int32)
             self._bt_dirty = True
             self._pos = np.zeros((n_slots,), np.int32)
@@ -529,6 +540,13 @@ class SlotScheduler:
             toks = np.zeros((self.n_slots, 1), np.int32)
             for slot, sess in active:
                 toks[slot, 0] = sess.tokens[-1]
+            if self.paged:
+                # this step reads blocks 0..ceil((pos+1)/page)-1 per live
+                # lane (pos+1 counts the row the step writes) — the KV
+                # traffic of the fused in-place kernel
+                self.step_kv_blocks.append(sum(
+                    -(-(sess.pos + 1) // self.page_size)
+                    for _, sess in active))
             t0 = time.perf_counter()
             logits, self.cache = self._run_step(jnp.asarray(toks))
             nxt = self._sample(logits[:, -1], 2 * self.tick_count + 1)
@@ -559,6 +577,7 @@ class SlotScheduler:
         fin0 = len(self.finished)
         tick0 = self.tick_count
         pre0 = self.preemptions
+        blk0 = len(self.step_kv_blocks) if self.paged else 0
         limit = self.max_ticks
         if limit is None:
             def ticks_for(s: _Session) -> int:
@@ -596,4 +615,6 @@ class SlotScheduler:
             tokens_per_s=n_tokens / wall if wall > 0 else float("nan"),
             step_cache_size=self.step_cache_size(),
             launches_per_step=self.launches_per_step,
-            events=self.events, preemptions=self.preemptions - pre0)
+            events=self.events, preemptions=self.preemptions - pre0,
+            step_kv_blocks=(self.step_kv_blocks[blk0:] if self.paged
+                            else None))
