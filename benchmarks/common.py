@@ -1,17 +1,73 @@
 """Shared benchmark plumbing: CSV emission per the harness contract
-(``name,us_per_call,derived``)."""
+(``name,us_per_call,derived``) plus an in-process results registry so
+``benchmarks/run.py --json`` can dump machine-readable rows (the
+``BENCH_*.json`` perf trajectory tracked across PRs)."""
 from __future__ import annotations
 
-import io
-import sys
-from typing import Iterable, Optional
+from typing import Dict, List, Union
+
+# rows emitted since the last take_results() call (one benchmark table's
+# worth when driven by benchmarks/run.py)
+RESULTS: List[dict] = []
+
+
+def _parse_fields(derived: str) -> Dict[str, Union[str, float, bool]]:
+    """Parse the free-form ``k=v`` pairs of a derived column into typed
+    values (floats where they parse, True/False for booleans) so the
+    JSON dump is queryable without re-tokenising strings."""
+    out: Dict[str, Union[str, float, bool]] = {}
+    for part in derived.split():
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        if v in ("True", "False"):
+            out[k] = v == "True"
+            continue
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.3f},{derived}"
     print(line, flush=True)
+    RESULTS.append({"name": name, "us_per_call": us_per_call,
+                    "derived": derived, "fields": _parse_fields(derived)})
     return line
+
+
+def take_results() -> List[dict]:
+    """Drain and return the rows emitted since the previous call."""
+    out = RESULTS[:]
+    RESULTS.clear()
+    return out
 
 
 def header(title: str):
     print(f"# === {title} ===", flush=True)
+
+
+def warm_wave(sched, reqs) -> None:
+    """Run a throwaway wave of ``reqs`` (session ids prefixed ``warm_``)
+    through ``sched`` so the measured wave sees only steady-state
+    dispatches — the paper's warmup discipline, shared by every serving
+    table."""
+    import dataclasses
+    for r in reqs:
+        sched.submit(dataclasses.replace(r,
+                                         session_id="warm_" + r.session_id))
+    sched.run()
+
+
+def measured_step_walls(res):
+    """Concatenated shared-batch decode-step walls of the measured
+    (non-``warm_``) sessions of a ContinuousResult, for percentile
+    reporting."""
+    import numpy as np
+    walls = [s.step_times_s for s in res.sessions.values()
+             if s.step_times_s and not s.session_id.startswith("warm_")]
+    assert walls, ("no measured step walls — was the scheduler run with "
+                   "timed=False, or did every session finish at prefill?")
+    return np.concatenate(walls)

@@ -3,6 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.py).
 ``--quick`` shrinks session counts for CI-speed runs; the default run is
 the paper-faithful protocol (N=10 sessions on the headline A/B).
+``--json <path>`` additionally writes every emitted row (with the
+derived ``k=v`` pairs parsed into typed fields) plus per-table status
+and wall time to a machine-readable file, so the perf trajectory
+(``BENCH_*.json``) can be tracked across PRs.
 
 Every selected table runs even if an earlier one fails; any failure
 makes the process exit nonzero (with a ``# FAILED`` line per broken
@@ -10,6 +14,7 @@ table), so a CI stage over a sweep can never silently pass.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 import traceback
@@ -18,15 +23,25 @@ import traceback
 def main() -> None:
     quick = "--quick" in sys.argv
     only = None
-    for a in sys.argv[1:]:
+    json_path = None
+    argv = sys.argv[1:]
+    for i, a in enumerate(argv):
         if a.startswith("--only="):
             only = a.split("=", 1)[1]
+        elif a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
+        elif a == "--json":
+            if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
+                print("# FAILED: --json requires a path argument",
+                      flush=True)
+                sys.exit(2)
+            json_path = argv[i + 1]
 
-    from benchmarks import (fig9_cost_ladder, table1_rfloor_matrix,
+    from benchmarks import (common, fig9_cost_ladder, table1_rfloor_matrix,
                             table2_dispatch_ab, table4_batch_sweep,
                             table6_attention_backends, table7_quant_matrix,
                             table8_accounting, table9_continuous_batching,
-                            table10_paged_kv)
+                            table10_paged_kv, table11_launch_overhead)
     suites = {
         "table1": table1_rfloor_matrix.run,
         "table2": lambda: table2_dispatch_ab.run(quick=quick),
@@ -37,6 +52,7 @@ def main() -> None:
         "fig9": fig9_cost_ladder.run,
         "table9": lambda: table9_continuous_batching.run(quick=quick),
         "table10": lambda: table10_paged_kv.run(quick=quick),
+        "table11": lambda: table11_launch_overhead.run(quick=quick),
     }
     if only is not None and only not in suites:
         print(f"# FAILED: unknown table {only!r} "
@@ -44,16 +60,32 @@ def main() -> None:
         sys.exit(2)
     t0 = time.time()
     failed = []
+    report = {"quick": quick, "only": only, "tables": {}}
     for name, fn in suites.items():
         if only and name != only:
             continue
+        common.take_results()            # drop stray rows from prior table
+        t_table = time.time()
+        ok = True
         try:
             fn()
         except Exception:
             traceback.print_exc()
             print(f"# FAILED: {name}", flush=True)
             failed.append(name)
-    print(f"# total {time.time() - t0:.1f}s", flush=True)
+            ok = False
+        report["tables"][name] = {
+            "ok": ok,
+            "seconds": round(time.time() - t_table, 3),
+            "rows": common.take_results(),
+        }
+    report["total_s"] = round(time.time() - t0, 3)
+    report["failed"] = failed
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {json_path}", flush=True)
+    print(f"# total {report['total_s']:.1f}s", flush=True)
     if failed:
         print(f"# {len(failed)} table(s) failed: {', '.join(failed)}",
               flush=True)

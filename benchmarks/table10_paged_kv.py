@@ -36,12 +36,12 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import emit, header
+from benchmarks.common import emit, header, measured_step_walls, warm_wave
 from repro.configs import get_config
 from repro.kernels.paged_decode_attention.ops import serving_traffic_bytes
 from repro.launch.serve import mixed_requests
 from repro.models import Model
-from repro.serving import SessionRequest, SlotScheduler
+from repro.serving import SlotScheduler
 
 PAGE_SIZES = (4, 8, 16)
 OVERSUB_FRACTIONS = (1.0, 0.75, 0.5)   # pool as a fraction of full backing
@@ -51,17 +51,11 @@ def _serve(model, params, reqs, *, slots, max_len, warm=True, **kw):
     sched = SlotScheduler(model, params, n_slots=slots, max_len=max_len,
                           **kw)
     if warm:
-        for r in reqs:   # warmup wave: compile prefill lengths + step
-            sched.submit(SessionRequest("warm_" + r.session_id,
-                                        r.prompt, r.max_new_tokens))
-        sched.run()
+        warm_wave(sched, reqs)   # compile prefill lengths + step
     for r in reqs:
         sched.submit(r)
     res = sched.run()
-    steps = np.concatenate([
-        s.step_times_s for s in res.sessions.values()
-        if s.step_times_s and not s.session_id.startswith("warm_")])
-    p50, p95 = np.percentile(steps, [50, 95]) * 1e3
+    p50, p95 = np.percentile(measured_step_walls(res), [50, 95]) * 1e3
     return res, p50, p95
 
 

@@ -15,11 +15,11 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import emit, header
+from benchmarks.common import emit, header, measured_step_walls, warm_wave
 from repro.configs import get_config
 from repro.launch.serve import mixed_requests
 from repro.models import Model
-from repro.serving import SessionRequest, SlotScheduler
+from repro.serving import SlotScheduler
 
 SLOT_COUNTS = (1, 2, 4, 8)
 
@@ -42,22 +42,16 @@ def run(quick: bool = False) -> None:
         max_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 1
         sched = SlotScheduler(model, params, n_slots=slots,
                               max_len=max_len)
-        for r in reqs:   # warmup wave: compile prefill lengths + step
-            sched.submit(SessionRequest("warm_" + r.session_id,
-                                        r.prompt, r.max_new_tokens))
-        sched.run()
+        warm_wave(sched, reqs)   # compile prefill lengths + step
         for r in reqs:
             sched.submit(r)
         res = sched.run()
-        steps = np.concatenate([
-            s.step_times_s for s in res.sessions.values()
-            if s.step_times_s and not s.session_id.startswith("warm_")])
-        p50, p95 = np.percentile(steps, [50, 95]) * 1e3
+        p50, p95 = np.percentile(measured_step_walls(res), [50, 95]) * 1e3
         throughputs.append(res.tokens_per_s)
         emit(f"continuous/slots{slots}", p50 * 1e3,
              f"tok_s={res.tokens_per_s:.1f} step_p50_ms={p50:.3f} "
              f"step_p95_ms={p95:.3f} compiled_steps={res.step_cache_size} "
-             f"decode_steps={res.decode_steps}")
+             f"decode_steps={res.dispatches}")
         assert res.step_cache_size in (1, None), "decode step recompiled!"
     gain = throughputs[-1] / throughputs[0]
     emit("continuous/scaling", 0.0,

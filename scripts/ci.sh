@@ -11,8 +11,14 @@
 #   smoke-paged       paged serve: oversubscribed pool + chunked prefill
 #   smoke-paged-fused paged serve through the fused Pallas block-table
 #                     kernel (--decode-backend pallas; interpret on CPU)
+#   smoke-horizon     horizon-K fused macro-ticks (--steps-per-tick 4):
+#                     continuous + paged serve, K decode steps per
+#                     compiled dispatch
 #   table10-quick     paged sweep incl. fused-vs-gather token identity
 #                     (benchmarks/run.py exits nonzero on any failure)
+#   table11-quick     launch-overhead A/B: horizon-K amortisation >= K
+#                     across contiguous/paged-gather/paged-pallas, with
+#                     the --json results file exercised
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -56,6 +62,17 @@ stage smoke-paged-fused \
         --decode-backend pallas --slots 3 --sessions 6 --prompt-len 8 \
         --new-tokens 6 --page-size 8 --pages 9 --timed
 
+stage smoke-horizon bash -c "
+    python -m repro.launch.serve --arch qwen2.5-3b --reduced --continuous \
+        --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
+        --steps-per-tick 4 --timed &&
+    python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+        --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
+        --page-size 8 --pages 9 --steps-per-tick 4 --timed"
+
 stage table10-quick python -m benchmarks.run --quick --only=table10
+
+stage table11-quick \
+    python -m benchmarks.run --quick --only=table11 --json bench_table11.json
 
 echo "== ci green =="

@@ -50,6 +50,16 @@ def main():
     ap.add_argument("--sessions", type=int, default=8)
     ap.add_argument("--dispatch", default="full_jit",
                     choices=["eager", "stage_jit", "full_jit"])
+    ap.add_argument("--steps-per-tick", type=int, default=1,
+                    help="horizon K: fuse K decode steps into ONE "
+                         "compiled macro-tick program (on-device "
+                         "sampling, one token transfer per macro-tick) "
+                         "— amortises the per-token Python + dispatch + "
+                         "sync launch tax by ~K; K=1 is the classic "
+                         "one-dispatch-per-token loop.  Requires "
+                         "--dispatch full_jit.  Sweet spot: 4-16 "
+                         "(above that, mid-horizon finishes waste "
+                         "device steps and admission latency grows)")
     # paged KV cache (slot->block-table->page-pool indirection)
     ap.add_argument("--paged", action="store_true",
                     help="serve out of a paged KV cache: a page pool + "
@@ -87,7 +97,9 @@ def main():
 
     if args.mode == "fused":
         res = engine.generate_fused(batch, max_len=max_len,
-                                    n_new=args.new_tokens)
+                                    n_new=args.new_tokens,
+                                    temperature=args.temperature,
+                                    seed=args.seed)
     else:
         res = engine.generate_streamed(batch, max_len=max_len,
                                        n_new=args.new_tokens,
@@ -128,14 +140,21 @@ def serve_continuous(engine: DecodeEngine, cfg, args):
         temperature=args.temperature, seed=args.seed,
         dispatch_mode=args.dispatch, paged=args.paged,
         page_size=args.page_size, n_pages=args.pages,
-        prefill_chunk=args.prefill_chunk)
+        prefill_chunk=args.prefill_chunk,
+        steps_per_tick=args.steps_per_tick, timed=args.timed)
     n_tok = sum(len(s.tokens) for s in res.sessions.values())
     layout = "paged" if args.paged else "contiguous"
     backend = engine.model.decode_backend
     print(f"served {len(res.sessions)} sessions through {args.slots} slots "
           f"({args.dispatch}, {layout}, attn={backend}): {n_tok} tokens in "
-          f"{res.ticks} ticks / {res.decode_steps} decode steps, "
+          f"{res.ticks} ticks / {res.dispatches} decode dispatches, "
           f"{res.tokens_per_s:.1f} tok/s aggregate")
+    if args.steps_per_tick > 1:
+        dec_tok = n_tok - len(res.sessions)   # first tokens come from prefill
+        print(f"horizon-K: steps_per_tick={args.steps_per_tick}, "
+              f"{dec_tok / max(res.dispatches, 1):.1f} tokens per dispatch, "
+              f"host dispatch {res.host_dispatch_s * 1e3:.1f} ms + sync "
+              f"{res.host_sync_s * 1e3:.1f} ms over the run")
     if args.paged:
         max_blocks = -(-max_len // args.page_size)
         full = 1 + args.slots * max_blocks

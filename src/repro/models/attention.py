@@ -182,19 +182,33 @@ def decode_mask(pos: jnp.ndarray, s_max: int, *, ring: bool = False):
     return m
 
 
-def _kv_write(dst: jnp.ndarray, new: jnp.ndarray, write_pos: jnp.ndarray):
+def _kv_write(dst: jnp.ndarray, new: jnp.ndarray, write_pos: jnp.ndarray,
+              active: Optional[jnp.ndarray] = None):
     """Write the new (B, 1, ...) row into the cache's sequence axis.
 
     Scalar ``write_pos`` writes every sequence at the same slot (static
     batch); a (B,) vector writes each sequence at its own slot (slotted
     continuous batching) via a vmapped single-row update.
+
+    ``active`` (B,) bool turns the write into a per-lane no-op: an
+    inactive lane re-writes the row already under its position, so a
+    horizon-K fused tick can keep finished lanes riding along in the
+    batch without corrupting their cache (the multi-step analogue of the
+    ring path's write clamp).
     """
     new = new.astype(dst.dtype)
     if jnp.ndim(write_pos) == 0:
         return jax.lax.dynamic_update_slice_in_dim(dst, new, write_pos, axis=1)
-    return jax.vmap(
-        lambda d, n, p: jax.lax.dynamic_update_slice_in_dim(d, n, p, axis=0)
-    )(dst, new, write_pos)
+    if active is None:
+        return jax.vmap(
+            lambda d, n, p: jax.lax.dynamic_update_slice_in_dim(d, n, p, axis=0)
+        )(dst, new, write_pos)
+
+    def upd(d, n, p, a):
+        old = jax.lax.dynamic_slice_in_dim(d, p, n.shape[0], axis=0)
+        return jax.lax.dynamic_update_slice_in_dim(
+            d, jnp.where(a, n, old), p, axis=0)
+    return jax.vmap(upd)(dst, new, write_pos, active)
 
 
 def _bmask(mask: jnp.ndarray, B: int) -> jnp.ndarray:
@@ -315,7 +329,7 @@ def attention_decode(p: Params, x: jnp.ndarray, k_cache: jnp.ndarray,
                      v_cache: jnp.ndarray, write_pos: jnp.ndarray,
                      mask: jnp.ndarray, angles: jnp.ndarray, cfg: ArchConfig,
                      apply_rope_fn, backend: str = "sdpa",
-                     k_scale=None, v_scale=None):
+                     k_scale=None, v_scale=None, active=None):
     """One-token decode.  x (B,1,D); cache (B,S_max,Hkv,hd).
 
     ``write_pos`` is the cache slot for the new K/V (== absolute pos for a
@@ -323,7 +337,9 @@ def attention_decode(p: Params, x: jnp.ndarray, k_cache: jnp.ndarray,
     batch, (B,) for per-slot positions (continuous batching); ``mask``
     (S_max,) or (B,S_max) marks valid slots (see ``decode_mask``).
     k_scale/v_scale (B,S_max,Hkv) enable the int8-quantised cache
-    (repro.quant.kv).
+    (repro.quant.kv).  ``active`` (B,) bool makes inactive lanes' cache
+    writes per-lane no-ops (horizon-K fused ticks: lanes that hit EOS or
+    their token budget mid-horizon stop mutating state on device).
 
     Returns (out, new_k, new_v[, new_k_scale, new_v_scale])."""
     from repro.quant import kv as kvq
@@ -335,17 +351,17 @@ def attention_decode(p: Params, x: jnp.ndarray, k_cache: jnp.ndarray,
     if quantized:
         kq, ks = kvq.quantize_kv_write(k_new)
         vq, vs = kvq.quantize_kv_write(v_new)
-        k_cache = _kv_write(k_cache, kq, write_pos)
-        v_cache = _kv_write(v_cache, vq, write_pos)
-        k_scale = _kv_write(k_scale, ks, write_pos)
-        v_scale = _kv_write(v_scale, vs, write_pos)
+        k_cache = _kv_write(k_cache, kq, write_pos, active)
+        v_cache = _kv_write(v_cache, vq, write_pos, active)
+        k_scale = _kv_write(k_scale, ks, write_pos, active)
+        v_scale = _kv_write(v_scale, vs, write_pos, active)
         k_read, v_read = k_cache, v_cache    # sdpa folds scales; others
         if backend != "sdpa":                # take a dequantised view
             k_read = kvq.dequantize_kv(k_cache, k_scale, x.dtype)
             v_read = kvq.dequantize_kv(v_cache, v_scale, x.dtype)
     else:
-        k_cache = _kv_write(k_cache, k_new, write_pos)
-        v_cache = _kv_write(v_cache, v_new, write_pos)
+        k_cache = _kv_write(k_cache, k_new, write_pos, active)
+        v_cache = _kv_write(v_cache, v_new, write_pos, active)
         k_read, v_read = k_cache, v_cache
 
     out = _decode_attend(q, k_read, v_read, mask, cfg, backend, x.dtype,
@@ -378,7 +394,8 @@ def attention_decode_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
                            v_pool: jnp.ndarray, block_table: jnp.ndarray,
                            pos: jnp.ndarray, mask: jnp.ndarray,
                            angles: jnp.ndarray, cfg: ArchConfig,
-                           apply_rope_fn, backend: str = "sdpa"):
+                           apply_rope_fn, backend: str = "sdpa",
+                           active=None):
     """One-token decode through a paged KV cache.
 
     x (B,1,D); k_pool/v_pool (n_pages, page_size, Hkv, hd);
@@ -391,7 +408,10 @@ def attention_decode_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
 
     Lanes whose block-table row points at the reserved garbage page
     (free / mid-prefill slots) write there and read finite junk — their
-    outputs are discarded by the scheduler.  Returns
+    outputs are discarded by the scheduler.  ``active`` (B,) bool
+    redirects inactive lanes' writes to the garbage page and freezes
+    their position (horizon-K fused ticks: lanes that finish mid-horizon
+    stop touching their allocated pages).  Returns
     (out, new_k_pool, new_v_pool).
 
     ``backend="pallas"`` runs the fused paged kernel
@@ -407,6 +427,8 @@ def attention_decode_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
     page_size = k_pool.shape[1]
     page = jnp.take_along_axis(block_table, (pos // page_size)[:, None],
                                axis=1)[:, 0]
+    if active is not None:
+        page = jnp.where(active, page, 0)   # 0 = reserved garbage page
     off = pos % page_size
     k_pool = k_pool.at[page, off].set(k_new[:, 0].astype(k_pool.dtype))
     v_pool = v_pool.at[page, off].set(v_new[:, 0].astype(v_pool.dtype))

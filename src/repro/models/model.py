@@ -514,13 +514,14 @@ class Model:
     # decode
     # ------------------------------------------------------------------
     def _attn_block_decode(self, bp, x, k_cache, v_cache, write_pos, mask,
-                           angles, backend=None, k_scale=None, v_scale=None):
+                           angles, backend=None, k_scale=None, v_scale=None,
+                           active=None):
         cfg = self.cfg
         res = attn.attention_decode(
             bp["attn"], apply_norm(x, bp["norm1"]), k_cache, v_cache,
             write_pos, mask, angles, cfg, apply_rope,
             backend=backend or self.decode_backend,
-            k_scale=k_scale, v_scale=v_scale)
+            k_scale=k_scale, v_scale=v_scale, active=active)
         if k_scale is not None:
             a_out, k_cache, v_cache, k_scale, v_scale = res
         else:
@@ -536,12 +537,13 @@ class Model:
         return x + m_out, k_cache, v_cache
 
     def _attn_block_decode_paged(self, bp, x, k_pool, v_pool, block_table,
-                                 pos, mask, angles, backend=None):
+                                 pos, mask, angles, backend=None,
+                                 active=None):
         cfg = self.cfg
         a_out, k_pool, v_pool = attn.attention_decode_paged(
             bp["attn"], apply_norm(x, bp["norm1"]), k_pool, v_pool,
             block_table, pos, mask, angles, cfg, apply_rope,
-            backend=backend or self.decode_backend)
+            backend=backend or self.decode_backend, active=active)
         x = x + a_out
         h = apply_norm(x, bp["norm2"])
         if cfg.family == "moe":
@@ -555,7 +557,8 @@ class Model:
             bp["mamba"], apply_norm(x, bp.get("norm1")), h, conv, self.cfg)
         return x + y, h, conv
 
-    def decode_step(self, params: Params, cache: Cache, tokens: jnp.ndarray
+    def decode_step(self, params: Params, cache: Cache, tokens: jnp.ndarray,
+                    active: Optional[jnp.ndarray] = None
                     ) -> Tuple[jnp.ndarray, Cache]:
         """One new token per sequence.  tokens (B,1) or (B,1,K).
 
@@ -568,13 +571,29 @@ class Model:
         ``attention_decode_paged``; the model's ``decode_backend``
         selects the route — ``"pallas"`` runs the fused block-table
         kernel (pages read in place, no gathered view), anything else
-        the gather+SDPA reference."""
+        the gather+SDPA reference.
+
+        ``active`` (B,) bool (slotted caches, attention families only)
+        turns inactive lanes into device-side no-ops: their K/V write is
+        clamped (contiguous: row rewrite; paged: redirected to the
+        garbage page) and their position does not advance.  This is what
+        lets a horizon-K fused tick (``decode_steps``) carry lanes that
+        hit EOS or their token budget mid-horizon without corrupting
+        their cache — their (garbage) logits still come out and are
+        discarded by the sampler clamp."""
         cfg = self.cfg
         x = self.embed_tokens(params, tokens)
         B = x.shape[0]
         pos = cache["pos"]
         slotted = pos.ndim == 1
         paged = "block_table" in cache
+        if active is not None:
+            if not slotted or cfg.family not in ("dense", "vlm", "audio",
+                                                 "moe"):
+                raise NotImplementedError(
+                    "active-lane masking targets slotted caches of the "
+                    "attention families")
+            active = jnp.asarray(active, bool)
         if self.angle_fn:
             if paged:
                 # virtual per-slot length = block-table span; the write
@@ -602,7 +621,8 @@ class Model:
                 def body(h, inp):
                     bp, kp, vp = inp
                     h, kp, vp = self._attn_block_decode_paged(
-                        bp, h, kp, vp, block_table, pos, mask, angles)
+                        bp, h, kp, vp, block_table, pos, mask, angles,
+                        active=active)
                     return h, (kp, vp)
                 x, (k, v) = jax.lax.scan(
                     body, x, (params["blocks"], cache["k"], cache["v"]))
@@ -612,7 +632,7 @@ class Model:
                     bp, kc, vc, ks, vs = inp
                     h, kc, vc, ks, vs = self._attn_block_decode(
                         bp, h, kc, vc, write_pos, mask, angles,
-                        k_scale=ks, v_scale=vs)
+                        k_scale=ks, v_scale=vs, active=active)
                     return h, (kc, vc, ks, vs)
                 x, (k, v, ks, vs) = jax.lax.scan(
                     body, x, (params["blocks"], cache["k"], cache["v"],
@@ -622,7 +642,8 @@ class Model:
                 def body(h, inp):
                     bp, kc, vc = inp
                     h, kc, vc = self._attn_block_decode(bp, h, kc, vc, write_pos,
-                                                        mask, angles)
+                                                        mask, angles,
+                                                        active=active)
                     return h, (kc, vc)
                 x, (k, v) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
                 new_cache.update(k=k, v=v)
@@ -656,9 +677,68 @@ class Model:
             new_cache.update(h=jnp.concatenate(hs_out, axis=0),
                              conv=jnp.concatenate(conv_out, axis=0),
                              k=jnp.stack(k_out, axis=0), v=jnp.stack(v_out, axis=0))
-        new_cache["pos"] = pos + 1
+        new_cache["pos"] = (pos + 1 if active is None
+                            else pos + active.astype(jnp.int32))
         x = apply_norm(x, params["final_norm"])
         return self.lm_logits(params, x), new_cache
+
+    def decode_steps(self, params: Params, cache: Cache, tokens: jnp.ndarray,
+                     key: jnp.ndarray, steps_left: Optional[jnp.ndarray] = None,
+                     *, horizon: int, temperature: float = 0.0,
+                     top_k: int = 0, eos_id: Optional[int] = None
+                     ) -> Tuple[jnp.ndarray, Cache]:
+        """Advance every sequence up to ``horizon`` tokens inside ONE
+        compiled program: ``lax.scan`` over ``decode_step`` with
+        on-device sampling (greedy argmax, or categorical with
+        ``fold_in(key, step)`` per-step keys), returning the token
+        matrix (B, horizon) in a single transfer.
+
+        This is the paper's CUDA-Graphs lesson applied across steps: the
+        per-token host round-trip (Python + dispatch + sync) is paid
+        once per *macro-tick* instead of once per token.
+
+        ``steps_left`` (B,) int32 caps each lane's real steps (slotted
+        caches, attention families): a lane stops being ``active`` once
+        its budget is spent or — with ``eos_id`` set — once it samples
+        EOS, after which its cache writes are no-ops, its position
+        freezes, and its emitted tokens repeat the last real one (the
+        host trims by its own ``steps_left``/EOS accounting, so the
+        padding is never observed).  ``steps_left=None`` runs every lane
+        for the full horizon (the single-stream fused-generation path —
+        any family, any cache layout).
+
+        Greedy streams are token-identical to ``horizon=1`` stepping;
+        stochastic sampling draws from the same family but under
+        per-step folded keys (one key per device step, as the
+        single-step scheduler does per tick)."""
+        from repro.serving.sampling import sample
+        masked = steps_left is not None
+        if masked:
+            if self.cfg.n_codebooks:
+                raise NotImplementedError(
+                    "steps_left masking serves single-codebook archs")
+            steps_left = jnp.asarray(steps_left, jnp.int32)
+        if eos_id is not None and not masked:
+            raise NotImplementedError("eos_id requires steps_left masking")
+
+        def body(carry, step):
+            cache, tok, alive = carry
+            active = (alive & (step < steps_left)) if masked else None
+            logits, cache = self.decode_step(params, cache, tok,
+                                             active=active)
+            k = jax.random.fold_in(key, step)
+            nxt = sample(logits[:, -1], k, temperature=temperature,
+                         top_k=top_k)
+            if masked:
+                nxt = jnp.where(active, nxt, tok[:, 0])
+                if eos_id is not None:
+                    alive = alive & ~(active & (nxt == eos_id))
+            return (cache, nxt[:, None], alive), nxt
+
+        alive0 = jnp.ones((tokens.shape[0],), bool)
+        (cache, _, _), toks = jax.lax.scan(body, (cache, tokens, alive0),
+                                           jnp.arange(horizon))
+        return jnp.moveaxis(toks, 0, 1), cache
 
     # ------------------------------------------------------------------
     # dispatch A/B decomposition (paper §5)

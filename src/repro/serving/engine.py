@@ -48,6 +48,13 @@ class DecodeEngine:
         donate = (1,) if donate_cache else ()
         self._prefill = jax.jit(model.prefill)
         self._step = jax.jit(model.decode_step, donate_argnums=donate)
+        # the fused-generation driver: same multi-step program family as
+        # the scheduler's horizon-K macro-ticks (one executable per
+        # distinct horizon)
+        self._steps_fused = jax.jit(
+            model.decode_steps,
+            static_argnames=("horizon", "temperature", "top_k", "eos_id"),
+            donate_argnums=donate)
 
     # -------------------------------------------------------------- API
     def new_cache(self, batch: int, max_len: int):
@@ -96,30 +103,26 @@ class DecodeEngine:
         return GenerationResult(tokens, times, tps)
 
     def generate_fused(self, batch: Dict, *, max_len: int, n_new: int,
-                       seed: int = 0) -> GenerationResult:
-        """N tokens inside one compiled program (lax.scan over decode
-        steps): zero per-token host dispatch — the beyond-CUDA-Graphs
-        schedule available on an AOT-compiled stack."""
+                       seed: int = 0, temperature: float = 0.0,
+                       top_k: int = 0) -> GenerationResult:
+        """N tokens inside one compiled program — zero per-token host
+        dispatch, the beyond-CUDA-Graphs schedule available on an
+        AOT-compiled stack.  Runs the SAME multi-step program
+        (``Model.decode_steps``) the continuous scheduler's horizon-K
+        macro-ticks dispatch, with the horizon spanning the whole
+        generation and every lane active throughout."""
         logits, cache = self.prefill(batch, max_len)
-        tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-
-        @jax.jit
-        def roll(params, cache, tok0):
-            def body(carry, _):
-                cache, tok = carry
-                logits, cache = self.model.decode_step(params, cache,
-                                                       self._token_shape(tok))
-                tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-                return (cache, tok), tok
-            (cache, _), toks = jax.lax.scan(body, (cache, tok0), None,
-                                            length=n_new - 1)
-            return toks
-
+        key = jax.random.PRNGKey(seed)
+        tok0 = sample(logits[:, -1], key, temperature=temperature,
+                      top_k=top_k)
         t0 = time.perf_counter()
-        toks = jax.block_until_ready(roll(self.params, cache, tok0))
+        toks, _ = self._steps_fused(self.params, cache,
+                                    self._token_shape(tok0), key, None,
+                                    horizon=n_new - 1,
+                                    temperature=temperature, top_k=top_k)
+        toks = jax.block_until_ready(toks)
         dt = time.perf_counter() - t0
-        tokens = jnp.concatenate([tok0[:, None],
-                                  jnp.moveaxis(toks, 0, 1)], axis=1)
+        tokens = jnp.concatenate([tok0[:, None], toks], axis=1)
         return GenerationResult(tokens, [], (n_new - 1) / dt)
 
     def generate_continuous(self, sessions, *, n_slots: int, max_len: int,
@@ -127,7 +130,10 @@ class DecodeEngine:
                             seed: int = 0, dispatch_mode: str = "full_jit",
                             paged: bool = False, page_size: int = 16,
                             n_pages: Optional[int] = None,
-                            prefill_chunk: Optional[int] = None):
+                            prefill_chunk: Optional[int] = None,
+                            steps_per_tick: int = 1,
+                            eos_id: Optional[int] = None,
+                            timed: bool = True):
         """Continuous batching: serve ``sessions`` (SessionRequest list)
         through a fixed-capacity slotted cache — admission, per-slot
         prefill, shared batched decode, eviction, FIFO backfill.  The
@@ -137,15 +143,21 @@ class DecodeEngine:
         ``paged=True`` serves out of a page pool with per-slot block
         tables instead of per-slot ``max_len`` rows — ``n_pages`` below
         full backing oversubscribes memory, ``prefill_chunk`` admits
-        long prompts chunk-by-chunk between decode ticks.  Returns a
-        ``ContinuousResult`` (see repro.serving.scheduler)."""
+        long prompts chunk-by-chunk between decode ticks.
+        ``steps_per_tick=K > 1`` fuses K decode steps into one
+        macro-tick program (on-device sampling, one token transfer per
+        macro-tick) — the horizon-K launch-overhead amortisation;
+        ``eos_id`` ends sessions early on sampling that token.  Returns
+        a ``ContinuousResult`` (see repro.serving.scheduler)."""
         from repro.serving.scheduler import SlotScheduler
         sched = SlotScheduler(self.model, self.params, n_slots=n_slots,
                               max_len=max_len, dispatch_mode=dispatch_mode,
                               temperature=temperature, top_k=top_k,
                               seed=seed, kv_dtype=self.kv_dtype,
                               paged=paged, page_size=page_size,
-                              n_pages=n_pages, prefill_chunk=prefill_chunk)
+                              n_pages=n_pages, prefill_chunk=prefill_chunk,
+                              steps_per_tick=steps_per_tick, eos_id=eos_id,
+                              timed=timed)
         for req in sessions:
             sched.submit(req)
         return sched.run()

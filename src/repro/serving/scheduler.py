@@ -45,6 +45,26 @@ paper's ``full_jit`` arm — one dispatch per decode step for the whole
 slot batch — and the eager / stage_jit executors (core.dispatch) remain
 available for the dispatch-tax A/B on the live continuous workload
 (contiguous layout only; paged serving is full_jit-only).
+
+**Horizon-K fused ticks** (``steps_per_tick=K > 1``) take the paper's
+CUDA-Graphs finding one level further: even the full_jit arm pays one
+Python round-trip + dispatch + sync *per token*, and on fast hardware
+that launch tax — not bandwidth — caps batch-1 decode.  A macro-tick
+runs ONE compiled program (``Model.decode_steps``: ``lax.scan`` over
+``decode_step`` with on-device sampling) that advances every live slot
+up to K tokens; lanes that hit EOS or their token budget mid-horizon
+are masked no-ops on device (write-clamped like the ring path, frozen
+pos), the (n_slots, K) token matrix returns in a single transfer, and
+the host reconciles afterwards — trimming over-generated tokens,
+evicting finished sessions, reclaiming their pages.  In paged mode the
+``BlockAllocator`` pre-reserves lookahead pages covering each slot's
+granted horizon BEFORE dispatch (shrinking the grant, preempting
+younger sessions, or preempting the needy slot itself exactly like the
+K=1 page-fault path), so the device never outruns its block table.
+Admission and chunked prefill interleave between macro-ticks.  Greedy
+output is token-identical to K=1 on every route (contiguous,
+paged-gather, paged-pallas); there is exactly ONE compiled multi-step
+program per (backend, K) reused through session churn.
 """
 from __future__ import annotations
 
@@ -132,7 +152,7 @@ class ContinuousResult:
     """Outcome of one continuous-batching run."""
     sessions: Dict[str, SessionResult]
     ticks: int                       # scheduler iterations
-    decode_steps: int                # batched decode dispatches
+    decode_steps: int                # batched decode dispatches (cumulative)
     wall_s: float
     tokens_per_s: float              # aggregate generated tokens / wall
     step_cache_size: Optional[int]   # compiled decode-step count (full_jit)
@@ -144,6 +164,14 @@ class ContinuousResult:
     # paged: per decode step, summed ceil(live_len/page_size) over the
     # active lanes — the pages the fused kernel actually walks (this
     # run() call only).  None for contiguous runs.
+    steps_per_tick: int = 1          # horizon K of the fused macro-tick
+    dispatches: int = 0              # decode dispatches this run() call
+    run_tokens: int = 0              # tokens generated this run() call
+    host_dispatch_s: float = 0.0     # host wall building + dispatching
+                                     # decode work this run() call (the
+                                     # launch term the horizon amortises)
+    host_sync_s: float = 0.0         # host wall blocked on the per-tick
+                                     # token transfer this run() call
 
     def tokens_for(self, session_id: str) -> np.ndarray:
         return self.sessions[session_id].tokens
@@ -184,13 +212,20 @@ class SlotScheduler:
                  top_k: int = 0, seed: int = 0, kv_dtype=None,
                  max_ticks: Optional[int] = None, paged: bool = False,
                  page_size: int = 16, n_pages: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 steps_per_tick: int = 1, eos_id: Optional[int] = None,
+                 timed: bool = True):
         assert n_slots >= 1
         assert dispatch_mode in MODES, dispatch_mode
+        assert steps_per_tick >= 1
         cfg = model.cfg
         if cfg.n_codebooks:
             raise NotImplementedError(
                 "continuous batching serves single-codebook archs")
+        if steps_per_tick > 1 and dispatch_mode != "full_jit":
+            raise NotImplementedError(
+                "horizon-K fused ticks ARE the one-program arm; the "
+                "stage/eager dispatch A/B only decomposes single steps")
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -200,6 +235,11 @@ class SlotScheduler:
         self.top_k = top_k
         self.key = jax.random.PRNGKey(seed)
         self.max_ticks = max_ticks
+        self.steps_per_tick = steps_per_tick
+        self.eos_id = eos_id
+        self.timed = timed
+        self.host_dispatch_s = 0.0
+        self.host_sync_s = 0.0
 
         self.paged = paged
         if paged:
@@ -224,6 +264,7 @@ class SlotScheduler:
             self._bt = np.zeros((n_slots, self.max_blocks), np.int32)
             self._bt_dirty = True
             self._pos = np.zeros((n_slots,), np.int32)
+            self._pos_dirty = True
             self.cache = model.init_cache(
                 n_slots, max_len, kv_dtype=kv_dtype, paged=True,
                 page_size=page_size, n_pages=n_pages)
@@ -248,13 +289,29 @@ class SlotScheduler:
                                          donate_argnums=(2,))
         if dispatch_mode == "full_jit":
             # the production hot path: the whole step is one program,
-            # cache donated so steps run allocation-free
-            self._step_jit = jax.jit(model.decode_step, donate_argnums=(1,))
+            # cache donated so steps run allocation-free.  With
+            # steps_per_tick > 1 the program is the horizon-K multi-step
+            # scan (decode_steps) — ONE executable per (backend, K),
+            # dispatched once per macro-tick; lanes that finish
+            # mid-horizon are masked off on device (steps_left/EOS), so
+            # partial horizons never need a second program.
+            self._step_jit = None
+            self._steps_jit = None
+            if steps_per_tick > 1:
+                self._steps_jit = jax.jit(
+                    model.decode_steps,
+                    static_argnames=("horizon", "temperature", "top_k",
+                                     "eos_id"),
+                    donate_argnums=(1,))
+            else:
+                self._step_jit = jax.jit(model.decode_step,
+                                         donate_argnums=(1,))
             self._program = None
         else:
             # dispatch A/B hooks: same math through the eager/stage_jit
             # executors of the StepProgram decomposition
             self._step_jit = None
+            self._steps_jit = None
             self._program = model.step_program(params, self.cache)
             self._executor = self._program.executor(dispatch_mode)
 
@@ -273,9 +330,13 @@ class SlotScheduler:
 
     def step_cache_size(self) -> Optional[int]:
         """Number of compiled decode-step executables (the recompile
-        guard: must be 1 after any amount of session churn).  ``None``
-        when unknown (staged/eager executors, or a jax version that
-        dropped the private cache-size hook — see ``jit_cache_size``)."""
+        guard: must be 1 after any amount of session churn — for
+        ``steps_per_tick > 1`` that is the ONE horizon-K multi-step
+        program, reused across macro-ticks).  ``None`` when unknown
+        (staged/eager executors, or a jax version that dropped the
+        private cache-size hook — see ``jit_cache_size``)."""
+        if self._steps_jit is not None:
+            return jit_cache_size(self._steps_jit)
         if self._step_jit is not None:
             return jit_cache_size(self._step_jit)
         return None
@@ -310,6 +371,9 @@ class SlotScheduler:
         return sample(logits, key, temperature=self.temperature,
                       top_k=self.top_k)
 
+    def _hit_eos(self, tok: int) -> bool:
+        return self.eos_id is not None and tok == self.eos_id
+
     def _finish(self, slot: int, sess: _Session) -> None:
         sess.finished_tick = self.tick_count
         self.slots[slot] = None
@@ -329,18 +393,27 @@ class SlotScheduler:
         self._bt[slot, :] = GARBAGE_PAGE
         self._bt_dirty = True
         self._pos[slot] = 0
+        self._pos_dirty = True
 
-    def _sync_device(self) -> None:
+    def _sync_device(self, pos_always: bool = True) -> None:
         """Push the host-authoritative block table + positions into the
-        cache pytree (pure data: never changes compiled shapes).
-        Positions re-sync every tick (the decode step advances every
-        lane's device pos, including masked ones); the block table only
-        uploads when admission/eviction/allocation dirtied it, keeping
-        steady-state decode free of the extra H2D transfer."""
+        cache pytree (pure data: never changes compiled shapes).  The
+        block table only uploads when admission/eviction/allocation
+        dirtied it, keeping steady-state decode free of the extra H2D
+        transfer.
+
+        ``pos_always=True`` (the single-step path) re-syncs positions
+        every tick: the K=1 decode step advances every lane's device
+        pos, including masked ones.  The horizon-K path passes False —
+        its device steps clamp inactive lanes' positions, so device pos
+        stays correct end-to-end and only host-side resets (slot
+        release) need an upload."""
         if self._bt_dirty:
             self.cache["block_table"] = jnp.asarray(self._bt)
             self._bt_dirty = False
-        self.cache["pos"] = jnp.asarray(self._pos)
+        if pos_always or self._pos_dirty:
+            self.cache["pos"] = jnp.asarray(self._pos)
+            self._pos_dirty = False
 
     def _preempt(self, slot: int, sess: _Session) -> None:
         """Requeue a session to reclaim its pages.  It keeps its
@@ -418,7 +491,7 @@ class SlotScheduler:
                 sess.tokens.append(tok)
                 self.events.append(
                     ("token", sess.request.session_id, slot, tok))
-                if sess.done:
+                if sess.done or self._hit_eos(tok):
                     self._finish(slot, sess)
         return True
 
@@ -486,7 +559,8 @@ class SlotScheduler:
                 tok = int(self._sample(logits[:, -1], salt)[0])
                 sess.tokens.append(tok)
                 self.events.append(("token", sid, slot, tok))
-                if sess.done:     # 1-token session: retire immediately,
+                if sess.done or self._hit_eos(tok):
+                    # 1-token / instant-EOS session: retire immediately,
                     self._finish(slot, sess)   # loop backfills the slot
         occupied = [s for s in self.slots if s is not None]
         assert len(set(map(id, occupied))) == len(occupied), \
@@ -518,9 +592,66 @@ class SlotScheduler:
         sess.pages.extend(got)
         return True
 
+    def _reserve_horizon(self, slot: int, sess: _Session, want: int) -> int:
+        """Pre-reserve lookahead pages so the session can take ``want``
+        decode steps inside one fused macro-tick (its last KV write
+        lands at ``pos + want - 1``).  Lookahead beyond the next step is
+        *optional*: it is taken from the free list only, and when the
+        pool is short the grant shrinks to what the session's held pages
+        cover — never evicting anyone for speculative pages.  Only the
+        MANDATORY next page (the K=1 requirement) preempts
+        strictly-younger sessions, exactly like ``_ensure_decode_page``.
+        Returns the steps granted; 0 means the session itself was
+        preempted (the same failure path as K=1)."""
+        def take(n_pages: int) -> bool:
+            """Free-list-only allocation of ``n_pages`` pages."""
+            got = self.allocator.alloc(n_pages)
+            if got is None:
+                return False
+            base = len(sess.pages)
+            sess.pages.extend(got)
+            self._bt[slot, base:base + n_pages] = got
+            self._bt_dirty = True
+            return True
+
+        def top_up(n_steps: int) -> bool:
+            need = self._pages_for(sess.pos + n_steps) - len(sess.pages)
+            return need <= 0 or take(need)
+
+        if top_up(want):
+            return want
+        # pool short of the full horizon: take the partial lookahead the
+        # free list can spare — but leave one page per OTHER live
+        # decoding slot, so optional lookahead never forces a later
+        # slot's mandatory-page allocation into preempting someone
+        others = sum(1 for i, s in enumerate(self.slots)
+                     if s is not None and s is not sess and s.decoding)
+        spare = self.allocator.n_free - others
+        need = self._pages_for(sess.pos + want) - len(sess.pages)
+        if 0 < spare < need:
+            take(spare)
+        have = len(sess.pages) * self.page_size - sess.pos
+        if have >= 1:
+            return min(want, have)       # shrink: lookahead is optional
+        # pool dry at a page boundary: the next page is mandatory —
+        # preempt younger sessions (or the needy itself) like K=1 does
+        got = self._alloc_or_preempt(1, sess)
+        if got is None:
+            self._preempt(slot, sess)
+            return 0
+        blk = len(sess.pages)
+        self._bt[slot, blk] = got[0]
+        self._bt_dirty = True
+        sess.pages.extend(got)
+        if top_up(want):                 # eviction may have freed plenty
+            return want
+        return min(want, len(sess.pages) * self.page_size - sess.pos)
+
     def tick(self) -> List[Event]:
         """One scheduler iteration: continue chunked prefills, backfill,
-        one batched decode step for every decoding slot, evict completed
+        one batched decode dispatch for every decoding slot (a single
+        step, or a horizon-K fused macro-tick advancing every live slot
+        up to ``steps_per_tick`` tokens in ONE program), evict completed
         sessions."""
         n_before = len(self.events)
         if self.paged:
@@ -528,6 +659,19 @@ class SlotScheduler:
                 if sess is not None and not sess.decoding:
                     self._prefill_next_chunk(slot, sess)
         self._backfill()
+        if self.steps_per_tick == 1:
+            self._decode_tick_single()
+        else:
+            self._decode_tick_horizon()
+        self.tick_count += 1
+        return self.events[n_before:]
+
+    def _decode_tick_single(self) -> None:
+        """K=1 decode: one dispatch, one host round-trip per token.
+        The only hard sync is the token transfer itself (the data
+        dependency of host-side sampling feedback); per-step walls are
+        recorded only when ``timed`` — there is no unconditional
+        ``block_until_ready`` barrier anymore."""
         if self.paged:
             for slot, sess in list(enumerate(self.slots)):
                 if sess is not None and sess.decoding and \
@@ -536,36 +680,123 @@ class SlotScheduler:
             self._sync_device()
         active = [(i, s) for i, s in enumerate(self.slots)
                   if s is not None and (not self.paged or s.decoding)]
-        if active:
-            toks = np.zeros((self.n_slots, 1), np.int32)
-            for slot, sess in active:
-                toks[slot, 0] = sess.tokens[-1]
+        if not active:
+            return
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for slot, sess in active:
+            toks[slot, 0] = sess.tokens[-1]
+        if self.paged:
+            # this step reads blocks 0..ceil((pos+1)/page)-1 per live
+            # lane (pos+1 counts the row the step writes) — the KV
+            # traffic of the fused in-place kernel
+            self.step_kv_blocks.append(sum(
+                -(-(sess.pos + 1) // self.page_size)
+                for _, sess in active))
+        t0 = time.perf_counter()
+        logits, self.cache = self._run_step(jnp.asarray(toks))
+        nxt = self._sample(logits[:, -1], 2 * self.tick_count + 1)
+        t1 = time.perf_counter()
+        nxt = np.asarray(nxt)            # the one sync: sampled tokens
+        t2 = time.perf_counter()
+        self.host_dispatch_s += t1 - t0
+        self.host_sync_s += t2 - t1
+        dt = t2 - t0
+        self.decode_steps += 1
+        for slot, sess in active:
+            sess.pos += 1
             if self.paged:
-                # this step reads blocks 0..ceil((pos+1)/page)-1 per live
-                # lane (pos+1 counts the row the step writes) — the KV
-                # traffic of the fused in-place kernel
-                self.step_kv_blocks.append(sum(
-                    -(-(sess.pos + 1) // self.page_size)
-                    for _, sess in active))
-            t0 = time.perf_counter()
-            logits, self.cache = self._run_step(jnp.asarray(toks))
-            nxt = self._sample(logits[:, -1], 2 * self.tick_count + 1)
-            nxt = np.asarray(jax.block_until_ready(nxt))
-            dt = time.perf_counter() - t0
-            self.decode_steps += 1
+                self._pos[slot] = sess.pos
+            tok = int(nxt[slot])
+            sess.tokens.append(tok)
+            if self.timed:
+                sess.step_times_s.append(dt)
+            self.events.append(
+                ("token", sess.request.session_id, slot, tok))
+            if sess.done or self._hit_eos(tok):
+                self._finish(slot, sess)
+
+    def _decode_tick_horizon(self) -> None:
+        """Horizon-K fused decode: ONE compiled program advances every
+        live slot up to ``steps_per_tick`` tokens (lax.scan over
+        ``decode_step`` with on-device sampling), the (n_slots, K) token
+        matrix comes back in a single transfer, and the host reconciles
+        after the fact — trimming lanes that hit EOS or their budget
+        mid-horizon (their device steps were masked no-ops) and evicting
+        finished sessions.  Pages covering each slot's full granted
+        horizon are reserved BEFORE dispatch, so the device never
+        outruns its block table."""
+        K = self.steps_per_tick
+        plan: Dict[int, int] = {}
+        for slot, sess in list(enumerate(self.slots)):
+            # skip free lanes, mid-chunked-prefill lanes, and lanes whose
+            # session an earlier reservation's preemption already evicted
+            if sess is None or (self.paged and not sess.decoding) or \
+                    self.slots[slot] is not sess:
+                continue
+            want = min(K, sess.request.max_new_tokens - len(sess.tokens))
+            assert want >= 1, "finished session left in a slot"
+            plan[slot] = (self._reserve_horizon(slot, sess, want)
+                          if self.paged else want)
+        if self.paged:
+            self._sync_device(pos_always=False)
+        active = [(i, s) for i, s in enumerate(self.slots)
+                  if plan.get(i, 0) >= 1 and s is not None]
+        if not active:
+            return
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        steps_left = np.zeros((self.n_slots,), np.int32)
+        for slot, sess in active:
+            toks[slot, 0] = sess.tokens[-1]
+            steps_left[slot] = plan[slot]
+        key = jax.random.fold_in(self.key, 2 * self.tick_count + 1)
+        t0 = time.perf_counter()
+        tok_mat, self.cache = self._steps_jit(
+            self.params, self.cache, jnp.asarray(toks), key,
+            jnp.asarray(steps_left), horizon=K,
+            temperature=self.temperature, top_k=self.top_k,
+            eos_id=self.eos_id)
+        t1 = time.perf_counter()
+        tok_mat = np.asarray(tok_mat)    # ONE sync for up to K*slots tokens
+        t2 = time.perf_counter()
+        self.host_dispatch_s += t1 - t0
+        self.host_sync_s += t2 - t1
+        dt = t2 - t0
+        self.decode_steps += 1
+        # ---- reconciliation: step-major walk mirrors the device scan ----
+        per_tok_dt = dt / K
+        max_steps = max(plan[slot] for slot, _ in active)
+        kv_blocks = [0] * max_steps
+        emitted = [0] * max_steps
+        done: set = set()
+        for j in range(max_steps):
             for slot, sess in active:
+                if slot in done or j >= plan[slot]:
+                    continue
                 sess.pos += 1
                 if self.paged:
                     self._pos[slot] = sess.pos
-                tok = int(nxt[slot])
+                    # blocks this device step walked for the lane: its
+                    # live length after the write (same accounting as K=1)
+                    kv_blocks[j] += -(-sess.pos // self.page_size)
+                emitted[j] += 1
+                tok = int(tok_mat[slot, j])
                 sess.tokens.append(tok)
-                sess.step_times_s.append(dt)
+                if self.timed:
+                    sess.step_times_s.append(per_tok_dt)
                 self.events.append(
                     ("token", sess.request.session_id, slot, tok))
-                if sess.done:
+                if sess.done or self._hit_eos(tok):
+                    # budget exhausted or EOS sampled mid-horizon: the
+                    # lane's remaining device steps were no-ops (the
+                    # device cleared its alive bit on the same token);
+                    # trim here and reclaim the slot + its pages
+                    done.add(slot)
                     self._finish(slot, sess)
-        self.tick_count += 1
-        return self.events[n_before:]
+        if self.paged:
+            # count only device steps that had >= 1 live lane (trailing
+            # all-masked steps move no live pages)
+            self.step_kv_blocks.extend(
+                b for b, n in zip(kv_blocks, emitted) if n)
 
     def run(self) -> ContinuousResult:
         """Drive until the waiting queue and all slots drain.
@@ -577,10 +808,14 @@ class SlotScheduler:
         fin0 = len(self.finished)
         tick0 = self.tick_count
         pre0 = self.preemptions
+        disp0 = self.decode_steps
+        hd0, hs0 = self.host_dispatch_s, self.host_sync_s
         blk0 = len(self.step_kv_blocks) if self.paged else 0
         limit = self.max_ticks
         if limit is None:
             def ticks_for(s: _Session) -> int:
+                # a macro-tick advances up to steps_per_tick tokens, but
+                # the conservative per-token budget stays valid for K>1
                 t = s.request.max_new_tokens
                 if self.paged and self.prefill_chunk:
                     # chunked admission spends one tick per chunk, and a
@@ -617,4 +852,9 @@ class SlotScheduler:
             launches_per_step=self.launches_per_step,
             events=self.events, preemptions=self.preemptions - pre0,
             step_kv_blocks=(self.step_kv_blocks[blk0:] if self.paged
-                            else None))
+                            else None),
+            steps_per_tick=self.steps_per_tick,
+            dispatches=self.decode_steps - disp0,
+            run_tokens=n_tokens,
+            host_dispatch_s=self.host_dispatch_s - hd0,
+            host_sync_s=self.host_sync_s - hs0)

@@ -1,0 +1,336 @@
+"""Horizon-K fused decode: K decode steps per compiled macro-tick.
+
+The contract is the paper's one carried across steps: fusing the
+per-token host round-trip away (lax.scan over decode_step with
+on-device sampling) must be a pure scheduling change — greedy streams
+token-identical to K=1 on every route (contiguous, paged gather, paged
+pallas), through EOS mid-horizon, page-pool oversubscription, and
+preemption, with exactly ONE compiled multi-step program per
+(backend, K) surviving session churn.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import DecodeEngine, SessionRequest, SlotScheduler
+
+KEY = jax.random.PRNGKey(11)
+CFG = get_config("qwen2.5-3b").reduced()
+
+
+def _engine(cfg=CFG, **kw):
+    m = Model(cfg, **kw)
+    return DecodeEngine(m, m.init(KEY))
+
+
+def _requests(n, cfg=CFG, base_len=4, base_new=3):
+    """n sessions with mixed prompt lengths and token budgets."""
+    reqs = []
+    for i in range(n):
+        k = jax.random.fold_in(KEY, 100 + i)
+        prompt = np.asarray(
+            jax.random.randint(k, (base_len + 2 * i,), 0, cfg.vocab_size))
+        reqs.append(SessionRequest(f"s{i}", prompt, base_new + i % 4))
+    return reqs
+
+
+def _assert_identical(reqs, ref, res, what):
+    for r in reqs:
+        np.testing.assert_array_equal(
+            ref.tokens_for(r.session_id), res.tokens_for(r.session_id),
+            err_msg=f"{r.session_id} diverged: {what}")
+
+
+class TestDecodeStepsPrimitive:
+    """Model.decode_steps against hand-stepped decode_step."""
+
+    def test_masked_lanes_are_device_noops(self):
+        """A lane with steps_left=0 must not move: cache rows untouched,
+        position frozen, emitted tokens clamped to its input."""
+        m = Model(CFG)
+        params = m.init(KEY)
+        cache = m.init_cache(3, 32, slotted=True)
+        toks = jax.random.randint(KEY, (1, 6), 0, CFG.vocab_size)
+        logits, cache = m.prefill_into_slot(params, {"tokens": toks},
+                                            cache, jnp.int32(0))
+        t0 = int(jnp.argmax(logits[:, -1], -1)[0])
+        tok_mat = np.zeros((3, 1), np.int32)
+        tok_mat[0, 0] = t0
+
+        # reference: hand-stepped greedy on lane 0
+        cache_ref = dict(cache)
+        cur = jnp.asarray(tok_mat)
+        ref = []
+        for _ in range(4):
+            lg, cache_ref = m.decode_step(params, cache_ref, cur)
+            nxt = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+            ref.append(int(nxt[0]))
+            cur = cur.at[0, 0].set(nxt[0])
+
+        out, cache_ms = m.decode_steps(
+            params, cache, jnp.asarray(tok_mat), KEY,
+            jnp.array([4, 0, 0], jnp.int32), horizon=4)
+        assert np.asarray(out)[0].tolist() == ref
+        np.testing.assert_array_equal(np.asarray(cache_ms["pos"]),
+                                      [10, 0, 0])
+        # masked lanes: zero-initialised rows still zero
+        k = np.asarray(cache_ms["k"], np.float32)
+        assert np.all(k[:, 1:] == 0)
+
+    def test_partial_budget_clamps_and_freezes(self):
+        """steps_left < horizon: the lane stops mid-horizon — later
+        emitted tokens repeat the last real one, pos stops advancing."""
+        m = Model(CFG)
+        params = m.init(KEY)
+        cache = m.init_cache(2, 32, slotted=True)
+        toks = jax.random.randint(KEY, (1, 5), 0, CFG.vocab_size)
+        logits, cache = m.prefill_into_slot(params, {"tokens": toks},
+                                            cache, jnp.int32(0))
+        tok_mat = np.zeros((2, 1), np.int32)
+        tok_mat[0, 0] = int(jnp.argmax(logits[:, -1], -1)[0])
+        out, cache2 = m.decode_steps(
+            params, cache, jnp.asarray(tok_mat), KEY,
+            jnp.array([2, 0], jnp.int32), horizon=5)
+        row = np.asarray(out)[0]
+        assert np.all(row[2:] == row[1]), "post-budget tokens not clamped"
+        assert int(np.asarray(cache2["pos"])[0]) == 5 + 2
+
+    def test_eos_requires_masking(self):
+        m = Model(CFG)
+        params = m.init(KEY)
+        cache = m.init_cache(1, 16, slotted=True)
+        with pytest.raises(NotImplementedError):
+            m.decode_steps(params, cache, jnp.zeros((1, 1), jnp.int32),
+                           KEY, None, horizon=2, eos_id=3)
+
+    def test_active_rejected_on_ssm(self):
+        cfg = get_config("mamba2-2.7b").reduced()
+        m = Model(cfg)
+        params = m.init(KEY)
+        cache = m.init_cache(2, 16)
+        with pytest.raises(NotImplementedError):
+            m.decode_step(params, cache, jnp.zeros((2, 1), jnp.int32),
+                          active=jnp.ones((2,), bool))
+
+
+class TestHorizonTokenIdentity:
+    """K>1 macro-ticks == K=1 stepping, greedy, per route."""
+
+    def test_contiguous(self):
+        eng = _engine()
+        reqs = _requests(6)
+        ref = eng.generate_continuous(reqs, n_slots=3, max_len=32)
+        for K in (2, 4):
+            res = eng.generate_continuous(reqs, n_slots=3, max_len=32,
+                                          steps_per_tick=K)
+            assert res.step_cache_size == 1
+            assert res.dispatches < ref.dispatches
+            _assert_identical(reqs, ref, res, f"contiguous K={K}")
+
+    def test_paged_gather(self):
+        eng = _engine()
+        reqs = _requests(6)
+        ref = eng.generate_continuous(reqs, n_slots=3, max_len=32,
+                                      paged=True, page_size=8)
+        res = eng.generate_continuous(reqs, n_slots=3, max_len=32,
+                                      paged=True, page_size=8,
+                                      steps_per_tick=4)
+        assert res.step_cache_size == 1
+        _assert_identical(reqs, ref, res, "paged-gather K=4")
+        # total live-block traffic must match K=1's accounting
+        assert sum(res.step_kv_blocks) == sum(ref.step_kv_blocks)
+
+    def test_paged_pallas(self):
+        # f32 so the fused-kernel route is compared at one precision
+        # (table10 rationale); tiny dims keep interpret mode fast
+        cfg = CFG.replace(vocab_size=256, d_model=96, d_ff=192,
+                          n_layers=2, n_heads=4, n_kv_heads=2,
+                          head_dim=16, dtype="float32")
+        eng = _engine(cfg, decode_backend="pallas")
+        reqs = _requests(4, cfg=cfg)
+        ref = eng.generate_continuous(reqs, n_slots=2, max_len=32,
+                                      paged=True, page_size=8)
+        res = eng.generate_continuous(reqs, n_slots=2, max_len=32,
+                                      paged=True, page_size=8,
+                                      steps_per_tick=4)
+        assert res.step_cache_size == 1
+        _assert_identical(reqs, ref, res, "paged-pallas K=4")
+
+
+class TestEosMidHorizon:
+    def _eos_for(self, eng, reqs):
+        """Pick a token that appears mid-stream in the no-EOS baseline,
+        so declaring it EOS forces a mid-horizon trim."""
+        base = eng.generate_continuous(reqs, n_slots=3, max_len=32)
+        for r in reqs:
+            toks = base.tokens_for(r.session_id)
+            if len(toks) >= 3:
+                return int(toks[1])
+        raise AssertionError("no session long enough to donate an EOS")
+
+    def test_trims_exactly_and_matches_k1(self):
+        eng = _engine()
+        reqs = _requests(6, base_new=5)
+        eos = self._eos_for(eng, reqs)
+        ref = eng.generate_continuous(reqs, n_slots=3, max_len=32,
+                                      eos_id=eos)
+        res = eng.generate_continuous(reqs, n_slots=3, max_len=32,
+                                      eos_id=eos, steps_per_tick=4)
+        _assert_identical(reqs, ref, res, f"eos={eos} K=4")
+        trimmed = 0
+        for r in reqs:
+            toks = res.tokens_for(r.session_id)
+            assert len(toks) <= r.max_new_tokens
+            # EOS never appears except as the terminator
+            hits = np.flatnonzero(toks == eos)
+            if hits.size:
+                assert hits[0] == len(toks) - 1, "tokens past EOS kept"
+                trimmed += 1
+        assert trimmed >= 1, "EOS never fired — test is vacuous"
+
+    def test_paged_eos_reclaims_lookahead_pages(self):
+        """A session ending on EOS mid-horizon had pages reserved for
+        its full granted horizon; eviction must return ALL of them."""
+        eng = _engine()
+        reqs = _requests(5, base_new=6)
+        eos = self._eos_for(eng, reqs)
+        sched = SlotScheduler(eng.model, eng.params, n_slots=2,
+                              max_len=32, paged=True, page_size=4,
+                              steps_per_tick=4, eos_id=eos)
+        for r in reqs:
+            sched.submit(r)
+        res = sched.run()
+        assert sched.free_pages == sched.n_pages - 1   # balanced free-list
+        assert sched.free_slots == [0, 1]
+        ref = eng.generate_continuous(reqs, n_slots=2, max_len=32,
+                                      eos_id=eos)
+        _assert_identical(reqs, ref, res, "paged eos K=4")
+
+
+class TestHorizonPagedPressure:
+    def test_oversubscribed_identity_and_balance(self):
+        """Lookahead reservation under an oversubscribed pool: grants
+        shrink / younger sessions get preempted, streams stay identical
+        to K=1 contiguous, and every page returns to the free list."""
+        eng = _engine()
+        reqs = _requests(6)
+        ref = eng.generate_continuous(reqs, n_slots=3, max_len=32)
+        sched = SlotScheduler(eng.model, eng.params, n_slots=3,
+                              max_len=32, paged=True, page_size=8,
+                              n_pages=7, steps_per_tick=4)
+        for r in reqs:
+            sched.submit(r)
+        res = sched.run()
+        assert res.step_cache_size == 1
+        assert sched.free_pages == 6
+        _assert_identical(reqs, ref, res, "oversubscribed K=4")
+
+    def test_preemption_round_trips(self):
+        """Decode outgrowing the pool mid-macro-tick horizon preempts
+        the youngest session; its re-prefilled stream is unchanged."""
+        eng = _engine()
+        reqs = [SessionRequest("a", np.arange(4) % CFG.vocab_size, 20),
+                SessionRequest("b", np.arange(5) % CFG.vocab_size, 20)]
+        ref = eng.generate_continuous(reqs, n_slots=2, max_len=32)
+        res = eng.generate_continuous(reqs, n_slots=2, max_len=32,
+                                      paged=True, page_size=4,
+                                      n_pages=1 + 7, steps_per_tick=4)
+        assert res.preemptions > 0, "pool was sized to force preemption"
+        assert res.step_cache_size == 1
+        _assert_identical(reqs, ref, res, "preemption K=4")
+
+    def test_chunked_prefill_interleaves_with_macro_ticks(self):
+        eng = _engine()
+        reqs = _requests(5)
+        ref = eng.generate_continuous(reqs, n_slots=3, max_len=32)
+        res = eng.generate_continuous(reqs, n_slots=3, max_len=32,
+                                      paged=True, page_size=4,
+                                      prefill_chunk=4, steps_per_tick=4)
+        assert res.step_cache_size == 1
+        _assert_identical(reqs, ref, res, "chunked prefill K=4")
+
+
+class TestHorizonSchedulerInvariants:
+    def test_compiled_once_across_macro_ticks_and_churn(self):
+        """Two admission waves through one horizon-4 scheduler: the
+        multi-step program must lower exactly once."""
+        eng = _engine()
+        sched = SlotScheduler(eng.model, eng.params, n_slots=2,
+                              max_len=32, steps_per_tick=4)
+        for r in _requests(4):
+            sched.submit(r)
+        sched.run()
+        assert sched.step_cache_size() == 1
+        for r in _requests(3, base_len=5, base_new=4):
+            sched.submit(SessionRequest(r.session_id + "w2", r.prompt,
+                                        r.max_new_tokens))
+        sched.run()
+        assert sched.step_cache_size() == 1
+
+    def test_dispatch_count_amortised(self):
+        """Lockstep sessions: decode dispatches shrink by exactly K."""
+        eng = _engine()
+        reqs = [SessionRequest(f"u{i}",
+                               np.asarray(jax.random.randint(
+                                   jax.random.fold_in(KEY, i), (6,), 0,
+                                   CFG.vocab_size)), 9)
+                for i in range(2)]
+        ref = eng.generate_continuous(reqs, n_slots=2, max_len=32)
+        res = eng.generate_continuous(reqs, n_slots=2, max_len=32,
+                                      steps_per_tick=4)
+        assert ref.dispatches == 8            # 8 decode tokens each
+        assert res.dispatches == 2            # ceil(8 / 4)
+        _assert_identical(reqs, ref, res, "lockstep K=4")
+
+    def test_rejects_staged_dispatch(self):
+        eng = _engine()
+        with pytest.raises(NotImplementedError):
+            SlotScheduler(eng.model, eng.params, n_slots=2, max_len=32,
+                          steps_per_tick=4, dispatch_mode="stage_jit")
+
+    def test_event_log_replay_with_horizon(self):
+        """Occupancy/accounting replay holds under macro-ticks too."""
+        eng = _engine()
+        sched = SlotScheduler(eng.model, eng.params, n_slots=2,
+                              max_len=32, paged=True, page_size=4,
+                              n_pages=1 + 7, steps_per_tick=4)
+        reqs = [SessionRequest("a", np.arange(4) % CFG.vocab_size, 18),
+                SessionRequest("b", np.arange(5) % CFG.vocab_size, 18),
+                SessionRequest("c", np.arange(6) % CFG.vocab_size, 6)]
+        for r in reqs:
+            sched.submit(r)
+        res = sched.run()
+        occupancy = {}
+        for ev in res.events:
+            kind, sid, slot = ev[0], ev[1], ev[2]
+            if kind == "admit":
+                assert slot not in occupancy
+                occupancy[slot] = sid
+            elif kind in ("finish", "preempt"):
+                assert occupancy.pop(slot) == sid
+        assert not occupancy
+        assert len(res.sessions) == 3
+
+    def test_untimed_run_skips_step_walls(self):
+        eng = _engine()
+        reqs = _requests(2)
+        res = eng.generate_continuous(reqs, n_slots=2, max_len=32,
+                                      steps_per_tick=4, timed=False)
+        assert all(not s.step_times_s for s in res.sessions.values())
+        assert np.isfinite(res.tokens_per_s) and res.tokens_per_s > 0
+
+
+class TestEngineUnification:
+    def test_fused_generation_matches_streamed(self):
+        """generate_fused now rides the same multi-step program family
+        the scheduler dispatches — still greedy-identical to the
+        step-streamed loop."""
+        eng = _engine()
+        pr = {"tokens": jax.random.randint(KEY, (1, 12), 0,
+                                           CFG.vocab_size)}
+        r1 = eng.generate_streamed(pr, max_len=48, n_new=6)
+        r2 = eng.generate_fused(pr, max_len=48, n_new=6)
+        assert jnp.array_equal(r1.tokens, r2.tokens)
