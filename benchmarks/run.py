@@ -41,7 +41,8 @@ def main() -> None:
                             table2_dispatch_ab, table4_batch_sweep,
                             table6_attention_backends, table7_quant_matrix,
                             table8_accounting, table9_continuous_batching,
-                            table10_paged_kv, table11_launch_overhead)
+                            table10_paged_kv, table11_launch_overhead,
+                            table12_prefix_sharing)
     suites = {
         "table1": table1_rfloor_matrix.run,
         "table2": lambda: table2_dispatch_ab.run(quick=quick),
@@ -53,6 +54,7 @@ def main() -> None:
         "table9": lambda: table9_continuous_batching.run(quick=quick),
         "table10": lambda: table10_paged_kv.run(quick=quick),
         "table11": lambda: table11_launch_overhead.run(quick=quick),
+        "table12": lambda: table12_prefix_sharing.run(quick=quick),
     }
     if only is not None and only not in suites:
         print(f"# FAILED: unknown table {only!r} "

@@ -14,11 +14,18 @@
 #   smoke-horizon     horizon-K fused macro-ticks (--steps-per-tick 4):
 #                     continuous + paged serve, K decode steps per
 #                     compiled dispatch
+#   smoke-prefix      paged serve with --prefix-cache on sessions
+#                     sharing a page-aligned prompt preamble (prefill
+#                     skipped for matched pages, CoW before any shared
+#                     write)
 #   table10-quick     paged sweep incl. fused-vs-gather token identity
 #                     (benchmarks/run.py exits nonzero on any failure)
 #   table11-quick     launch-overhead A/B: horizon-K amortisation >= K
 #                     across contiguous/paged-gather/paged-pallas, with
 #                     the --json results file exercised
+#   table12-quick     prefix-sharing A/B: prefill tokens reduced >= the
+#                     shared-prefix fraction, token identity, free-list
+#                     balance (gather + pallas routes)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -70,9 +77,17 @@ stage smoke-horizon bash -c "
         --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
         --page-size 8 --pages 9 --steps-per-tick 4 --timed"
 
+stage smoke-prefix \
+    python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+        --prefix-cache --slots 3 --sessions 6 --prompt-len 6 \
+        --shared-prefix 16 --new-tokens 6 --page-size 8 --timed
+
 stage table10-quick python -m benchmarks.run --quick --only=table10
 
 stage table11-quick \
     python -m benchmarks.run --quick --only=table11 --json bench_table11.json
+
+stage table12-quick \
+    python -m benchmarks.run --quick --only=table12 --json bench_table12.json
 
 echo "== ci green =="

@@ -26,8 +26,18 @@ def cv(xs: Sequence[float]) -> float:
 
 def bootstrap_ci_mean(xs: Sequence[float], *, n_resamples: int = 10_000,
                       alpha: float = 0.05, seed: int = 0) -> Tuple[float, float]:
-    """Percentile bootstrap CI on the mean (paper: 10000-resample 95% CI)."""
+    """Percentile bootstrap CI on the mean (paper: 10000-resample 95% CI).
+
+    Degenerate samples short-circuit instead of feeding the resampler:
+    an empty sample has no mean — ``(nan, nan)`` — and a singleton's
+    bootstrap distribution is the point itself — ``(x, x)`` — so quick
+    benchmark runs with 1 repeat get an honest answer rather than a
+    ``rng.integers(0, 0)`` ValueError or a vacuous resample."""
     arr = np.asarray(xs, dtype=np.float64)
+    if arr.size == 0:
+        return float("nan"), float("nan")
+    if arr.size == 1:
+        return float(arr[0]), float(arr[0])
     rng = np.random.default_rng(seed)
     idx = rng.integers(0, len(arr), size=(n_resamples, len(arr)))
     means = arr[idx].mean(axis=1)

@@ -75,7 +75,23 @@ def main():
                     help="admit prompts in chunks of this many tokens "
                          "(multiple of --page-size), interleaved with "
                          "decode ticks")
+    # prefix sharing (copy-on-write KV pages over the block table)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share page-aligned prompt prefixes across "
+                         "sessions: matched pages are refcounted and "
+                         "aliased into the new slot's block table "
+                         "(prefill skipped for the match, CoW copy "
+                         "before any write could touch a shared page); "
+                         "implies --paged")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many identical tokens to every "
+                         "session's prompt (the physical-AI fleet "
+                         "workload: one system prompt / scene preamble "
+                         "replayed across sessions) — what "
+                         "--prefix-cache deduplicates")
     args = ap.parse_args()
+    if args.prefix_cache:
+        args.paged = True
     if args.paged:
         args.continuous = True
 
@@ -116,10 +132,15 @@ def main():
 
 
 def mixed_requests(cfg, n_sessions: int, *, base_prompt: int,
-                   base_new: int, seed: int):
+                   base_new: int, seed: int, shared_prefix: int = 0):
     """Deterministic session mix: prompt lengths base..~2x base, token
-    budgets base_new..~2x base_new — enough spread to exercise churn."""
+    budgets base_new..~2x base_new — enough spread to exercise churn.
+    ``shared_prefix`` prepends that many identical tokens to every
+    prompt (the prefix-sharing workload)."""
     key = jax.random.PRNGKey(seed + 1)
+    common = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 10_000), (shared_prefix,), 0,
+        cfg.vocab_size)) if shared_prefix else None
     reqs = []
     for i in range(n_sessions):
         k = jax.random.fold_in(key, i)
@@ -127,13 +148,16 @@ def mixed_requests(cfg, n_sessions: int, *, base_prompt: int,
         n_new = base_new + (i * 5) % (base_new + 1)
         prompt = np.asarray(jax.random.randint(k, (plen,), 0,
                                                cfg.vocab_size))
+        if common is not None:
+            prompt = np.concatenate([common, prompt])
         reqs.append(SessionRequest(f"session{i}", prompt, n_new))
     return reqs
 
 
 def serve_continuous(engine: DecodeEngine, cfg, args):
     reqs = mixed_requests(cfg, args.sessions, base_prompt=args.prompt_len,
-                          base_new=args.new_tokens, seed=args.seed)
+                          base_new=args.new_tokens, seed=args.seed,
+                          shared_prefix=args.shared_prefix)
     max_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 1
     res = engine.generate_continuous(
         reqs, n_slots=args.slots, max_len=max_len,
@@ -141,7 +165,8 @@ def serve_continuous(engine: DecodeEngine, cfg, args):
         dispatch_mode=args.dispatch, paged=args.paged,
         page_size=args.page_size, n_pages=args.pages,
         prefill_chunk=args.prefill_chunk,
-        steps_per_tick=args.steps_per_tick, timed=args.timed)
+        steps_per_tick=args.steps_per_tick, timed=args.timed,
+        prefix_cache=args.prefix_cache)
     n_tok = sum(len(s.tokens) for s in res.sessions.values())
     layout = "paged" if args.paged else "contiguous"
     backend = engine.model.decode_backend
@@ -163,6 +188,20 @@ def serve_continuous(engine: DecodeEngine, cfg, args):
               f"(full backing {full}, "
               f"oversubscription x{(full - 1) / max(pages - 1, 1):.2f}), "
               f"preemptions={res.preemptions}")
+        if args.prefix_cache:
+            # denominator = prefill work this run would have dispatched
+            # without sharing (saved + dispatched) — preempted sessions
+            # re-match their own prefix on resume, so hits can exceed
+            # the session count and saved can exceed the prompt bytes
+            total = res.prefix_tokens_saved + res.prefill_tokens
+            print(f"prefix cache: {res.prefix_hits} admission hits "
+                  f"({len(reqs)} sessions), prefill tokens "
+                  f"{res.prefill_tokens} dispatched / "
+                  f"{res.prefix_tokens_saved} shared "
+                  f"({res.prefix_tokens_saved / max(total, 1):.0%} of "
+                  f"prefill work skipped), "
+                  f"{res.cow_copies} CoW page cop"
+                  f"{'y' if res.cow_copies == 1 else 'ies'}")
         if res.step_kv_blocks:
             from repro.kernels.paged_decode_attention.ops import (
                 serving_traffic_bytes)

@@ -305,7 +305,11 @@ class Model:
         ``n_pages < 1 + batch_size * max_blocks`` the pool is
         *oversubscribed*: slots no longer each reserve a full
         ``max_len`` row, capacity follows live tokens instead
-        (repro.serving.scheduler manages allocation/reclaim)."""
+        (repro.serving.scheduler manages allocation/reclaim).  Distinct
+        slots' block tables may alias the SAME physical page (prefix
+        sharing): aliased pages are read-only by convention — the
+        scheduler CoW-copies (``copy_kv_page``) before any write could
+        land in one."""
         cfg = self.cfg
         kv_dtype = kv_dtype or self.dtype
         if paged:
@@ -368,6 +372,21 @@ class Model:
                 "pos": pos,
             }
         raise ValueError(cfg.family)
+
+    def copy_kv_page(self, cache: Cache, src: jnp.ndarray,
+                     dst: jnp.ndarray) -> Cache:
+        """Copy one pool page — every layer's K and V rows — onto
+        another: the copy-on-write fault of prefix sharing.  A session
+        admitted onto shared pages whose next KV write would land in a
+        page other sessions still read gets a private copy first
+        (serving/scheduler.py); ``src``/``dst`` are traced scalars, so
+        ONE compiled copy program serves every fault."""
+        assert "block_table" in cache, "copy_kv_page targets paged caches"
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+        return dict(cache,
+                    k=cache["k"].at[:, dst].set(cache["k"][:, src]),
+                    v=cache["v"].at[:, dst].set(cache["v"][:, src]))
 
     # ------------------------------------------------------------------
     # prefill

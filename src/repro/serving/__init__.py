@@ -1,6 +1,6 @@
 from repro.serving.engine import DecodeEngine, GenerationResult  # noqa: F401
 from repro.serving.sampling import sample  # noqa: F401
 from repro.serving.scheduler import (BlockAllocator,  # noqa: F401
-                                     ContinuousResult, SessionRequest,
-                                     SessionResult, SlotScheduler,
-                                     jit_cache_size)
+                                     ContinuousResult, PrefixCache,
+                                     SessionRequest, SessionResult,
+                                     SlotScheduler, jit_cache_size)

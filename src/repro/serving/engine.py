@@ -133,7 +133,8 @@ class DecodeEngine:
                             prefill_chunk: Optional[int] = None,
                             steps_per_tick: int = 1,
                             eos_id: Optional[int] = None,
-                            timed: bool = True):
+                            timed: bool = True,
+                            prefix_cache: bool = False):
         """Continuous batching: serve ``sessions`` (SessionRequest list)
         through a fixed-capacity slotted cache — admission, per-slot
         prefill, shared batched decode, eviction, FIFO backfill.  The
@@ -147,8 +148,13 @@ class DecodeEngine:
         ``steps_per_tick=K > 1`` fuses K decode steps into one
         macro-tick program (on-device sampling, one token transfer per
         macro-tick) — the horizon-K launch-overhead amortisation;
-        ``eos_id`` ends sessions early on sampling that token.  Returns
-        a ``ContinuousResult`` (see repro.serving.scheduler)."""
+        ``eos_id`` ends sessions early on sampling that token.
+        ``prefix_cache=True`` (paged only) shares page-aligned prompt
+        prefixes across sessions through refcounted CoW pages — matched
+        runs skip prefill entirely; greedy streams stay token-identical
+        to the no-sharing baseline, stochastic streams draw under
+        different sampling salts (see repro.serving.scheduler).
+        Returns a ``ContinuousResult``."""
         from repro.serving.scheduler import SlotScheduler
         sched = SlotScheduler(self.model, self.params, n_slots=n_slots,
                               max_len=max_len, dispatch_mode=dispatch_mode,
@@ -157,7 +163,7 @@ class DecodeEngine:
                               paged=paged, page_size=page_size,
                               n_pages=n_pages, prefill_chunk=prefill_chunk,
                               steps_per_tick=steps_per_tick, eos_id=eos_id,
-                              timed=timed)
+                              timed=timed, prefix_cache=prefix_cache)
         for req in sessions:
             sched.submit(req)
         return sched.run()

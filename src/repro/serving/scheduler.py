@@ -40,6 +40,33 @@ The paged step's attention route follows the Model's ``decode_backend``:
 traffic tracked in ``step_kv_blocks``), any other backend takes the
 gather+SDPA reference through the materialised ``paged_view``.
 
+**Prefix sharing** (``prefix_cache=True``, paged mode only) stops
+moving — or even re-computing — shared prompt bytes at all: physical-AI
+fleets replay the same system prompt / scene preamble across sessions,
+and with a block table already indirecting every page, "the same
+prefix" can simply BE the same pages.  A ``PrefixCache`` hash-chain
+indexes every fully-prefilled page by (parent page, its token run); on
+admission the longest cached page-aligned prefix is matched, the new
+slot's block table points at the shared pages (``BlockAllocator``
+refcounts track the holders), and only the unmatched tail is prefilled
+(``prefill_chunk_into_slot`` from the matched boundary — tail chunks
+write fresh private pages, so shared pages are never written).  A fully
+cached prompt skips prefill entirely: the last prompt token is replayed
+through the decode step for its logits, and since that step's KV write
+lands inside the last shared page, the page is first **CoW-faulted**
+into a private copy (one host-side page copy, before dispatch).
+Eviction and preemption *release* (decrement) instead of freeing;
+cached pages whose only holder is the cache are reclaimed LRU-leaf-
+first, and only under allocation pressure.  The decode read path —
+fused Pallas kernel and gather route alike — is untouched by
+construction: which physical page backs a block was always pure data.
+The identity contract is GREEDY: temperature-0 streams are token-
+identical to the no-sharing baseline.  With ``temperature > 0`` a
+fully-cached admission draws its first token under a decode-tick salt
+instead of the admission salt (and shifts later admission salts), so
+stochastic streams sample the same distributions under different keys
+— same family, different draws.
+
 Scheduling is host-side Python; the per-token hot path is exactly the
 paper's ``full_jit`` arm — one dispatch per decode step for the whole
 slot batch — and the eager / stage_jit executors (core.dispatch) remain
@@ -70,6 +97,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 import time
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -101,32 +129,228 @@ def jit_cache_size(fn) -> Optional[int]:
 
 
 class BlockAllocator:
-    """LIFO free-list over a fixed pool of KV pages.
+    """Refcounted LIFO free-list over a fixed pool of KV pages.
 
     Page ``GARBAGE_PAGE`` (0) is reserved as the write sink for lanes
     that have no real page under their current position (free slots,
-    blocks beyond a session's allocation) and is never handed out."""
+    blocks beyond a session's allocation) and is never handed out.
+
+    ``alloc`` hands pages out with refcount 1; prefix sharing adds
+    holders (``retain``) when another slot's block table — or the prefix
+    cache — points at the same physical page, and ``release`` drops one
+    holder, returning the page to the free list only when the last
+    holder is gone.  The free list is mirrored by a set, so double-free
+    detection is O(1) per page instead of an O(free-list) membership
+    scan (a long session releasing hundreds of pages used to make
+    reclaim quadratic on big pools)."""
 
     def __init__(self, n_pages: int):
         assert n_pages >= 2, "need the garbage page plus >= 1 real page"
         self.n_pages = n_pages
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._free_set = set(self._free)
+        self._refs = [0] * n_pages
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` pages, or None (and no change) if under-supplied."""
+        """Pop ``n`` pages (refcount 1 each), or None (and no change) if
+        under-supplied."""
         if n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
+        got = [self._free.pop() for _ in range(n)]
+        for p in got:
+            self._free_set.discard(p)
+            self._refs[p] = 1
+        return got
 
-    def release(self, pages: Sequence[int]) -> None:
+    def retain(self, pages: Sequence[int]) -> None:
+        """Add one holder to each (already allocated) page."""
         for p in pages:
             assert 0 < p < self.n_pages, f"bad page id {p}"
-            assert p not in self._free, f"double free of page {p}"
-            self._free.append(p)
+            assert self._refs[p] > 0, f"retain of unallocated page {p}"
+            self._refs[p] += 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        """Drop one holder per page; the last release frees the page."""
+        for p in pages:
+            assert 0 < p < self.n_pages, f"bad page id {p}"
+            assert p not in self._free_set and self._refs[p] > 0, \
+                f"double free of page {p}"
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
+                self._free_set.add(p)
+
+
+@dataclasses.dataclass
+class _PrefixNode:
+    """One cached page: ``key = (parent page, the page's token run)``."""
+    key: Tuple[int, Tuple[int, ...]]
+    page: int
+    parent: int                      # parent page id; GARBAGE_PAGE = root
+    children: set = dataclasses.field(default_factory=set)  # child pages
+    last_used: int = 0               # LRU clock stamp
+
+
+class PrefixCache:
+    """Hash-chain prefix index over page-aligned token runs → pool pages.
+
+    A node's key is ``(parent page id, tuple of the page's tokens)`` —
+    exact (dict equality, never a hash collision) and chain-unique: a
+    page's KV content is a pure function of the token path from the
+    root, so any two sessions whose prompts share a page-aligned prefix
+    resolve to the SAME physical pages, whichever session prefilled
+    them first.  Only *full* pages are indexed (a partial page is still
+    being written and its content is not final).
+
+    The cache holds one allocator reference per registered page, which
+    is what keeps a finished session's prefix resident after its slot
+    is reclaimed.  A cached page whose only remaining holder is the
+    cache is *reclaimable*; under allocation pressure ``reclaim``
+    releases such pages leaf-first in LRU order (a parent is never
+    evicted while a child chain still hangs off it — the child's
+    content is only reachable through the parent's chain)."""
+
+    def __init__(self, allocator: BlockAllocator):
+        self._allocator = allocator
+        self._nodes: Dict[Tuple[int, Tuple[int, ...]], _PrefixNode] = {}
+        self._by_page: Dict[int, _PrefixNode] = {}
+        self._clock = 0
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def pages(self) -> List[int]:
+        """Physical page ids currently registered (sorted)."""
+        return sorted(self._by_page)
+
+    def _now(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    @staticmethod
+    def _run(tokens: np.ndarray, blk: int, page_size: int
+             ) -> Tuple[int, ...]:
+        return tuple(int(t)
+                     for t in tokens[blk * page_size:(blk + 1) * page_size])
+
+    def match(self, tokens: np.ndarray, page_size: int) -> List[int]:
+        """Pages backing the longest cached page-aligned prefix of
+        ``tokens``, root-first (empty when the first page misses).
+        Walked nodes get their LRU stamp refreshed."""
+        now = self._now()
+        pages: List[int] = []
+        parent = GARBAGE_PAGE
+        for blk in range(len(tokens) // page_size):
+            node = self._nodes.get((parent, self._run(tokens, blk,
+                                                      page_size)))
+            if node is None:
+                break
+            node.last_used = now
+            pages.append(node.page)
+            parent = node.page
+        return pages
+
+    def register(self, tokens: np.ndarray, page_size: int,
+                 pages: Sequence[int], n_blocks: int) -> None:
+        """Index the first ``n_blocks`` (full) pages of a session's
+        prefilled run.  Each newly registered page gains a cache
+        reference; blocks whose content is already cached (the session
+        matched them, or another session prefilled identical content
+        concurrently) keep the incumbent page — the walk continues down
+        the INDEX's chain, so a mixed-ownership chain stays coherent."""
+        now = self._now()
+        parent = GARBAGE_PAGE
+        for blk in range(n_blocks):
+            key = (parent, self._run(tokens, blk, page_size))
+            node = self._nodes.get(key)
+            if node is None:
+                page = pages[blk]
+                if page in self._by_page:     # already indexed elsewhere
+                    break
+                node = _PrefixNode(key, page, parent, last_used=now)
+                self._nodes[key] = node
+                self._by_page[page] = node
+                if parent != GARBAGE_PAGE:
+                    self._by_page[parent].children.add(page)
+                self._allocator.retain([page])
+            node.last_used = now
+            parent = node.page
+
+    def reclaimable(self, exclude: Sequence[int] = ()) -> int:
+        """Pages a full cascade of leaf-first evictions could free right
+        now — cached pages held only by the cache whose entire subtree
+        is likewise unreferenced.  ``exclude`` pages (about to be
+        retained by an admission in flight) count as pinned.  Iterative
+        post-order with memoisation: O(nodes) per call, no recursion
+        depth to hit on deep chains."""
+        ex = set(exclude)
+        memo: Dict[int, bool] = {}
+        for root in self._by_page:
+            if root in memo:
+                continue
+            stack = [(root, False)]
+            while stack:
+                page, visited = stack.pop()
+                if page in memo:
+                    continue
+                node = self._by_page[page]
+                if visited:
+                    memo[page] = (page not in ex
+                                  and self._allocator.refcount(page) == 1
+                                  and all(memo[c] for c in node.children))
+                else:
+                    stack.append((page, True))
+                    stack.extend((c, False) for c in node.children
+                                 if c not in memo)
+        return sum(memo.values())
+
+    def _evict(self, node: _PrefixNode) -> None:
+        del self._nodes[node.key]
+        del self._by_page[node.page]
+        if node.parent != GARBAGE_PAGE and node.parent in self._by_page:
+            self._by_page[node.parent].children.discard(node.page)
+        self._allocator.release([node.page])
+
+    def reclaim(self, n: int) -> int:
+        """Release up to ``n`` unreferenced cached pages back to the
+        free list, LRU leaves first (evicting a leaf may expose its
+        parent as the next candidate).  A heap of candidate leaves keeps
+        this O((cache + n) log cache) — this runs inside the mandatory
+        allocation path, so a per-eviction rescan (quadratic on deep
+        chains, the same class of bug the allocator's free-set fixed)
+        is not acceptable.  Returns the pages actually freed."""
+        freed = 0
+        heap = [(nd.last_used, nd.page) for nd in self._by_page.values()
+                if not nd.children
+                and self._allocator.refcount(nd.page) == 1]
+        heapq.heapify(heap)
+        while freed < n and heap:
+            stamp, page = heapq.heappop(heap)
+            nd = self._by_page.get(page)
+            if nd is None or nd.children or nd.last_used != stamp \
+                    or self._allocator.refcount(page) != 1:
+                continue        # stale candidate
+            parent = nd.parent
+            self._evict(nd)
+            freed += 1
+            if parent != GARBAGE_PAGE:
+                pn = self._by_page.get(parent)
+                if pn is not None and not pn.children \
+                        and self._allocator.refcount(parent) == 1:
+                    heapq.heappush(heap, (pn.last_used, parent))
+        return freed
+
+    def flush(self) -> int:
+        """Drop every unreferenced cached page (end-of-run accounting;
+        pages still shared by live sessions stay)."""
+        return self.reclaim(len(self._by_page))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,29 +373,56 @@ class SessionResult:
 
 @dataclasses.dataclass
 class ContinuousResult:
-    """Outcome of one continuous-batching run."""
-    sessions: Dict[str, SessionResult]
-    ticks: int                       # scheduler iterations
+    """Outcome of one ``SlotScheduler.run()`` call.
+
+    ``run()`` may be called repeatedly on one scheduler (submit → run →
+    submit → run); every field belongs to exactly one of two groups,
+    and which group is part of its contract:
+
+    **Cumulative** over the scheduler's lifetime (all ``run()`` calls so
+    far): ``sessions``, ``events``, ``decode_steps``.
+    ``step_cache_size``, ``launches_per_step``, and ``steps_per_tick``
+    describe the compiled program / configuration, not a count.
+
+    **This ``run()`` call only** (delta since the call started):
+    ``ticks``, ``wall_s``, ``tokens_per_s``, ``preemptions``,
+    ``dispatches``, ``run_tokens``, ``step_kv_blocks``,
+    ``host_dispatch_s``, ``host_sync_s``, ``prefill_tokens``,
+    ``prefix_hits``, ``prefix_tokens_saved``, ``cow_copies``.
+    (``dispatches`` is the per-run delta of the cumulative
+    ``decode_steps``.)"""
+    sessions: Dict[str, SessionResult]  # cumulative: every finished session
+    ticks: int                       # scheduler iterations this run()
     decode_steps: int                # batched decode dispatches (cumulative)
     wall_s: float
     tokens_per_s: float              # aggregate generated tokens / wall
     step_cache_size: Optional[int]   # compiled decode-step count (full_jit)
     launches_per_step: int           # host dispatches per decode step
-    events: List[Event]
+    events: List[Event]              # cumulative event log
     preemptions: int = 0             # paged: sessions requeued for pages
-                                     # (this run() call only, like wall_s)
     step_kv_blocks: Optional[List[int]] = None
     # paged: per decode step, summed ceil(live_len/page_size) over the
-    # active lanes — the pages the fused kernel actually walks (this
-    # run() call only).  None for contiguous runs.
+    # active lanes — the pages the fused kernel actually walks.  None
+    # for contiguous runs.
     steps_per_tick: int = 1          # horizon K of the fused macro-tick
     dispatches: int = 0              # decode dispatches this run() call
     run_tokens: int = 0              # tokens generated this run() call
     host_dispatch_s: float = 0.0     # host wall building + dispatching
-                                     # decode work this run() call (the
-                                     # launch term the horizon amortises)
+                                     # decode work (the launch term the
+                                     # horizon amortises)
     host_sync_s: float = 0.0         # host wall blocked on the per-tick
-                                     # token transfer this run() call
+                                     # token transfer
+    prefill_tokens: int = 0          # tokens actually dispatched through
+                                     # prefill programs this run()
+    prefix_hits: int = 0             # admissions that matched a cached
+                                     # prefix (prefix sharing; resumed
+                                     # re-admissions count too, so this
+                                     # may exceed the session count)
+    prefix_tokens_saved: int = 0     # sequence tokens (prompt, plus the
+                                     # generated prefix on resume) whose
+                                     # prefill was skipped via shared
+                                     # pages
+    cow_copies: int = 0              # copy-on-write page faults served
 
     def tokens_for(self, session_id: str) -> np.ndarray:
         return self.sessions[session_id].tokens
@@ -190,6 +441,9 @@ class _Session:
     pos: int = 0                     # host mirror of cache["pos"][slot]
     prefilled: int = 0               # prefill_seq tokens written so far
     prefill_seq: Optional[np.ndarray] = None   # sequence being prefilled
+    seq_cache: Optional[np.ndarray] = None     # memoised admission seq
+                                     # (valid while waiting: tokens only
+                                     # grow while resident in a slot)
     resume: bool = False             # re-admission after preemption
     admit_seq: int = -1              # monotone admission order (preempt prio)
 
@@ -203,6 +457,16 @@ class _Session:
         return (self.prefill_seq is not None
                 and self.prefilled >= len(self.prefill_seq))
 
+    @property
+    def next_input_token(self) -> int:
+        """Token the next decode step feeds this lane.  Normally the
+        last generated token; a fully-prefix-matched fresh admission has
+        generated nothing yet and replays the last prompt token (its KV
+        row is rewritten in place — into the CoW private copy — and the
+        step's logits stand in for the skipped prefill's)."""
+        return (self.tokens[-1] if self.tokens
+                else int(self.prefill_seq[-1]))
+
 
 class SlotScheduler:
     """Admission / decode / eviction / backfill over a slotted cache."""
@@ -214,7 +478,7 @@ class SlotScheduler:
                  page_size: int = 16, n_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  steps_per_tick: int = 1, eos_id: Optional[int] = None,
-                 timed: bool = True):
+                 timed: bool = True, prefix_cache: bool = False):
         assert n_slots >= 1
         assert dispatch_mode in MODES, dispatch_mode
         assert steps_per_tick >= 1
@@ -242,6 +506,10 @@ class SlotScheduler:
         self.host_sync_s = 0.0
 
         self.paged = paged
+        if prefix_cache and not paged:
+            raise NotImplementedError(
+                "prefix sharing rides the paged block table; contiguous "
+                "slots have no page indirection to share through")
         if paged:
             if dispatch_mode != "full_jit":
                 raise NotImplementedError(
@@ -259,6 +527,8 @@ class SlotScheduler:
             self.n_pages = n_pages
             self.prefill_chunk = prefill_chunk
             self.allocator = BlockAllocator(n_pages)
+            self.prefix = PrefixCache(self.allocator) if prefix_cache \
+                else None
             self.preemptions = 0
             self.step_kv_blocks: List[int] = []
             self._bt = np.zeros((n_slots, self.max_blocks), np.int32)
@@ -270,6 +540,7 @@ class SlotScheduler:
                 page_size=page_size, n_pages=n_pages)
         else:
             self.preemptions = 0
+            self.prefix = None
             self.cache = model.init_cache(n_slots, max_len,
                                           kv_dtype=kv_dtype, slotted=True)
         self.slots: List[Optional[_Session]] = [None] * n_slots
@@ -278,12 +549,18 @@ class SlotScheduler:
         self.events: List[Event] = []
         self.tick_count = 0
         self.decode_steps = 0
+        self.prefill_tokens = 0     # tokens dispatched through prefill
+        self.prefix_hits = 0        # admissions matching a cached prefix
+        self.prefix_tokens_saved = 0
+        self.cow_copies = 0
         self._admit_count = 0       # sampling-salt counter (even salts)
         self._admission_order = 0   # monotone admission id (preempt prio)
 
         if paged:
             self._prefill_chunk_jit = jax.jit(model.prefill_chunk_into_slot,
                                               donate_argnums=(2,))
+            self._copy_page_jit = jax.jit(model.copy_kv_page,
+                                          donate_argnums=(0,))
         else:
             self._prefill_slot = jax.jit(model.prefill_into_slot,
                                          donate_argnums=(2,))
@@ -327,6 +604,18 @@ class SlotScheduler:
     @property
     def free_pages(self) -> Optional[int]:
         return self.allocator.n_free if self.paged else None
+
+    @property
+    def cached_pages(self) -> Optional[int]:
+        """Pages currently held by the prefix cache (None when prefix
+        sharing is off)."""
+        return len(self.prefix) if self.prefix is not None else None
+
+    def flush_prefix_cache(self) -> int:
+        """Drop every unreferenced cached prefix page back to the free
+        list (end-of-run accounting; under allocation pressure the LRU
+        reclaim does this incrementally on its own)."""
+        return self.prefix.flush() if self.prefix is not None else 0
 
     def step_cache_size(self) -> Optional[int]:
         """Number of compiled decode-step executables (the recompile
@@ -386,6 +675,53 @@ class SlotScheduler:
     def _pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
+    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        """``allocator.alloc`` with prefix-cache pressure relief: when
+        the free list is short, unreferenced cached prefix pages are
+        reclaimed LRU-first to cover the shortfall.  Cached pages are a
+        soft reserve — they never deny a MANDATORY allocation the bare
+        pool could have served.  (Optional horizon lookahead stays
+        free-list-only by design: speculative pages are worth less than
+        cached prefills, so a warm cache shrinks the lookahead grant
+        rather than the other way round.)"""
+        got = self.allocator.alloc(n)
+        if got is None and self.prefix is not None:
+            self.prefix.reclaim(n - self.allocator.n_free)
+            got = self.allocator.alloc(n)
+        return got
+
+    def _can_cover(self, need: int, exclude: Sequence[int] = ()) -> bool:
+        """Could ``need`` pages be obtained without preempting anyone —
+        free list first, cache reclaim cascade as the fallback
+        (``exclude``: matched pages an admission in flight is about to
+        retain, which must count as pinned)?  The cache walk only runs
+        when the free list alone is short."""
+        if self.allocator.n_free >= need:
+            return True
+        if self.prefix is None:
+            return False
+        return (self.allocator.n_free
+                + self.prefix.reclaimable(exclude)) >= need
+
+    def _match_prefix(self, seq: np.ndarray) -> List[int]:
+        """Pages backing the longest cached page-aligned prefix of the
+        session's prefill sequence ([] when sharing is off)."""
+        if self.prefix is None:
+            return []
+        return self.prefix.match(seq, self.page_size)
+
+    def _register_prefix(self, sess: _Session) -> None:
+        """Index the session's fully-prefilled pages so later admissions
+        can share them.  Only full pages enter the index, and only after
+        their prefill chunk completed — a page mid-prefill has no final
+        content to share."""
+        if self.prefix is None:
+            return
+        n_blocks = sess.prefilled // self.page_size
+        if n_blocks:
+            self.prefix.register(sess.prefill_seq, self.page_size,
+                                 sess.pages, n_blocks)
+
     def _release_slot(self, slot: int, sess: _Session) -> None:
         """Reclaim a session's pages and park the lane on the sentinel."""
         self.allocator.release(sess.pages)
@@ -436,7 +772,7 @@ class SlotScheduler:
         if it still can't fit with only the needy session (and older
         ones) resident."""
         while True:
-            got = self.allocator.alloc(n)
+            got = self._alloc_pages(n)
             if got is not None:
                 return got
             victims = [(s.admit_seq, i, s)
@@ -477,6 +813,8 @@ class SlotScheduler:
         sess.prefilled = start + C
         sess.pos = sess.prefilled
         self._pos[slot] = sess.prefilled
+        self.prefill_tokens += C
+        self._register_prefix(sess)
         if sess.decoding:
             # prefill complete: sample the first token — unless resuming
             # after preemption, where the last generated token is still
@@ -495,12 +833,39 @@ class SlotScheduler:
                     self._finish(slot, sess)
         return True
 
-    def _admit_paged(self, slot: int, sess: _Session) -> None:
-        sess.prefill_seq = (
-            np.concatenate([sess.request.prompt,
-                            np.asarray(sess.tokens[:-1], np.int32)])
-            if sess.resume and sess.tokens else
-            np.asarray(sess.request.prompt, np.int32))
+    @staticmethod
+    def _prefill_seq_for(sess: _Session) -> np.ndarray:
+        """The token sequence admission must make resident: the prompt,
+        plus the generated prefix when resuming after preemption (all
+        but the last generated token — that one is re-fed through the
+        next decode step).  Memoised on the session: a gate-blocked
+        queue head is re-examined every tick, and its sequence is
+        frozen while it waits (tokens only grow while resident)."""
+        if sess.seq_cache is None:
+            sess.seq_cache = (
+                np.concatenate([sess.request.prompt,
+                                np.asarray(sess.tokens[:-1], np.int32)])
+                if sess.resume and sess.tokens else
+                np.asarray(sess.request.prompt, np.int32))
+        return sess.seq_cache
+
+    def _admit_paged(self, slot: int, sess: _Session, seq: np.ndarray,
+                     shared: List[int]) -> None:
+        """Install a session in ``slot``; with prefix sharing, point the
+        block table at the ``shared`` pages (retaining them) so only the
+        tail past the match is ever prefilled.
+
+        When the match covers the WHOLE sequence there is nothing left
+        to prefill.  A resumed session needs no logits either (its next
+        input token is already known) and starts decoding at once; a
+        fresh session still owes its first sample, so it *replays* the
+        last prompt token through the decode path — and because that
+        step's KV write lands at position ``len(seq) - 1``, inside the
+        last shared page, that page is CoW-faulted into a private copy
+        (host-side page copy, before any dispatch) so shared pages are
+        never written."""
+        sess.prefill_seq = seq
+        sess.seq_cache = None        # tokens grow while resident
         sess.prefilled = 0
         sess.pages = []
         sess.slot = slot
@@ -512,24 +877,105 @@ class SlotScheduler:
         self._bt_dirty = True
         self._pos[slot] = 0
         self.events.append(("admit", sess.request.session_id, slot))
+        if not shared:
+            return
+        k = len(shared)
+        matched = k * self.page_size
+        self.prefix_hits += 1
+        if matched < len(seq):
+            # tail remains: share the matched run, prefill only the tail
+            # (which writes fresh private pages — no CoW needed)
+            self.allocator.retain(shared)
+            sess.pages = list(shared)
+            self._bt[slot, :k] = shared
+            sess.prefilled = matched
+            sess.pos = matched
+            self._pos[slot] = matched
+            self.prefix_tokens_saved += matched
+        elif sess.resume and sess.tokens:
+            # fully cached resume: nothing to prefill, nothing to sample
+            self.allocator.retain(shared)
+            sess.pages = list(shared)
+            self._bt[slot, :k] = shared
+            sess.prefilled = len(seq)
+            sess.pos = len(seq)
+            self._pos[slot] = len(seq)
+            sess.resume = False
+            self.prefix_tokens_saved += len(seq)
+        else:
+            # fully cached fresh prompt: CoW-fault the last shared page
+            # (the replayed token's write target), then replay the last
+            # prompt token through decode for the first sample.  Retain
+            # BEFORE allocating: the copy's allocation may reclaim
+            # cached pages, and the retained ones must be pinned.  (The
+            # reclaim may legally steal the unretained source page
+            # itself — the copy then degrades to an in-place no-op and
+            # the page simply changes owner, content already correct.)
+            self.allocator.retain(shared[:-1])
+            got = self._alloc_pages(1)
+            assert got is not None, "admission gate covered the CoW page"
+            sess.pages = list(shared[:-1]) + got
+            self._bt[slot, :k - 1] = shared[:-1]
+            self._bt[slot, k - 1] = got[0]
+            self.cache = self._copy_page_jit(
+                self.cache, jnp.int32(shared[-1]), jnp.int32(got[0]))
+            self.cow_copies += 1
+            sess.prefilled = len(seq)
+            sess.pos = len(seq) - 1
+            self._pos[slot] = len(seq) - 1
+            self.prefix_tokens_saved += len(seq)
+        self._pos_dirty = True
+        self._bt_dirty = True
 
     def _backfill_paged(self) -> None:
         """FIFO admission gated on free pages: the queue head is
         admitted only when its first chunk's pages are available
         (head-of-line blocking is deliberate — skipping ahead would
-        starve long prompts)."""
+        starve long prompts).  With prefix sharing the gate charges only
+        the UNMATCHED pages (shared pages are already resident) and may
+        count reclaimable cached pages as free — excluding the matched
+        run itself, which the admission is about to pin."""
         for slot in range(self.n_slots):
             while self.slots[slot] is None and self.waiting:
                 head = self.waiting[0]
-                seq_len = (len(head.request.prompt) +
-                           max(len(head.tokens) - 1, 0))
-                first = (seq_len if self.prefill_chunk is None
-                         else min(self.prefill_chunk, seq_len))
-                if self.allocator.n_free < self._pages_for(first):
-                    return          # gate: wait for reclaim
-                self._admit_paged(slot, self.waiting.popleft())
-                ok = self._prefill_next_chunk(slot, self.slots[slot])
-                assert ok, "gated admission must have its first chunk"
+                seq = self._prefill_seq_for(head)
+                shared = self._match_prefix(seq)
+                while True:
+                    matched = len(shared) * self.page_size
+                    if shared and matched >= len(seq):
+                        # fully cached: a fresh admission needs 1 page
+                        # (the CoW copy) and pins only shared[:-1] — the
+                        # last matched page is a legal reclaim target
+                        # (it may even BE the copy, already holding the
+                        # right content); a resume pins the whole match
+                        # and needs 1 so its first decode write can't
+                        # instantly wedge
+                        resume = head.resume and head.tokens
+                        pinned = shared if resume else shared[:-1]
+                        need = 1
+                    else:
+                        pinned = shared
+                        tail = len(seq) - matched
+                        first = (tail if self.prefill_chunk is None
+                                 else min(self.prefill_chunk, tail))
+                        need = (self._pages_for(matched + first)
+                                - len(shared))
+                    if self._can_cover(need, pinned):
+                        break
+                    if not shared:
+                        return      # gate: wait for reclaim
+                    # pool can't cover the admission with the full match
+                    # pinned: shrink the match — its dropped tail pages
+                    # become reclaimable fuel for this very admission
+                    # (degrades to the unshared gate, which keeps the
+                    # no-cache liveness property)
+                    shared = shared[:-1]
+                self._admit_paged(slot, self.waiting.popleft(), seq,
+                                  shared)
+                sess = self.slots[slot]
+                if not sess.decoding:
+                    ok = self._prefill_next_chunk(slot, sess)
+                    assert ok, "gated admission must have its first chunk"
                 if self.slots[slot] is not None and \
                         not self.slots[slot].decoding:
                     break           # chunked prefill continues next ticks
@@ -550,6 +996,7 @@ class SlotScheduler:
                 sess.slot = slot
                 sess.admitted_tick = self.tick_count
                 self.slots[slot] = sess
+                self.prefill_tokens += int(prompt.shape[1])
                 sid = sess.request.session_id
                 self.events.append(("admit", sid, slot))
                 # even salts for admissions (one per admission, counted
@@ -604,7 +1051,10 @@ class SlotScheduler:
         Returns the steps granted; 0 means the session itself was
         preempted (the same failure path as K=1)."""
         def take(n_pages: int) -> bool:
-            """Free-list-only allocation of ``n_pages`` pages."""
+            """Free-list-only allocation of ``n_pages`` pages: optional
+            lookahead never evicts a session AND never drains the
+            prefix cache — speculative pages are not allocation
+            pressure (the mandatory-page path below does apply it)."""
             got = self.allocator.alloc(n_pages)
             if got is None:
                 return False
@@ -684,7 +1134,7 @@ class SlotScheduler:
             return
         toks = np.zeros((self.n_slots, 1), np.int32)
         for slot, sess in active:
-            toks[slot, 0] = sess.tokens[-1]
+            toks[slot, 0] = sess.next_input_token
         if self.paged:
             # this step reads blocks 0..ceil((pos+1)/page)-1 per live
             # lane (pos+1 counts the row the step writes) — the KV
@@ -746,7 +1196,7 @@ class SlotScheduler:
         toks = np.zeros((self.n_slots, 1), np.int32)
         steps_left = np.zeros((self.n_slots,), np.int32)
         for slot, sess in active:
-            toks[slot, 0] = sess.tokens[-1]
+            toks[slot, 0] = sess.next_input_token
             steps_left[slot] = plan[slot]
         key = jax.random.fold_in(self.key, 2 * self.tick_count + 1)
         t0 = time.perf_counter()
@@ -802,15 +1252,18 @@ class SlotScheduler:
         """Drive until the waiting queue and all slots drain.
 
         May be called repeatedly (submit → run → submit → run) on one
-        scheduler — compiled programs are reused across waves.  The
-        returned ``sessions`` map is cumulative; ``tokens_per_s`` and
-        ``wall_s`` cover only the sessions this call finished."""
+        scheduler — compiled programs are reused across waves.  See
+        ``ContinuousResult`` for which fields are cumulative across
+        calls (``sessions``, ``events``, ``decode_steps``) and which
+        cover this call only (everything else)."""
         fin0 = len(self.finished)
         tick0 = self.tick_count
         pre0 = self.preemptions
         disp0 = self.decode_steps
         hd0, hs0 = self.host_dispatch_s, self.host_sync_s
         blk0 = len(self.step_kv_blocks) if self.paged else 0
+        pf0, ph0 = self.prefill_tokens, self.prefix_hits
+        ps0, cw0 = self.prefix_tokens_saved, self.cow_copies
         limit = self.max_ticks
         if limit is None:
             def ticks_for(s: _Session) -> int:
@@ -845,16 +1298,24 @@ class SlotScheduler:
                 step_times_s=s.step_times_s)
             for s in self.finished}
         return ContinuousResult(
-            sessions=sessions, ticks=self.tick_count,
+            sessions=sessions, ticks=self.tick_count - tick0,
             decode_steps=self.decode_steps, wall_s=wall,
             tokens_per_s=n_tokens / wall if wall > 0 else float("nan"),
             step_cache_size=self.step_cache_size(),
             launches_per_step=self.launches_per_step,
-            events=self.events, preemptions=self.preemptions - pre0,
+            # snapshot: a returned result must not mutate when the
+            # scheduler keeps running (events stays cumulative — the
+            # full log up to the end of THIS call)
+            events=list(self.events),
+            preemptions=self.preemptions - pre0,
             step_kv_blocks=(self.step_kv_blocks[blk0:] if self.paged
                             else None),
             steps_per_tick=self.steps_per_tick,
             dispatches=self.decode_steps - disp0,
             run_tokens=n_tokens,
             host_dispatch_s=self.host_dispatch_s - hd0,
-            host_sync_s=self.host_sync_s - hs0)
+            host_sync_s=self.host_sync_s - hs0,
+            prefill_tokens=self.prefill_tokens - pf0,
+            prefix_hits=self.prefix_hits - ph0,
+            prefix_tokens_saved=self.prefix_tokens_saved - ps0,
+            cow_copies=self.cow_copies - cw0)

@@ -169,6 +169,59 @@ class TestSchedulerInvariants:
         assert sched.step_cache_size() == 1
         assert sched.decode_steps > 0
 
+    def test_run_twice_field_semantics(self):
+        """Regression for the per-run/cumulative drift on
+        ``ContinuousResult``: per-run fields must reset at every
+        ``run()`` call while the cumulative group keeps growing (the
+        documented contract on the dataclass)."""
+        eng = _engine()
+        sched = SlotScheduler(eng.model, eng.params, n_slots=2, max_len=32)
+        wave1 = _requests(4)
+        for r in wave1:
+            sched.submit(r)
+        r1 = sched.run()
+        wave2 = [SessionRequest(r.session_id + "w2", r.prompt,
+                                r.max_new_tokens) for r in _requests(2)]
+        for r in wave2:
+            sched.submit(r)
+        r2 = sched.run()
+        # cumulative group: grows across calls
+        assert len(r1.sessions) == 4 and len(r2.sessions) == 6
+        assert r2.decode_steps > r1.decode_steps
+        assert len(r2.events) > len(r1.events)
+        # per-run group: covers only its own call
+        assert r1.ticks + r2.ticks == sched.tick_count
+        assert r2.dispatches == r2.decode_steps - r1.decode_steps
+        w2_tokens = sum(len(r2.tokens_for(r.session_id)) for r in wave2)
+        assert r2.run_tokens == w2_tokens
+        assert r2.prefill_tokens == sum(len(r.prompt) for r in wave2)
+        assert r2.host_dispatch_s <= r2.wall_s
+        assert r2.preemptions == 0 and r2.cow_copies == 0
+
+    def test_run_twice_field_semantics_paged(self):
+        """Same contract through the paged counters (step_kv_blocks,
+        preemptions, prefix stats)."""
+        eng = _engine()
+        sched = SlotScheduler(eng.model, eng.params, n_slots=2, max_len=32,
+                              paged=True, page_size=8,
+                              prefix_cache=True)
+        for r in _requests(3, base_len=8):   # >= one full page each
+            sched.submit(r)
+        r1 = sched.run()
+        for r in _requests(3, base_len=8):
+            sched.submit(SessionRequest(r.session_id + "w2", r.prompt,
+                                        r.max_new_tokens))
+        r2 = sched.run()
+        # wave 2 replays wave 1's prompts: every admission hits the
+        # cache, and per-run stats cover only wave 2
+        assert r1.prefix_hits == 0
+        assert r2.prefix_hits == 3
+        assert r2.prefill_tokens < r1.prefill_tokens
+        assert len(r2.step_kv_blocks) == r2.dispatches
+        assert r2.run_tokens == sum(
+            len(s.tokens) for sid, s in r2.sessions.items()
+            if sid.endswith("w2"))
+
 
 class TestContinuousDispatchModes:
     """The dispatch A/B hooks survive into continuous serving: all three

@@ -1,0 +1,438 @@
+"""Prefix sharing with copy-on-write KV pages over the paged block table.
+
+The contract mirrors the paged cache's own: sharing physical pages
+across sessions is a pure MEMORY change — greedy streams are
+token-identical to the no-sharing baseline through partial matches,
+fully-cached prompts (the CoW replay), chunked prefill, horizon-K
+macro-ticks, oversubscription, preemption, and resume — shared pages
+are never written (the poisoned-page guard reads them back bit-equal),
+and every allocator reference balances: after the sessions drain and
+the cache is flushed, the free list is back to its initial state.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import (BlockAllocator, DecodeEngine, PrefixCache,
+                           SessionRequest, SlotScheduler)
+
+KEY = jax.random.PRNGKey(11)
+CFG = get_config("qwen2.5-3b").reduced()
+# f32 keeps the CoW replay well-conditioned: the replayed token's logits
+# come from the decode path while the baseline's come from prefill —
+# identical math, and f32 keeps the greedy argmax far from bf16 ties
+# (same rationale as table10/table12)
+CFG_F32 = CFG.replace(dtype="float32")
+
+
+def _engine(cfg=CFG, **kw):
+    m = Model(cfg, **kw)
+    return DecodeEngine(m, m.init(KEY))
+
+
+def _fleet(cfg, n, *, page=8, shared_pages=2, base_new=4, dups=0):
+    """n sessions sharing a ``shared_pages``-page preamble with distinct
+    tails, plus ``dups`` exact page-aligned duplicates (CoW case)."""
+    preamble = np.asarray(jax.random.randint(
+        KEY, (shared_pages * page,), 0, cfg.vocab_size))
+    reqs = []
+    for i in range(n):
+        k = jax.random.fold_in(KEY, 100 + i)
+        tail = np.asarray(jax.random.randint(k, (3 + i,), 0,
+                                             cfg.vocab_size))
+        reqs.append(SessionRequest(
+            f"s{i}", np.concatenate([preamble, tail]), base_new + i % 3))
+    for i in range(dups):
+        reqs.append(SessionRequest(f"dup{i}", preamble, base_new))
+    return reqs
+
+
+def _assert_identical(reqs, ref, res, what):
+    for r in reqs:
+        np.testing.assert_array_equal(
+            ref.tokens_for(r.session_id), res.tokens_for(r.session_id),
+            err_msg=f"{r.session_id} diverged: {what}")
+
+
+class TestBlockAllocatorRefcounts:
+    def test_alloc_retain_release_lifecycle(self):
+        a = BlockAllocator(6)
+        got = a.alloc(2)
+        assert [a.refcount(p) for p in got] == [1, 1]
+        a.retain(got)                      # second holder (sharer)
+        a.release(got)                     # sharer drops
+        assert a.n_free == 3               # still held by the owner
+        assert [a.refcount(p) for p in got] == [1, 1]
+        a.release(got)                     # owner drops -> freed
+        assert a.n_free == 5
+        assert [a.refcount(p) for p in got] == [0, 0]
+
+    def test_release_past_zero_rejected(self):
+        a = BlockAllocator(4)
+        (p,) = a.alloc(1)
+        a.release([p])
+        with pytest.raises(AssertionError):
+            a.release([p])
+
+    def test_retain_of_free_page_rejected(self):
+        a = BlockAllocator(4)
+        with pytest.raises(AssertionError):
+            a.retain([2])
+
+    def test_free_membership_is_set_backed(self):
+        """The double-free check must not scan the free list (it used to
+        be O(free) per page — quadratic reclaim on big pools)."""
+        a = BlockAllocator(5000)
+        got = a.alloc(4000)
+        a.release(got)                     # fast only if set-backed
+        assert a.n_free == 4999
+        with pytest.raises(AssertionError):
+            a.release([got[0]])
+
+
+class TestPrefixCacheUnit:
+    def _tokens(self, n, seed=0):
+        return np.asarray(jax.random.randint(
+            jax.random.fold_in(KEY, seed), (n,), 0, 997))
+
+    def test_match_walks_longest_chain(self):
+        a = BlockAllocator(10)
+        c = PrefixCache(a)
+        toks = self._tokens(32)
+        pages = a.alloc(4)
+        c.register(toks, 8, pages, 4)
+        assert c.match(toks, 8) == pages
+        assert c.match(toks[:20], 8) == pages[:2]   # page-aligned prefix
+        assert c.match(self._tokens(32, seed=1), 8) == []
+        # diverging block 2 matches only the common front
+        mixed = np.concatenate([toks[:16], self._tokens(16, seed=2)])
+        assert c.match(mixed, 8) == pages[:2]
+
+    def test_register_keeps_incumbent_on_duplicate(self):
+        a = BlockAllocator(10)
+        c = PrefixCache(a)
+        toks = self._tokens(16)
+        first, second = a.alloc(2), a.alloc(2)
+        c.register(toks, 8, first, 2)
+        c.register(toks, 8, second, 2)      # concurrent duplicate prefill
+        assert c.match(toks, 8) == first
+        assert a.refcount(second[0]) == 1   # dup pages gained no cache ref
+
+    def test_reclaim_is_leaf_first_lru(self):
+        a = BlockAllocator(10)
+        c = PrefixCache(a)
+        t1, t2 = self._tokens(16, 1), self._tokens(16, 2)
+        p1, p2 = a.alloc(2), a.alloc(2)
+        c.register(t1, 8, p1, 2)
+        c.register(t2, 8, p2, 2)
+        a.release(p1)
+        a.release(p2)                       # both chains cache-only now
+        c.match(t1, 8)                      # refresh chain 1 -> 2 is LRU
+        assert c.reclaim(1) == 1
+        assert c.match(t2, 8) == p2[:1]     # chain 2 lost its leaf
+        assert c.match(t1, 8) == p1
+
+    def test_parent_pinned_while_child_cached(self):
+        """A chain's root page can only leave after its leaf did — the
+        leaf's content is reachable only through the parent's chain."""
+        a = BlockAllocator(10)
+        c = PrefixCache(a)
+        toks = self._tokens(24)
+        pages = a.alloc(3)
+        c.register(toks, 8, pages, 3)
+        a.release(pages)
+        assert c.reclaimable() == 3
+        c.reclaim(1)
+        assert c.match(toks, 8) == pages[:2]    # leaf went first
+        assert c.flush() == 2
+        assert a.n_free == 9
+
+    def test_referenced_pages_survive_flush(self):
+        a = BlockAllocator(10)
+        c = PrefixCache(a)
+        toks = self._tokens(16)
+        pages = a.alloc(2)
+        c.register(toks, 8, pages, 2)       # owner + cache hold them
+        assert c.flush() == 0               # owner still holds -> pinned
+        a.release(pages)
+        assert c.flush() == 2
+        assert a.n_free == 9
+
+
+class TestPrefixSharingIdentity:
+    def test_partial_match_token_identity(self):
+        """Shared preamble + distinct tails: matched pages are aliased,
+        only tails prefill, streams match the no-sharing baseline."""
+        eng = _engine()
+        reqs = _fleet(CFG, 6)
+        ref = eng.generate_continuous(reqs, n_slots=3, max_len=40,
+                                      paged=True, page_size=8)
+        res = eng.generate_continuous(reqs, n_slots=3, max_len=40,
+                                      paged=True, page_size=8,
+                                      prefix_cache=True)
+        assert res.step_cache_size == 1
+        assert res.prefix_hits == 5          # all but the cold first
+        assert res.cow_copies == 0           # tails keep writes private
+        assert res.prefill_tokens < ref.prefill_tokens
+        assert res.prefix_tokens_saved == 5 * 16
+        _assert_identical(reqs, ref, res, "partial match")
+
+    def test_fork_duplicated_prompts_cow(self):
+        """Fork: page-aligned duplicates of a served prompt skip prefill
+        entirely; the replayed last token's write CoW-faults the last
+        shared page.  Unfork: streams equal the no-sharing baseline."""
+        eng = _engine(CFG_F32)
+        reqs = _fleet(CFG_F32, 2, dups=2)
+        ref = eng.generate_continuous(reqs, n_slots=2, max_len=40,
+                                      paged=True, page_size=8)
+        res = eng.generate_continuous(reqs, n_slots=2, max_len=40,
+                                      paged=True, page_size=8,
+                                      prefix_cache=True)
+        assert res.cow_copies == 2
+        assert res.prefix_hits >= 3
+        _assert_identical(reqs, ref, res, "fork/unfork")
+
+    def test_pallas_route_token_identity(self):
+        cfg = CFG.replace(vocab_size=256, d_model=96, d_ff=192,
+                          n_layers=2, n_heads=4, n_kv_heads=2,
+                          head_dim=16, dtype="float32")
+        eng = _engine(cfg, decode_backend="pallas")
+        reqs = _fleet(cfg, 3, dups=1)
+        ref = eng.generate_continuous(reqs, n_slots=2, max_len=40,
+                                      paged=True, page_size=8)
+        res = eng.generate_continuous(reqs, n_slots=2, max_len=40,
+                                      paged=True, page_size=8,
+                                      prefix_cache=True)
+        assert res.cow_copies >= 1
+        _assert_identical(reqs, ref, res, "pallas route")
+
+    def test_chunked_prefill_tail_alignment(self):
+        """Matched boundary + chunked tail prefill: start positions stay
+        page-aligned and the streams are unchanged."""
+        eng = _engine()
+        reqs = _fleet(CFG, 5)
+        ref = eng.generate_continuous(reqs, n_slots=3, max_len=40,
+                                      paged=True, page_size=4)
+        res = eng.generate_continuous(reqs, n_slots=3, max_len=40,
+                                      paged=True, page_size=4,
+                                      prefill_chunk=8, prefix_cache=True)
+        assert res.prefix_hits >= 4
+        _assert_identical(reqs, ref, res, "chunked tail")
+
+    def test_horizon_k_token_identity(self):
+        """Sharing under horizon-K fused macro-ticks: the lookahead
+        reservation must stay token-identical with aliased pages."""
+        eng = _engine(CFG_F32)
+        reqs = _fleet(CFG_F32, 5, dups=1)
+        ref = eng.generate_continuous(reqs, n_slots=3, max_len=40,
+                                      paged=True, page_size=8)
+        res = eng.generate_continuous(reqs, n_slots=3, max_len=40,
+                                      paged=True, page_size=8,
+                                      prefix_cache=True, steps_per_tick=4)
+        assert res.step_cache_size == 1
+        assert res.cow_copies >= 1
+        _assert_identical(reqs, ref, res, "horizon K=4")
+
+
+class TestSharedPagesNeverWritten:
+    def test_poisoned_page_guard(self):
+        """Snapshot every cached page after the first wave; a second
+        wave that shares them (incl. the CoW replay) must leave their
+        K/V bit-unchanged — decode and prefill writes always land in
+        private pages."""
+        eng = _engine(CFG_F32)
+        reqs = _fleet(CFG_F32, 3, dups=1)
+        sched = SlotScheduler(eng.model, eng.params, n_slots=2,
+                              max_len=40, paged=True, page_size=8,
+                              prefix_cache=True)
+        for r in reqs:
+            sched.submit(r)
+        sched.run()
+        cached = sched.prefix.pages()
+        assert cached, "first wave registered nothing"
+        k0 = np.asarray(sched.cache["k"][:, cached], np.float32)
+        v0 = np.asarray(sched.cache["v"][:, cached], np.float32)
+        import dataclasses
+        for r in reqs:                      # second wave: every prompt hits
+            sched.submit(dataclasses.replace(r, session_id="w2" + r.session_id))
+        res = sched.run()
+        assert res.prefix_hits == len(reqs)
+        assert res.cow_copies >= 1          # the dup replayed through CoW
+        np.testing.assert_array_equal(
+            k0, np.asarray(sched.cache["k"][:, cached], np.float32),
+            err_msg="a shared K page was written")
+        np.testing.assert_array_equal(
+            v0, np.asarray(sched.cache["v"][:, cached], np.float32),
+            err_msg="a shared V page was written")
+
+
+class TestRefcountBalance:
+    def _drain_and_check(self, sched, reqs, ref, what):
+        for r in reqs:
+            sched.submit(r)
+        res = sched.run()
+        _assert_identical(reqs, ref, res, what)
+        assert sched.free_slots == list(range(sched.n_slots))
+        sched.flush_prefix_cache()
+        assert sched.free_pages == sched.n_pages - 1, \
+            f"free list unbalanced after {what}"
+        assert all(sched.allocator.refcount(p) == 0
+                   for p in range(1, sched.n_pages)), \
+            f"leaked refcounts after {what}"
+        return res
+
+    def test_balance_through_eviction(self):
+        eng = _engine()
+        reqs = _fleet(CFG, 6)
+        ref = eng.generate_continuous(reqs, n_slots=3, max_len=40)
+        sched = SlotScheduler(eng.model, eng.params, n_slots=3,
+                              max_len=40, paged=True, page_size=8,
+                              prefix_cache=True)
+        self._drain_and_check(sched, reqs, ref, "eviction churn")
+
+    def test_balance_through_oversubscription_and_reclaim(self):
+        """An oversubscribed pool forces the LRU reclaim to eat cached
+        pages mid-run; identity and the final balance must survive."""
+        eng = _engine()
+        reqs = _fleet(CFG, 6)
+        ref = eng.generate_continuous(reqs, n_slots=3, max_len=40)
+        sched = SlotScheduler(eng.model, eng.params, n_slots=3,
+                              max_len=40, paged=True, page_size=8,
+                              n_pages=9, prefix_cache=True)
+        self._drain_and_check(sched, reqs, ref, "oversubscribed")
+
+    def test_balance_through_preemption(self):
+        """Preempted sessions release shared refs, then re-match their
+        own cached prefix on resume (re-prefill skipped for the match)."""
+        eng = _engine()
+        reqs = [SessionRequest("a", np.arange(8) % CFG.vocab_size, 20),
+                SessionRequest("b", np.arange(8) % CFG.vocab_size, 20)]
+        ref = eng.generate_continuous(reqs, n_slots=2, max_len=40)
+        sched = SlotScheduler(eng.model, eng.params, n_slots=2,
+                              max_len=40, paged=True, page_size=4,
+                              n_pages=1 + 9, prefix_cache=True)
+        res = self._drain_and_check(sched, reqs, ref, "preemption")
+        assert res.preemptions > 0, "pool was sized to force preemption"
+        assert res.prefix_hits > 0, "resume never re-matched its prefix"
+
+    def test_balance_through_horizon_trims(self):
+        """EOS/budget trims mid-horizon reclaim lookahead pages; with
+        sharing in play the refcounts must still zero out."""
+        eng = _engine(CFG_F32)
+        reqs = _fleet(CFG_F32, 5, dups=1, base_new=6)
+        ref = eng.generate_continuous(reqs, n_slots=2, max_len=40)
+        sched = SlotScheduler(eng.model, eng.params, n_slots=2,
+                              max_len=40, paged=True, page_size=4,
+                              n_pages=1 + 12, prefix_cache=True,
+                              steps_per_tick=4)
+        self._drain_and_check(sched, reqs, ref, "horizon trims")
+
+
+class TestSchedulerInvariants:
+    def test_prefix_cache_requires_paged(self):
+        eng = _engine()
+        with pytest.raises(NotImplementedError):
+            SlotScheduler(eng.model, eng.params, n_slots=2, max_len=32,
+                          prefix_cache=True)
+
+    def test_lru_reclaim_under_pressure(self):
+        """A second wave of UNRELATED prompts must be able to evict the
+        first wave's cached prefix instead of deadlocking on the gate."""
+        eng = _engine()
+        wave1 = _fleet(CFG, 3)
+        sched = SlotScheduler(eng.model, eng.params, n_slots=2,
+                              max_len=40, paged=True, page_size=8,
+                              n_pages=11, prefix_cache=True)
+        for r in wave1:
+            sched.submit(r)
+        sched.run()
+        assert sched.cached_pages > 0
+        wave2 = [SessionRequest(f"u{i}", np.asarray(jax.random.randint(
+            jax.random.fold_in(KEY, 900 + i), (24,), 0, CFG.vocab_size)), 3)
+            for i in range(3)]
+        ref = eng.generate_continuous(wave2, n_slots=2, max_len=40)
+        for r in wave2:
+            sched.submit(r)
+        res = sched.run()
+        _assert_identical(wave2, ref, res, "post-reclaim wave")
+        assert res.prefix_hits == 0          # nothing matched, only evicted
+
+    def test_fully_cached_admission_in_exhausted_pool(self):
+        """Regression: when the ONLY reclaimable pages are the matched
+        chain itself, the gate must not pin them all and deadlock — the
+        CoW copy may legally consume the last matched page, and failing
+        that the match shrinks until the admission fits (degrading to
+        the unshared gate's liveness)."""
+        eng = _engine(CFG_F32)
+        prompt = np.asarray(jax.random.randint(KEY, (16,), 0,
+                                               CFG_F32.vocab_size))
+        sched = SlotScheduler(eng.model, eng.params, n_slots=1,
+                              max_len=24, paged=True, page_size=8,
+                              n_pages=3, prefix_cache=True)
+        sched.submit(SessionRequest("a", prompt, 1))
+        sched.run()                  # both prompt pages now cache-held
+        assert sched.free_pages == 0 and sched.cached_pages == 2
+        sched.submit(SessionRequest("b", prompt, 1))
+        res = sched.run()            # must not RuntimeError on the gate
+        np.testing.assert_array_equal(res.tokens_for("a"),
+                                      res.tokens_for("b"))
+        sched.flush_prefix_cache()
+        assert sched.free_pages == 2
+
+    def test_compiled_once_through_sharing_churn(self):
+        eng = _engine()
+        sched = SlotScheduler(eng.model, eng.params, n_slots=2,
+                              max_len=40, paged=True, page_size=8,
+                              prefix_cache=True)
+        for r in _fleet(CFG, 4, dups=1):
+            sched.submit(r)
+        sched.run()
+        assert sched.step_cache_size() == 1
+        import dataclasses
+        for r in _fleet(CFG, 4, dups=1):
+            sched.submit(dataclasses.replace(r, session_id="w2" + r.session_id))
+        sched.run()
+        assert sched.step_cache_size() == 1
+
+    def test_event_log_replay_with_sharing(self):
+        eng = _engine(CFG_F32)
+        sched = SlotScheduler(eng.model, eng.params, n_slots=2,
+                              max_len=40, paged=True, page_size=8,
+                              prefix_cache=True)
+        reqs = _fleet(CFG_F32, 3, dups=2)
+        for r in reqs:
+            sched.submit(r)
+        res = sched.run()
+        occupancy = {}
+        for ev in res.events:
+            kind, sid, slot = ev[0], ev[1], ev[2]
+            if kind == "admit":
+                assert slot not in occupancy
+                occupancy[slot] = sid
+            elif kind in ("finish", "preempt"):
+                assert occupancy.pop(slot) == sid
+        assert not occupancy
+        assert len(res.sessions) == len(reqs)
+
+
+class TestCopyKvPage:
+    def test_copies_all_layers_both_tensors(self):
+        m = Model(CFG)
+        cache = m.init_cache(2, 32, paged=True, page_size=8)
+        cache["k"] = cache["k"].at[:, 3].set(1.5)
+        cache["v"] = cache["v"].at[:, 3].set(-2.5)
+        out = m.copy_kv_page(cache, jnp.int32(3), jnp.int32(5))
+        assert np.all(np.asarray(out["k"][:, 5], np.float32) == 1.5)
+        assert np.all(np.asarray(out["v"][:, 5], np.float32) == -2.5)
+        # source and unrelated pages untouched
+        assert np.all(np.asarray(out["k"][:, 3], np.float32) == 1.5)
+        assert np.all(np.asarray(out["k"][:, 4], np.float32) == 0)
+
+    def test_rejects_contiguous_cache(self):
+        m = Model(CFG)
+        cache = m.init_cache(2, 32, slotted=True)
+        with pytest.raises(AssertionError):
+            m.copy_kv_page(cache, 1, 2)

@@ -29,6 +29,17 @@ class TestStats:
         assert (stats.bootstrap_ci_mean(xs, seed=3)
                 == stats.bootstrap_ci_mean(xs, seed=3))
 
+    def test_bootstrap_ci_empty_sample(self):
+        """An empty sample used to raise ValueError out of
+        ``rng.integers(0, 0)``; it has no mean, so the CI is nan."""
+        lo, hi = stats.bootstrap_ci_mean([])
+        assert np.isnan(lo) and np.isnan(hi)
+
+    def test_bootstrap_ci_singleton_is_the_point(self):
+        """Quick benchmark runs with 1 repeat: the bootstrap
+        distribution of a singleton is the point itself."""
+        assert stats.bootstrap_ci_mean([7.25]) == (7.25, 7.25)
+
     def test_paired_speedups(self):
         sp = stats.paired_speedups([2.0, 4.0], [1.0, 2.0])
         assert np.allclose(sp, [2.0, 2.0])
