@@ -4,17 +4,28 @@
 ``BENCH_*.json`` perf trajectory tracked across PRs)."""
 from __future__ import annotations
 
+import re
 from typing import Dict, List, Union
 
 # rows emitted since the last take_results() call (one benchmark table's
 # worth when driven by benchmarks/run.py)
 RESULTS: List[dict] = []
 
+# a real decimal number: optional sign, digits with optional point,
+# optional exponent.  ``float()`` alone is too permissive for the k=v
+# protocol — it accepts "nan"/"inf" (which would poison the JSON dump:
+# json.dump(allow_nan=False) rejects them) and "1_2" (underscore
+# separators a typo'd field would silently parse as 12.0).
+_NUMERIC = re.compile(r"[+-]?(\d+\.?\d*|\.\d+)([eE][+-]?\d+)?\Z")
+
 
 def _parse_fields(derived: str) -> Dict[str, Union[str, float, bool]]:
     """Parse the free-form ``k=v`` pairs of a derived column into typed
-    values (floats where they parse, True/False for booleans) so the
-    JSON dump is queryable without re-tokenising strings."""
+    values (floats where they look numeric — including negatives and
+    scientific notation like ``p99=1.2e-03`` — and True/False for
+    booleans) so the JSON dump is queryable without re-tokenising
+    strings.  Non-numeric values (including nan/inf spellings) stay
+    strings, keeping the dump valid under ``allow_nan=False``."""
     out: Dict[str, Union[str, float, bool]] = {}
     for part in derived.split():
         if "=" not in part:
@@ -22,10 +33,9 @@ def _parse_fields(derived: str) -> Dict[str, Union[str, float, bool]]:
         k, v = part.split("=", 1)
         if v in ("True", "False"):
             out[k] = v == "True"
-            continue
-        try:
+        elif _NUMERIC.match(v):
             out[k] = float(v)
-        except ValueError:
+        else:
             out[k] = v
     return out
 

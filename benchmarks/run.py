@@ -42,7 +42,7 @@ def main() -> None:
                             table6_attention_backends, table7_quant_matrix,
                             table8_accounting, table9_continuous_batching,
                             table10_paged_kv, table11_launch_overhead,
-                            table12_prefix_sharing)
+                            table12_prefix_sharing, table13_slo_load)
     suites = {
         "table1": table1_rfloor_matrix.run,
         "table2": lambda: table2_dispatch_ab.run(quick=quick),
@@ -55,6 +55,7 @@ def main() -> None:
         "table10": lambda: table10_paged_kv.run(quick=quick),
         "table11": lambda: table11_launch_overhead.run(quick=quick),
         "table12": lambda: table12_prefix_sharing.run(quick=quick),
+        "table13": lambda: table13_slo_load.run(quick=quick),
     }
     if only is not None and only not in suites:
         print(f"# FAILED: unknown table {only!r} "
@@ -85,7 +86,10 @@ def main() -> None:
     report["failed"] = failed
     if json_path:
         with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
+            # allow_nan=False: a NaN/Inf anywhere in the report is a
+            # bug (strict mode would emit invalid JSON silently) — fail
+            # the run loudly instead
+            json.dump(report, f, indent=2, allow_nan=False)
         print(f"# wrote {json_path}", flush=True)
     print(f"# total {report['total_s']:.1f}s", flush=True)
     if failed:

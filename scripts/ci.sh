@@ -26,6 +26,13 @@
 #   table12-quick     prefix-sharing A/B: prefill tokens reduced >= the
 #                     shared-prefix fraction, token identity, free-list
 #                     balance (gather + pallas routes)
+#   smoke-trace       trace-driven load replay (--trace bursty) with
+#                     adaptive horizon-K and the per-class SLO report
+#   table13-quick     SLO metrics under Poisson + bursty traces on both
+#                     paged routes: TTFT/TPOT percentiles,
+#                     goodput-under-SLO, adaptive-K >= best fixed-K on
+#                     the bursty trace, token identity vs the
+#                     fixed-K/FIFO baseline
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -89,5 +96,13 @@ stage table11-quick \
 
 stage table12-quick \
     python -m benchmarks.run --quick --only=table12 --json bench_table12.json
+
+stage smoke-trace \
+    python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+        --trace bursty --sessions 8 --slots 3 --page-size 8 \
+        --steps-per-tick 8 --adaptive-k
+
+stage table13-quick \
+    python -m benchmarks.run --quick --only=table13 --json bench_table13.json
 
 echo "== ci green =="

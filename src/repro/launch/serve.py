@@ -6,6 +6,9 @@ plus the continuous-batching multi-session mode (slotted KV cache).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
       --continuous --slots 4 --sessions 10 --timed
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+      --paged --trace bursty --steps-per-tick 8 --adaptive-k --slo-json
 """
 from __future__ import annotations
 
@@ -89,7 +92,41 @@ def main():
                          "workload: one system prompt / scene preamble "
                          "replayed across sessions) — what "
                          "--prefix-cache deduplicates")
+    # trace-driven load replay (serving/trace.py)
+    ap.add_argument("--trace", default=None,
+                    choices=["poisson", "bursty"],
+                    help="replay a seeded arrival trace instead of the "
+                         "all-at-once session wave: requests are "
+                         "released into the admission queue by virtual "
+                         "arrival time and the run reports per-class "
+                         "TTFT / per-token latency percentiles and "
+                         "goodput-under-SLO on the scheduler's "
+                         "deterministic virtual clock (implies "
+                         "--continuous; --sessions sets the request "
+                         "count)")
+    ap.add_argument("--trace-seed", type=int, default=13,
+                    help="trace generator seed (same seed -> "
+                         "byte-identical trace)")
+    ap.add_argument("--rate", type=float, default=25.0,
+                    help="mean arrival rate of the trace, requests per "
+                         "virtual second")
+    ap.add_argument("--adaptive-k", action="store_true",
+                    help="let each macro-tick pick its horizon from the "
+                         "[1, --steps-per-tick] halving ladder by load "
+                         "(ends ticks at completions when sessions "
+                         "queue, at arrivals when a slot is free); "
+                         "requires --steps-per-tick >= 2")
+    ap.add_argument("--no-priority-preemption", action="store_true",
+                    help="page-pressure eviction picks the youngest "
+                         "session regardless of priority (the FIFO "
+                         "baseline) instead of "
+                         "lowest-priority-youngest")
+    ap.add_argument("--slo-json", action="store_true",
+                    help="with --trace: print the full SLO report as "
+                         "JSON instead of the one-line summary")
     args = ap.parse_args()
+    if args.trace:
+        args.continuous = True
     if args.prefix_cache:
         args.paged = True
     if args.paged:
@@ -102,6 +139,8 @@ def main():
     params = model.init(jax.random.PRNGKey(args.seed))
     engine = DecodeEngine(model, params, quant_path=args.quant)
 
+    if args.trace:
+        return serve_trace(engine, cfg, args)
     if args.continuous:
         return serve_continuous(engine, cfg, args)
 
@@ -152,6 +191,58 @@ def mixed_requests(cfg, n_sessions: int, *, base_prompt: int,
             prompt = np.concatenate([common, prompt])
         reqs.append(SessionRequest(f"session{i}", prompt, n_new))
     return reqs
+
+
+def serve_trace(engine: DecodeEngine, cfg, args):
+    """Trace-driven load replay: generate a seeded arrival trace,
+    release its requests by virtual arrival time through the continuous
+    scheduler, and report the SLO metrics (TTFT / per-token latency
+    percentiles, goodput-under-SLO) per session class."""
+    import json
+
+    from repro.serving import generate_trace, slo_report
+    from repro.serving.trace import bursty_config, poisson_config
+    mk = bursty_config if args.trace == "bursty" else poisson_config
+    tcfg = mk(seed=args.trace_seed, n_requests=args.sessions,
+              vocab_size=cfg.vocab_size, rate_rps=args.rate)
+    trace = generate_trace(tcfg)
+    max_len = trace.max_len() + 1
+    res = engine.generate_continuous(
+        trace.requests, n_slots=args.slots, max_len=max_len,
+        temperature=args.temperature, seed=args.seed,
+        dispatch_mode=args.dispatch, paged=args.paged,
+        page_size=args.page_size, n_pages=args.pages,
+        prefill_chunk=args.prefill_chunk,
+        steps_per_tick=args.steps_per_tick, timed=args.timed,
+        prefix_cache=args.prefix_cache, adaptive_k=args.adaptive_k,
+        priority_preemption=not args.no_priority_preemption)
+    rep = slo_report(res, trace.classes)
+    if args.slo_json:
+        print(json.dumps(rep, indent=2, allow_nan=False))
+        return
+    print(f"replayed {args.trace} trace (seed {args.trace_seed}, "
+          f"{len(trace.requests)} requests at {args.rate:g} req/s) through "
+          f"{args.slots} slots, steps_per_tick={args.steps_per_tick}"
+          f"{' adaptive' if args.adaptive_k else ''}: "
+          f"{res.dispatches} decode dispatches, "
+          f"{res.preemptions} preemptions, "
+          f"virtual makespan {rep['makespan_s']:.3f}s")
+    print(f"ttft p50/p95/p99 {rep['ttft']['p50']:.4f}/"
+          f"{rep['ttft']['p95']:.4f}/{rep['ttft']['p99']:.4f} s, "
+          f"tpot p50/p95/p99 {rep['tpot']['p50']:.4f}/"
+          f"{rep['tpot']['p95']:.4f}/{rep['tpot']['p99']:.4f} s (virtual)")
+    for name, c in rep["classes"].items():
+        print(f"  class {name}: {c['sessions']} sessions, "
+              f"slo_frac {c['slo_frac']:.2f} "
+              f"(ttft<={c['slo_ttft_s']:g}s, tpot_p95<={c['slo_tpot_s']:g}s), "
+              f"goodput {c['goodput_tok_s']:.1f} tok/s")
+    print(f"goodput under SLO: {rep['goodput_tok_s']:.1f} tok/s "
+          f"({rep['slo_sessions']}/{rep['sessions']} sessions in SLO, "
+          f"{rep['tokens_per_s_virtual']:.1f} tok/s served)")
+    if res.adaptive_k:
+        hist = " ".join(f"K{k}:{v}" for k, v in
+                        sorted(res.horizon_hist.items()))
+        print(f"adaptive horizon histogram: {hist}")
 
 
 def serve_continuous(engine: DecodeEngine, cfg, args):

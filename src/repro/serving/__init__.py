@@ -4,3 +4,8 @@ from repro.serving.scheduler import (BlockAllocator,  # noqa: F401
                                      ContinuousResult, PrefixCache,
                                      SessionRequest, SessionResult,
                                      SlotScheduler, jit_cache_size)
+from repro.serving.trace import (SessionClass, Trace,  # noqa: F401
+                                 TraceConfig, bursty_config,
+                                 generate_trace, poisson_config,
+                                 slo_report, trace_from_text,
+                                 trace_to_text, validate_trace)

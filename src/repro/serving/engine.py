@@ -134,7 +134,12 @@ class DecodeEngine:
                             steps_per_tick: int = 1,
                             eos_id: Optional[int] = None,
                             timed: bool = True,
-                            prefix_cache: bool = False):
+                            prefix_cache: bool = False,
+                            adaptive_k: bool = False,
+                            min_steps_per_tick: int = 1,
+                            priority_preemption: bool = True,
+                            virtual_step_s: float = 1e-3,
+                            virtual_dispatch_s: float = 4e-3):
         """Continuous batching: serve ``sessions`` (SessionRequest list)
         through a fixed-capacity slotted cache — admission, per-slot
         prefill, shared batched decode, eviction, FIFO backfill.  The
@@ -154,6 +159,17 @@ class DecodeEngine:
         runs skip prefill entirely; greedy streams stay token-identical
         to the no-sharing baseline, stochastic streams draw under
         different sampling salts (see repro.serving.scheduler).
+
+        Sessions whose requests carry ``arrival_s > 0`` are *replayed*:
+        released into the admission queue by virtual arrival time
+        against the scheduler's deterministic clock (``virtual_step_s``
+        per device decode step + ``virtual_dispatch_s`` launch tax per
+        dispatched program) — the trace-driven load-harness mode
+        (serving/trace.py builds traces and scores the SLO metrics).
+        ``adaptive_k=True`` lets each macro-tick pick its horizon from
+        the [min_steps_per_tick, steps_per_tick] ladder based on queue
+        depth and resident budgets; ``priority_preemption=False``
+        degrades page-pressure eviction to the youngest-first baseline.
         Returns a ``ContinuousResult``."""
         from repro.serving.scheduler import SlotScheduler
         sched = SlotScheduler(self.model, self.params, n_slots=n_slots,
@@ -163,7 +179,12 @@ class DecodeEngine:
                               paged=paged, page_size=page_size,
                               n_pages=n_pages, prefill_chunk=prefill_chunk,
                               steps_per_tick=steps_per_tick, eos_id=eos_id,
-                              timed=timed, prefix_cache=prefix_cache)
+                              timed=timed, prefix_cache=prefix_cache,
+                              adaptive_k=adaptive_k,
+                              min_steps_per_tick=min_steps_per_tick,
+                              priority_preemption=priority_preemption,
+                              virtual_step_s=virtual_step_s,
+                              virtual_dispatch_s=virtual_dispatch_s)
         for req in sessions:
             sched.submit(req)
         return sched.run()

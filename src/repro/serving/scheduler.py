@@ -67,6 +67,36 @@ instead of the admission salt (and shifts later admission salts), so
 stochastic streams sample the same distributions under different keys
 — same family, different draws.
 
+**Trace replay** (requests with ``arrival_s > 0``) turns the scheduler
+from a lockstep-wave harness into a load harness: sessions are released
+into the FIFO queue by *virtual arrival time* instead of all at once,
+against a deterministic virtual clock that charges every dispatched
+program a launch tax (``virtual_dispatch_s``) plus ``virtual_step_s``
+per device decode step — the paper's two latency terms, made explicit
+so queueing, admission, and horizon policy trade off in a
+machine-independent currency.  Every generated token is stamped with
+its virtual emission time (and, when ``timed``, a wall timestamp), so
+``SessionResult`` carries what the *session* feels: TTFT and the
+per-token latency stream, including queueing and preemption stalls —
+not just aggregate tok/s (serving/trace.py generates traces and turns
+these stamps into SLO metrics).
+
+**Adaptive horizon-K** (``adaptive_k=True``) makes the macro-tick react
+to load instead of being a fixed throughput/latency trade: each tick
+picks a horizon from a halving ladder (``steps_per_tick`` down to
+``min_steps_per_tick``) — shrinking while the admission queue is deep
+or the next arrival lands mid-horizon (a long fused tick would hold
+admission hostage and blow TTFT), growing toward the ladder top while
+resident sessions are long-running and nobody waits (amortising the
+launch tax when latency is not under pressure).  Every ladder horizon
+compiles once and is reused; greedy streams are token-identical to any
+fixed K.  **Priority-aware preemption** (on by default; the
+``priority_preemption=False`` baseline keeps youngest-first) picks
+page-pressure victims lowest-priority-first, youngest within a
+priority, and never evicts a higher-priority session for a lower one —
+sessions of equal priority behave exactly like the old youngest-first
+rule.
+
 Scheduling is host-side Python; the per-token hot path is exactly the
 paper's ``full_jit`` arm — one dispatch per decode step for the whole
 slot batch — and the eager / stage_jit executors (core.dispatch) remain
@@ -355,10 +385,22 @@ class PrefixCache:
 
 @dataclasses.dataclass(frozen=True)
 class SessionRequest:
-    """One user session: a prompt and a token budget."""
+    """One user session: a prompt, a token budget, and (for trace
+    replay) an arrival time plus class/priority metadata.
+
+    ``arrival_s`` is in *virtual seconds relative to the ``run()`` that
+    serves the request*: 0.0 (the default) keeps the legacy behaviour —
+    the request is queued the moment it is submitted.  ``priority``
+    orders preemption victims (higher = more important; equal
+    priorities degrade to the youngest-first rule).  ``klass`` is a
+    free-form session-class label carried through to ``SessionResult``
+    so per-class SLO metrics can be grouped (serving/trace.py)."""
     session_id: str
     prompt: Sequence[int]            # (S,) token ids
     max_new_tokens: int
+    arrival_s: float = 0.0           # virtual arrival (0 = immediate)
+    priority: int = 0                # preemption priority (higher wins)
+    klass: str = ""                  # session-class label (SLO grouping)
 
 
 @dataclasses.dataclass
@@ -369,6 +411,25 @@ class SessionResult:
     admitted_tick: int
     finished_tick: int
     step_times_s: List[float]        # shared-batch decode-step walls
+    klass: str = ""                  # session-class label (from request)
+    priority: int = 0
+    arrival_s: float = 0.0           # virtual arrival on the run clock
+    token_times_s: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+    # virtual emission timestamp per generated token (same clock as
+    # ``arrival_s``) — queueing, prefill, preemption stalls and macro-
+    # tick position all included, so diffs are the per-token latency
+    # the session FELT, not the shared-batch service wall
+    ttft_s: Optional[float] = None   # token_times_s[0] - arrival_s
+    ttft_wall_s: Optional[float] = None
+    # wall-clock TTFT (queue release -> first token); None when the
+    # scheduler ran timed=False — never NaN, so JSON stays clean
+
+    def token_latencies_s(self) -> np.ndarray:
+        """Virtual inter-token latencies (the TPOT stream): gaps
+        between consecutive emission stamps.  Empty for 1-token
+        sessions."""
+        return np.diff(self.token_times_s)
 
 
 @dataclasses.dataclass
@@ -388,9 +449,14 @@ class ContinuousResult:
     ``ticks``, ``wall_s``, ``tokens_per_s``, ``preemptions``,
     ``dispatches``, ``run_tokens``, ``step_kv_blocks``,
     ``host_dispatch_s``, ``host_sync_s``, ``prefill_tokens``,
-    ``prefix_hits``, ``prefix_tokens_saved``, ``cow_copies``.
+    ``prefix_hits``, ``prefix_tokens_saved``, ``cow_copies``,
+    ``arrivals``, ``horizon_hist``.
     (``dispatches`` is the per-run delta of the cumulative
-    ``decode_steps``.)"""
+    ``decode_steps``.)
+
+    ``now_s`` is the scheduler's virtual clock at the end of the call —
+    monotone across calls (a clock, not a counter); per-run virtual
+    makespan is the difference of consecutive ``now_s`` readings."""
     sessions: Dict[str, SessionResult]  # cumulative: every finished session
     ticks: int                       # scheduler iterations this run()
     decode_steps: int                # batched decode dispatches (cumulative)
@@ -423,6 +489,14 @@ class ContinuousResult:
                                      # prefill was skipped via shared
                                      # pages
     cow_copies: int = 0              # copy-on-write page faults served
+    now_s: float = 0.0               # virtual clock at the end of the
+                                     # call (monotone across calls)
+    arrivals: int = 0                # trace requests released from the
+                                     # arrival queue this run()
+    adaptive_k: bool = False         # horizon chosen per tick (config)
+    horizon_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # macro-ticks dispatched per horizon K this run() — the adaptive
+    # policy's visible footprint ({} for single-step runs)
 
     def tokens_for(self, session_id: str) -> np.ndarray:
         return self.sessions[session_id].tokens
@@ -446,6 +520,14 @@ class _Session:
                                      # grow while resident in a slot)
     resume: bool = False             # re-admission after preemption
     admit_seq: int = -1              # monotone admission order (preempt prio)
+    arrival_s: float = 0.0           # virtual arrival on the run clock
+    release_wall: Optional[float] = None   # perf_counter at queue entry
+    token_times_s: List[float] = dataclasses.field(default_factory=list)
+    first_token_wall: Optional[float] = None
+
+    @property
+    def priority(self) -> int:
+        return self.request.priority
 
     @property
     def done(self) -> bool:
@@ -478,10 +560,20 @@ class SlotScheduler:
                  page_size: int = 16, n_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  steps_per_tick: int = 1, eos_id: Optional[int] = None,
-                 timed: bool = True, prefix_cache: bool = False):
+                 timed: bool = True, prefix_cache: bool = False,
+                 adaptive_k: bool = False, min_steps_per_tick: int = 1,
+                 priority_preemption: bool = True,
+                 virtual_step_s: float = 1e-3,
+                 virtual_dispatch_s: float = 4e-3,
+                 shared_programs: bool = False):
         assert n_slots >= 1
         assert dispatch_mode in MODES, dispatch_mode
         assert steps_per_tick >= 1
+        assert 1 <= min_steps_per_tick <= steps_per_tick
+        if adaptive_k and steps_per_tick < 2:
+            raise NotImplementedError(
+                "adaptive_k picks horizons from a ladder below "
+                "steps_per_tick; a ceiling of 1 leaves nothing to adapt")
         cfg = model.cfg
         if cfg.n_codebooks:
             raise NotImplementedError(
@@ -504,6 +596,32 @@ class SlotScheduler:
         self.timed = timed
         self.host_dispatch_s = 0.0
         self.host_sync_s = 0.0
+        self.adaptive_k = adaptive_k
+        self.min_steps_per_tick = min_steps_per_tick
+        self.priority_preemption = priority_preemption
+        # the horizon ladder: halvings of the ceiling down to the floor.
+        # Each value compiles its own (backend, K) executable exactly
+        # once, so the compiled-program count is bounded by the ladder
+        # length (~log2), not by anything traffic-dependent.
+        ladder = set()
+        k = steps_per_tick
+        while k > min_steps_per_tick:
+            ladder.add(k)
+            k //= 2
+        ladder.add(min_steps_per_tick)
+        self.k_ladder: Tuple[int, ...] = tuple(sorted(ladder))
+        # virtual clock + cost model (trace replay / SLO metrics): every
+        # dispatched program costs a launch tax, every device decode
+        # step a service quantum.  Pure host arithmetic — zero overhead
+        # on the hot path, fully deterministic.
+        self.virtual_step_s = virtual_step_s
+        self.virtual_dispatch_s = virtual_dispatch_s
+        self.now_s = 0.0
+        self._pending: List[Tuple[float, int, _Session]] = []
+        self._arrivals: List[Tuple[float, int, _Session]] = []
+        self._arrival_seq = 0
+        self.arrivals_released = 0
+        self.horizon_hist: collections.Counter = collections.Counter()
 
         self.paged = paged
         if prefix_cache and not paged:
@@ -556,14 +674,39 @@ class SlotScheduler:
         self._admit_count = 0       # sampling-salt counter (even salts)
         self._admission_order = 0   # monotone admission id (preempt prio)
 
-        if paged:
-            self._prefill_chunk_jit = jax.jit(model.prefill_chunk_into_slot,
-                                              donate_argnums=(2,))
-            self._copy_page_jit = jax.jit(model.copy_kv_page,
-                                          donate_argnums=(0,))
+        # shared_programs: A/B drivers that build many schedulers over
+        # ONE model (e.g. table13's arm sweep) pay a full recompile per
+        # instance, because each jax.jit wrapper carries its own trace
+        # cache.  Opting in parks the wrappers on the model so every
+        # scheduler over it reuses the same compiled executables —
+        # donation is per call, so sharing the callable is safe.
+        # step_cache_size() then reports the delta since construction,
+        # keeping the "one executable per (backend, K)" accounting
+        # per scheduler.
+        if shared_programs:
+            _shared = model.__dict__.setdefault("_shared_sched_jits", {})
+
+            def _jit(name, make):
+                if name not in _shared:
+                    _shared[name] = make()
+                return _shared[name]
         else:
-            self._prefill_slot = jax.jit(model.prefill_into_slot,
-                                         donate_argnums=(2,))
+            def _jit(name, make):
+                return make()
+
+        if paged:
+            self._prefill_chunk_jit = _jit(
+                "prefill_chunk",
+                lambda: jax.jit(model.prefill_chunk_into_slot,
+                                donate_argnums=(2,)))
+            self._copy_page_jit = _jit(
+                "copy_page",
+                lambda: jax.jit(model.copy_kv_page, donate_argnums=(0,)))
+        else:
+            self._prefill_slot = _jit(
+                "prefill_slot",
+                lambda: jax.jit(model.prefill_into_slot,
+                                donate_argnums=(2,)))
         if dispatch_mode == "full_jit":
             # the production hot path: the whole step is one program,
             # cache donated so steps run allocation-free.  With
@@ -575,14 +718,18 @@ class SlotScheduler:
             self._step_jit = None
             self._steps_jit = None
             if steps_per_tick > 1:
-                self._steps_jit = jax.jit(
-                    model.decode_steps,
-                    static_argnames=("horizon", "temperature", "top_k",
-                                     "eos_id"),
-                    donate_argnums=(1,))
+                self._steps_jit = _jit(
+                    "decode_steps",
+                    lambda: jax.jit(
+                        model.decode_steps,
+                        static_argnames=("horizon", "temperature",
+                                         "top_k", "eos_id"),
+                        donate_argnums=(1,)))
             else:
-                self._step_jit = jax.jit(model.decode_step,
-                                         donate_argnums=(1,))
+                self._step_jit = _jit(
+                    "decode_step",
+                    lambda: jax.jit(model.decode_step,
+                                    donate_argnums=(1,)))
             self._program = None
         else:
             # dispatch A/B hooks: same math through the eager/stage_jit
@@ -591,6 +738,10 @@ class SlotScheduler:
             self._steps_jit = None
             self._program = model.step_program(params, self.cache)
             self._executor = self._program.executor(dispatch_mode)
+        # shared wrappers can arrive pre-warmed by an earlier scheduler
+        # over the same model; compile counts are reported relative to
+        # this instance's start so the recompile guard stays meaningful
+        self._step_cache_base = self._raw_step_cache_size() or 0
 
     # ------------------------------------------------------------- intro
     @property
@@ -617,18 +768,27 @@ class SlotScheduler:
         reclaim does this incrementally on its own)."""
         return self.prefix.flush() if self.prefix is not None else 0
 
-    def step_cache_size(self) -> Optional[int]:
-        """Number of compiled decode-step executables (the recompile
-        guard: must be 1 after any amount of session churn — for
-        ``steps_per_tick > 1`` that is the ONE horizon-K multi-step
-        program, reused across macro-ticks).  ``None`` when unknown
-        (staged/eager executors, or a jax version that dropped the
-        private cache-size hook — see ``jit_cache_size``)."""
+    def _raw_step_cache_size(self) -> Optional[int]:
         if self._steps_jit is not None:
             return jit_cache_size(self._steps_jit)
         if self._step_jit is not None:
             return jit_cache_size(self._step_jit)
         return None
+
+    def step_cache_size(self) -> Optional[int]:
+        """Number of decode-step executables compiled SINCE THIS
+        SCHEDULER was built (the recompile guard: must be 1 after any
+        amount of session churn — for ``steps_per_tick > 1`` that is
+        the ONE horizon-K multi-step program, reused across
+        macro-ticks).  With ``shared_programs`` the underlying cache is
+        shared across schedulers, so the count is a delta against the
+        size at construction.  ``None`` when unknown (staged/eager
+        executors, or a jax version that dropped the private cache-size
+        hook — see ``jit_cache_size``)."""
+        raw = self._raw_step_cache_size()
+        if raw is None:
+            return None
+        return raw - self._step_cache_base
 
     @property
     def launches_per_step(self) -> int:
@@ -652,7 +812,22 @@ class SlotScheduler:
                 f"session {request.session_id} needs {need} pages but the "
                 f"pool only holds {self.n_pages - 1}")
         req = dataclasses.replace(request, prompt=prompt)
-        self.waiting.append(_Session(req))
+        sess = _Session(req)
+        if req.arrival_s > 0.0:
+            # trace replay: the request enters the FIFO queue only once
+            # the virtual clock reaches its arrival.  Arrival times are
+            # relative to the run() that serves them — they are rebased
+            # onto the absolute clock at release time (_release_arrivals
+            # anchors the batch to now_s when it first sees it), so a
+            # scheduler that already served earlier waves replays a new
+            # trace correctly.
+            self._pending.append((float(req.arrival_s),
+                                  self._arrival_seq, sess))
+            self._arrival_seq += 1
+        else:
+            sess.arrival_s = self.now_s
+            sess.release_wall = time.perf_counter() if self.timed else None
+            self.waiting.append(sess)
 
     # ----------------------------------------------------------- serving
     def _sample(self, logits: jnp.ndarray, salt: int) -> jnp.ndarray:
@@ -662,6 +837,42 @@ class SlotScheduler:
 
     def _hit_eos(self, tok: int) -> bool:
         return self.eos_id is not None and tok == self.eos_id
+
+    # ------------------------------------------------- trace replay clock
+    def _release_arrivals(self) -> None:
+        """Move trace requests whose virtual arrival has come into the
+        FIFO queue.  Newly submitted arrival batches are anchored to the
+        clock as it stood when the batch is first seen; when the whole
+        system is idle the clock fast-forwards to the next arrival (an
+        empty server does not spin through dead air)."""
+        if self._pending:
+            base = self.now_s
+            for rel, seq, sess in self._pending:
+                sess.arrival_s = base + rel
+                heapq.heappush(self._arrivals, (base + rel, seq, sess))
+            self._pending.clear()
+        if self._arrivals and not self.waiting \
+                and all(s is None for s in self.slots):
+            self.now_s = max(self.now_s, self._arrivals[0][0])
+        while self._arrivals and self._arrivals[0][0] <= self.now_s:
+            _, _, sess = heapq.heappop(self._arrivals)
+            sess.release_wall = time.perf_counter() if self.timed else None
+            self.waiting.append(sess)
+            self.arrivals_released += 1
+
+    def _charge(self, steps: int, dispatches: int = 1) -> None:
+        """Advance the virtual clock: ``dispatches`` launch taxes plus
+        ``steps`` device service quanta."""
+        self.now_s += (dispatches * self.virtual_dispatch_s
+                       + steps * self.virtual_step_s)
+
+    def _stamp(self, sess: _Session, vt: Optional[float] = None) -> None:
+        """Record the emission time of the token just appended to
+        ``sess.tokens``: virtual always, wall only when timed."""
+        sess.token_times_s.append(self.now_s if vt is None else vt)
+        if self.timed and sess.first_token_wall is None \
+                and len(sess.tokens) == 1:
+            sess.first_token_wall = time.perf_counter()
 
     def _finish(self, slot: int, sess: _Session) -> None:
         sess.finished_tick = self.tick_count
@@ -767,18 +978,35 @@ class SlotScheduler:
         self.waiting.appendleft(sess)   # it was admitted before the waiters
 
     def _alloc_or_preempt(self, n: int, needy: _Session) -> Optional[List[int]]:
-        """Allocate ``n`` pages, preempting strictly-younger sessions
-        (later ``admit_seq``) one at a time until it fits.  Returns None
-        if it still can't fit with only the needy session (and older
-        ones) resident."""
+        """Allocate ``n`` pages, preempting one resident victim at a
+        time until it fits.  Returns None if it still can't fit with
+        only the needy session (and its non-victims) resident.
+
+        Victim policy: with ``priority_preemption`` (the default) a
+        session is eligible if it is STRICTLY lower priority than the
+        needy one, or of equal priority but strictly younger (later
+        ``admit_seq``) — a higher-priority session is never evicted for
+        a lower-priority page fault.  Among eligibles the
+        lowest-priority-youngest goes first.  With
+        ``priority_preemption=False`` priorities are ignored and the
+        rule degrades to the original youngest-first baseline — the
+        FIFO arm of the SLO A/B (benchmarks/table13)."""
         while True:
             got = self._alloc_pages(n)
             if got is not None:
                 return got
-            victims = [(s.admit_seq, i, s)
-                       for i, s in enumerate(self.slots)
-                       if s is not None and s is not needy
-                       and s.admit_seq > needy.admit_seq]
+            if self.priority_preemption:
+                victims = [((-s.priority, s.admit_seq), i, s)
+                           for i, s in enumerate(self.slots)
+                           if s is not None and s is not needy
+                           and (s.priority < needy.priority
+                                or (s.priority == needy.priority
+                                    and s.admit_seq > needy.admit_seq))]
+            else:
+                victims = [((0, s.admit_seq), i, s)
+                           for i, s in enumerate(self.slots)
+                           if s is not None and s is not needy
+                           and s.admit_seq > needy.admit_seq]
             if not victims:
                 return None
             _, vslot, vsess = max(victims)
@@ -814,6 +1042,7 @@ class SlotScheduler:
         sess.pos = sess.prefilled
         self._pos[slot] = sess.prefilled
         self.prefill_tokens += C
+        self._charge(1)          # one prefill program: launch + a quantum
         self._register_prefix(sess)
         if sess.decoding:
             # prefill complete: sample the first token — unless resuming
@@ -827,6 +1056,7 @@ class SlotScheduler:
                 self._admit_count += 1
                 tok = int(self._sample(logits[:, -1], salt)[0])
                 sess.tokens.append(tok)
+                self._stamp(sess)
                 self.events.append(
                     ("token", sess.request.session_id, slot, tok))
                 if sess.done or self._hit_eos(tok):
@@ -920,6 +1150,7 @@ class SlotScheduler:
             self.cache = self._copy_page_jit(
                 self.cache, jnp.int32(shared[-1]), jnp.int32(got[0]))
             self.cow_copies += 1
+            self._charge(0)      # the CoW copy is one dispatched program
             sess.prefilled = len(seq)
             sess.pos = len(seq) - 1
             self._pos[slot] = len(seq) - 1
@@ -997,6 +1228,7 @@ class SlotScheduler:
                 sess.admitted_tick = self.tick_count
                 self.slots[slot] = sess
                 self.prefill_tokens += int(prompt.shape[1])
+                self._charge(1)
                 sid = sess.request.session_id
                 self.events.append(("admit", sid, slot))
                 # even salts for admissions (one per admission, counted
@@ -1005,6 +1237,7 @@ class SlotScheduler:
                 self._admit_count += 1
                 tok = int(self._sample(logits[:, -1], salt)[0])
                 sess.tokens.append(tok)
+                self._stamp(sess)
                 self.events.append(("token", sid, slot, tok))
                 if sess.done or self._hit_eos(tok):
                     # 1-token / instant-EOS session: retire immediately,
@@ -1104,6 +1337,7 @@ class SlotScheduler:
         up to ``steps_per_tick`` tokens in ONE program), evict completed
         sessions."""
         n_before = len(self.events)
+        self._release_arrivals()
         if self.paged:
             for slot, sess in enumerate(self.slots):
                 if sess is not None and not sess.decoding:
@@ -1112,9 +1346,54 @@ class SlotScheduler:
         if self.steps_per_tick == 1:
             self._decode_tick_single()
         else:
-            self._decode_tick_horizon()
+            self._decode_tick_horizon(self._tick_horizon())
         self.tick_count += 1
         return self.events[n_before:]
+
+    def _tick_horizon(self) -> int:
+        """Horizon K for this macro-tick.  Fixed-K schedulers always use
+        the configured ceiling; the adaptive policy ends macro-ticks at
+        the next *scheduling event* instead of a fixed stride:
+
+          * **demand against full slots** — someone is waiting (or due
+            to arrive) and every slot is busy: cap at the shortest
+            remaining budget among residents, so the tick ends exactly
+            when the first slot frees and the backfill happens
+            immediately (a longer tick would burn that slot on masked
+            no-op lanes while the waiter keeps paying TTFT);
+          * **arrival against a free slot** — never run a macro-tick so
+            long that an arrival which could be admitted on the spot
+            would sit out most of it (with full slots the arrival can
+            only join the queue, so ending the tick for it buys nothing
+            and costs a launch tax);
+          * **otherwise grow** — nobody waiting and no arrival due: take
+            the largest rung no bigger than the longest remaining
+            budget (the launch tax amortises across the whole horizon).
+
+        Only ladder rungs are ever dispatched, so the compiled-program
+        count stays bounded by the ladder length."""
+        if not self.adaptive_k:
+            return self.steps_per_tick
+        k = self.steps_per_tick
+        remaining = [s.request.max_new_tokens - len(s.tokens)
+                     for s in self.slots
+                     if s is not None and (not self.paged or s.decoding)]
+        slots_full = all(s is not None for s in self.slots)
+        if remaining:
+            demand = bool(self.waiting) or bool(self._arrivals)
+            k = min(k, min(remaining) if demand and slots_full
+                    else max(remaining))
+        if self._arrivals and not slots_full:
+            # steps the clock can take before the next arrival is due;
+            # +1 so an arrival inside the very next quantum still lets
+            # one step run
+            until = self._arrivals[0][0] - self.now_s
+            k = min(k, 1 + int(max(until, 0.0) / self.virtual_step_s))
+        k = max(k, self.min_steps_per_tick)
+        for rung in reversed(self.k_ladder):
+            if rung <= k:
+                return rung
+        return self.min_steps_per_tick
 
     def _decode_tick_single(self) -> None:
         """K=1 decode: one dispatch, one host round-trip per token.
@@ -1152,12 +1431,14 @@ class SlotScheduler:
         self.host_sync_s += t2 - t1
         dt = t2 - t0
         self.decode_steps += 1
+        self._charge(1)
         for slot, sess in active:
             sess.pos += 1
             if self.paged:
                 self._pos[slot] = sess.pos
             tok = int(nxt[slot])
             sess.tokens.append(tok)
+            self._stamp(sess)
             if self.timed:
                 sess.step_times_s.append(dt)
             self.events.append(
@@ -1165,17 +1446,17 @@ class SlotScheduler:
             if sess.done or self._hit_eos(tok):
                 self._finish(slot, sess)
 
-    def _decode_tick_horizon(self) -> None:
+    def _decode_tick_horizon(self, K: int) -> None:
         """Horizon-K fused decode: ONE compiled program advances every
-        live slot up to ``steps_per_tick`` tokens (lax.scan over
-        ``decode_step`` with on-device sampling), the (n_slots, K) token
-        matrix comes back in a single transfer, and the host reconciles
-        after the fact — trimming lanes that hit EOS or their budget
-        mid-horizon (their device steps were masked no-ops) and evicting
-        finished sessions.  Pages covering each slot's full granted
-        horizon are reserved BEFORE dispatch, so the device never
-        outruns its block table."""
-        K = self.steps_per_tick
+        live slot up to ``K`` tokens (lax.scan over ``decode_step`` with
+        on-device sampling), the (n_slots, K) token matrix comes back in
+        a single transfer, and the host reconciles after the fact —
+        trimming lanes that hit EOS or their budget mid-horizon (their
+        device steps were masked no-ops) and evicting finished sessions.
+        Pages covering each slot's full granted horizon are reserved
+        BEFORE dispatch, so the device never outruns its block table.
+        ``K`` is the configured ceiling for fixed-K schedulers or the
+        ladder rung ``_tick_horizon`` chose for this tick."""
         plan: Dict[int, int] = {}
         for slot, sess in list(enumerate(self.slots)):
             # skip free lanes, mid-chunked-prefill lanes, and lanes whose
@@ -1212,9 +1493,12 @@ class SlotScheduler:
         self.host_sync_s += t2 - t1
         dt = t2 - t0
         self.decode_steps += 1
+        self.horizon_hist[K] += 1
         # ---- reconciliation: step-major walk mirrors the device scan ----
         per_tok_dt = dt / K
         max_steps = max(plan[slot] for slot, _ in active)
+        vt0 = self.now_s + self.virtual_dispatch_s
+        self._charge(max_steps)
         kv_blocks = [0] * max_steps
         emitted = [0] * max_steps
         done: set = set()
@@ -1231,6 +1515,10 @@ class SlotScheduler:
                 emitted[j] += 1
                 tok = int(tok_mat[slot, j])
                 sess.tokens.append(tok)
+                # device step j's token leaves at the j+1'th quantum of
+                # the macro-tick — a session's stamp stream sees its own
+                # position inside the fused horizon, not just tick ends
+                self._stamp(sess, vt0 + (j + 1) * self.virtual_step_s)
                 if self.timed:
                     sess.step_times_s.append(per_tok_dt)
                 self.events.append(
@@ -1260,6 +1548,8 @@ class SlotScheduler:
         tick0 = self.tick_count
         pre0 = self.preemptions
         disp0 = self.decode_steps
+        arr0 = self.arrivals_released
+        hist0 = collections.Counter(self.horizon_hist)
         hd0, hs0 = self.host_dispatch_s, self.host_sync_s
         blk0 = len(self.step_kv_blocks) if self.paged else 0
         pf0, ph0 = self.prefill_tokens, self.prefix_hits
@@ -1276,12 +1566,19 @@ class SlotScheduler:
                     seq = len(s.request.prompt) + s.request.max_new_tokens
                     t += -(-seq // self.prefill_chunk)
                 return t
-            budget = sum(ticks_for(s) for s in list(self.waiting))
+            backlog = list(self.waiting) \
+                + [s for _, _, s in self._pending] \
+                + [s for _, _, s in self._arrivals]
+            budget = sum(ticks_for(s) for s in backlog)
             budget += sum(ticks_for(s)
                           for s in self.slots if s is not None)
-            limit = 4 * budget + 16
+            # + one release tick per trace arrival (an idle tick may do
+            # nothing but fast-forward the clock and release a request)
+            limit = 4 * budget + len(self._pending) \
+                + len(self._arrivals) + 16
         t0 = time.perf_counter()
-        while self.waiting or any(s is not None for s in self.slots):
+        while self.waiting or self._pending or self._arrivals \
+                or any(s is not None for s in self.slots):
             self.tick()
             if self.tick_count - tick0 > limit:
                 raise RuntimeError(
@@ -1295,7 +1592,16 @@ class SlotScheduler:
                 slot=s.slot,
                 admitted_tick=s.admitted_tick,
                 finished_tick=s.finished_tick,
-                step_times_s=s.step_times_s)
+                step_times_s=s.step_times_s,
+                klass=s.request.klass,
+                priority=s.request.priority,
+                arrival_s=s.arrival_s,
+                token_times_s=np.asarray(s.token_times_s),
+                ttft_s=(s.token_times_s[0] - s.arrival_s
+                        if s.token_times_s else None),
+                ttft_wall_s=(s.first_token_wall - s.release_wall
+                             if s.first_token_wall is not None
+                             and s.release_wall is not None else None))
             for s in self.finished}
         return ContinuousResult(
             sessions=sessions, ticks=self.tick_count - tick0,
@@ -1318,4 +1624,8 @@ class SlotScheduler:
             prefill_tokens=self.prefill_tokens - pf0,
             prefix_hits=self.prefix_hits - ph0,
             prefix_tokens_saved=self.prefix_tokens_saved - ps0,
-            cow_copies=self.cow_copies - cw0)
+            cow_copies=self.cow_copies - cw0,
+            now_s=self.now_s,
+            arrivals=self.arrivals_released - arr0,
+            adaptive_k=self.adaptive_k,
+            horizon_hist=dict(self.horizon_hist - hist0))

@@ -1,4 +1,6 @@
 """Measurement-protocol machinery (paper §3.1/§5/App D) + hypothesis."""
+import json
+
 import numpy as np
 import pytest
 from hypothesis import given, settings
@@ -6,6 +8,7 @@ from hypothesis import strategies as st
 
 import jax.numpy as jnp
 
+from benchmarks.common import _parse_fields, emit, take_results
 from repro.core import stats
 from repro.core.protocol import measure_cell, run_ab
 
@@ -59,6 +62,41 @@ class TestStats:
         lo, hi = stats.bootstrap_ci_mean(sp, seed=0)
         assert lo == pytest.approx(1.253, abs=0.003)
         assert hi == pytest.approx(1.267, abs=0.003)
+
+
+class TestBenchFieldParsing:
+    """The k=v derived-column protocol behind ``run.py --json``."""
+
+    def test_scientific_and_negative_floats(self):
+        f = _parse_fields("p99=1.2e-03 dt=-4.5 big=3E+6 frac=.25 n=7")
+        assert f == {"p99": 1.2e-03, "dt": -4.5, "big": 3e6,
+                     "frac": 0.25, "n": 7.0}
+
+    def test_non_numeric_values_stay_strings(self):
+        """``float()`` would happily parse these — the strict matcher
+        must not, or NaN/Inf poison the JSON dump and underscore typos
+        silently become numbers."""
+        f = _parse_fields("a=nan b=inf c=-inf d=1_2 e=1e f=--3 g=ok")
+        assert f == {"a": "nan", "b": "inf", "c": "-inf", "d": "1_2",
+                     "e": "1e", "f": "--3", "g": "ok"}
+
+    def test_booleans_and_nonpairs(self):
+        f = _parse_fields("ok=True bad=False stray k=v=w")
+        assert f == {"ok": True, "bad": False, "k": "v=w"}
+
+    def test_round_trip_through_results_registry(self):
+        """An emitted row with a scientific-notation latency must come
+        back out of the registry as the same float, and the whole record
+        must survive a strict (allow_nan=False) JSON dump."""
+        take_results()                       # drop other tests' rows
+        emit("t/row", 12.5, "p99=1.2e-03 nanlike=nan flag=True")
+        rows = take_results()
+        assert len(rows) == 1
+        dumped = json.dumps(rows, allow_nan=False)
+        back = json.loads(dumped)[0]
+        assert back["fields"]["p99"] == 1.2e-03
+        assert back["fields"]["nanlike"] == "nan"
+        assert back["fields"]["flag"] is True
 
 
 class TestProtocol:

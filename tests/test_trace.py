@@ -1,0 +1,306 @@
+"""Trace-driven load harness: seeded generation, byte-stable
+serialisation, virtual-time replay through the scheduler, SLO metrics,
+adaptive horizon-K and priority-aware preemption.
+
+The contracts pinned here:
+  * (config, seed) regenerates a trace byte-for-byte — the checked-in
+    golden file under tests/golden/ is the regression anchor;
+  * replay is a pure scheduling change: greedy token streams are
+    identical across fixed-K, adaptive-K and both preemption policies;
+  * latency fields are JSON-safe in timed and untimed runs (no NaN ever
+    reaches a report — ``json.dumps(..., allow_nan=False)`` must pass);
+  * ContinuousResult counters are per-run, the virtual clock cumulative.
+"""
+import dataclasses
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import (SessionClass, SessionRequest, SlotScheduler,
+                           bursty_config, generate_trace, poisson_config,
+                           slo_report, trace_from_text, trace_to_text,
+                           validate_trace)
+
+KEY = jax.random.PRNGKey(11)
+CFG = get_config("qwen2.5-3b").reduced()
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "trace_bursty_s7.txt"
+
+
+def _model():
+    m = Model(CFG)
+    return m, m.init(KEY)
+
+
+def _replay(model, params, reqs, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("timed", False)
+    sched = SlotScheduler(model, params, **kw)
+    for r in reqs:
+        sched.submit(r)
+    return sched.run()
+
+
+class TestGeneration:
+    def test_seed_determinism_and_roundtrip(self):
+        for cfg in (poisson_config(seed=3, n_requests=8),
+                    bursty_config(seed=3, n_requests=8)):
+            a, b = generate_trace(cfg), generate_trace(cfg)
+            ta = trace_to_text(a)
+            assert ta == trace_to_text(b)
+            # text -> Trace -> text is the identity
+            assert trace_to_text(trace_from_text(ta)) == ta
+
+    def test_distinct_seeds_distinct_traces(self):
+        t1 = trace_to_text(generate_trace(poisson_config(seed=1)))
+        t2 = trace_to_text(generate_trace(poisson_config(seed=2)))
+        assert t1 != t2
+
+    def test_schema_validity(self):
+        trace = generate_trace(bursty_config(seed=5, n_requests=16))
+        last = 0.0
+        for r in trace.requests:
+            assert r.arrival_s > 0 and r.arrival_s >= last
+            last = r.arrival_s
+            assert len(r.prompt) >= 1 and r.max_new_tokens >= 1
+            assert r.klass in trace.classes
+            assert r.priority == trace.classes[r.klass].priority
+
+    def test_validate_rejects_nonmonotone_arrivals(self):
+        trace = generate_trace(poisson_config(seed=0, n_requests=4))
+        reqs = list(trace.requests)
+        reqs[2] = dataclasses.replace(reqs[2], arrival_s=0.0)
+        with pytest.raises(AssertionError):
+            validate_trace(dataclasses.replace(trace,
+                                               requests=tuple(reqs)))
+
+    def test_validate_rejects_unknown_class(self):
+        trace = generate_trace(poisson_config(seed=0, n_requests=4))
+        reqs = list(trace.requests)
+        reqs[0] = dataclasses.replace(reqs[0], klass="nosuch")
+        with pytest.raises(AssertionError):
+            validate_trace(dataclasses.replace(trace,
+                                               requests=tuple(reqs)))
+
+    def test_bursty_means_match_offered_load(self):
+        """The on/off modulation must keep the long-run rate ~rate_rps
+        (the off-gaps are sized to refund the burst's saved time)."""
+        cfg = bursty_config(seed=9, n_requests=400, rate_rps=50.0)
+        trace = generate_trace(cfg)
+        span = trace.requests[-1].arrival_s
+        rate = cfg.n_requests / span
+        assert 0.6 * cfg.rate_rps < rate < 1.6 * cfg.rate_rps
+
+
+class TestGoldenTrace:
+    def test_regeneration_is_byte_identical(self):
+        """The checked-in golden trace must regenerate byte-for-byte
+        from its own header config — any drift in the generator's
+        draw order, float formatting, or serialisation layout is a
+        breaking change to every saved trace."""
+        golden = GOLDEN.read_text()
+        trace = trace_from_text(golden)          # parses AND validates
+        assert trace_to_text(generate_trace(trace.config)) == golden
+
+    def test_golden_schema(self):
+        trace = trace_from_text(GOLDEN.read_text())
+        validate_trace(trace)
+        assert trace.config.process == "bursty"
+        assert len(trace.requests) == trace.config.n_requests == 12
+
+
+class TestReplay:
+    def test_arrivals_released_by_virtual_time(self):
+        model, params = _model()
+        trace = generate_trace(poisson_config(
+            seed=4, n_requests=6, vocab_size=CFG.vocab_size,
+            rate_rps=40.0))
+        res = _replay(model, params, trace.requests,
+                      paged=True, page_size=8)
+        assert res.arrivals == len(trace.requests)
+        assert len(res.sessions) == len(trace.requests)
+        for r in trace.requests:
+            s = res.sessions[r.session_id]
+            # fresh scheduler: the virtual clock starts at 0, so
+            # arrivals land at their trace offsets un-rebased
+            assert s.arrival_s == pytest.approx(r.arrival_s)
+            assert s.ttft_s is not None and s.ttft_s > 0
+            # emission stamps are strictly increasing and start at
+            # first-token time >= arrival
+            times = s.token_times_s
+            assert len(times) == len(s.tokens)
+            assert np.all(np.diff(times) > 0)
+            assert times[0] >= s.arrival_s
+
+    def test_policy_changes_never_change_streams(self):
+        """Fixed-K, adaptive-K and both preemption policies replay the
+        same trace to identical greedy token streams."""
+        model, params = _model()
+        trace = generate_trace(bursty_config(
+            seed=6, n_requests=6, vocab_size=CFG.vocab_size,
+            rate_rps=40.0, burst_len=3))
+        kw = dict(paged=True, page_size=8, max_len=trace.max_len() + 1)
+        ref = _replay(model, params, trace.requests,
+                      steps_per_tick=1, **kw)
+        arms = (dict(steps_per_tick=8),
+                dict(steps_per_tick=8, adaptive_k=True),
+                dict(steps_per_tick=8, adaptive_k=True,
+                     priority_preemption=False))
+        for arm in arms:
+            res = _replay(model, params, trace.requests, **arm, **kw)
+            assert res.arrivals == len(trace.requests)
+            for r in trace.requests:
+                np.testing.assert_array_equal(
+                    ref.tokens_for(r.session_id),
+                    res.tokens_for(r.session_id),
+                    err_msg=f"{r.session_id} diverged under {arm}")
+
+    def test_adaptive_k_dispatches_multiple_rungs(self):
+        model, params = _model()
+        trace = generate_trace(bursty_config(
+            seed=6, n_requests=8, vocab_size=CFG.vocab_size,
+            rate_rps=40.0, burst_len=4))
+        res = _replay(model, params, trace.requests, paged=True,
+                      page_size=8, max_len=trace.max_len() + 1,
+                      steps_per_tick=8, adaptive_k=True)
+        assert res.adaptive_k
+        assert len(res.horizon_hist) >= 2, \
+            f"adaptive policy never varied K: {res.horizon_hist}"
+        assert set(res.horizon_hist) <= {1, 2, 4, 8}
+
+    def test_adaptive_k_requires_a_ladder(self):
+        model, params = _model()
+        with pytest.raises(NotImplementedError):
+            SlotScheduler(model, params, n_slots=2, max_len=32,
+                          steps_per_tick=1, adaptive_k=True)
+
+    def test_priority_preemption_protects_high_priority(self):
+        """Under page pressure the FIFO baseline evicts the youngest
+        session even when it is the high-priority one; the
+        priority-aware policy evicts the low-priority session instead.
+        Streams stay identical either way."""
+        model, params = _model()
+        reqs = [SessionRequest("low", np.arange(4) % CFG.vocab_size, 16,
+                               priority=0),
+                SessionRequest("high", np.arange(5) % CFG.vocab_size, 16,
+                               priority=1)]
+        kw = dict(n_slots=2, max_len=24, paged=True, page_size=4,
+                  n_pages=7)
+        fifo = _replay(model, params, reqs, priority_preemption=False,
+                       **kw)
+        prio = _replay(model, params, reqs, priority_preemption=True,
+                       **kw)
+        fifo_victims = {e[1] for e in fifo.events if e[0] == "preempt"}
+        prio_victims = {e[1] for e in prio.events if e[0] == "preempt"}
+        assert fifo_victims == {"high"}
+        assert prio_victims == {"low"}
+        for r in reqs:
+            np.testing.assert_array_equal(
+                fifo.tokens_for(r.session_id),
+                prio.tokens_for(r.session_id),
+                err_msg=f"{r.session_id} diverged across "
+                        f"preemption policies")
+
+    def test_equal_priorities_degrade_to_youngest_first(self):
+        """With every priority equal the two policies pick the same
+        victims — priority preemption is a strict generalisation."""
+        model, params = _model()
+        reqs = [SessionRequest("a", np.arange(4) % CFG.vocab_size, 16),
+                SessionRequest("b", np.arange(5) % CFG.vocab_size, 16)]
+        kw = dict(n_slots=2, max_len=24, paged=True, page_size=4,
+                  n_pages=7)
+        fifo = _replay(model, params, reqs, priority_preemption=False,
+                       **kw)
+        prio = _replay(model, params, reqs, priority_preemption=True,
+                       **kw)
+        assert [e[1] for e in fifo.events if e[0] == "preempt"] \
+            == [e[1] for e in prio.events if e[0] == "preempt"]
+
+
+class TestLatencyFields:
+    def _trace(self, n=5):
+        return generate_trace(poisson_config(
+            seed=8, n_requests=n, vocab_size=CFG.vocab_size,
+            rate_rps=40.0))
+
+    def test_untimed_run_has_no_wall_fields_and_no_nans(self):
+        model, params = _model()
+        trace = self._trace()
+        res = _replay(model, params, trace.requests, timed=False,
+                      paged=True, page_size=8)
+        for s in res.sessions.values():
+            assert s.ttft_wall_s is None        # None, never NaN
+            assert s.ttft_s is not None
+            assert np.all(np.isfinite(s.token_times_s))
+        rep = slo_report(res, trace.classes)
+        json.dumps(rep, allow_nan=False)        # raises on any NaN/Inf
+        assert rep["ttft_wall"] is None
+
+    def test_timed_run_reports_wall_ttft(self):
+        model, params = _model()
+        trace = self._trace()
+        res = _replay(model, params, trace.requests, timed=True,
+                      paged=True, page_size=8)
+        walls = [s.ttft_wall_s for s in res.sessions.values()]
+        assert all(w is not None and w >= 0 for w in walls)
+        rep = slo_report(res, trace.classes)
+        json.dumps(rep, allow_nan=False)
+        assert rep["ttft_wall"] is not None
+        assert rep["ttft_wall"]["p95"] >= 0
+
+    def test_counters_are_per_run_clock_is_cumulative(self):
+        """Two traced waves through ONE scheduler: ``arrivals`` and
+        ``horizon_hist`` reset per run(), the virtual clock does not —
+        and the second wave's arrivals are rebased onto it."""
+        model, params = _model()
+        sched = SlotScheduler(model, params, n_slots=2, max_len=48,
+                              paged=True, page_size=8, timed=False,
+                              steps_per_tick=4, adaptive_k=True)
+        t1 = self._trace(4)
+        for r in t1.requests:
+            sched.submit(r)
+        res1 = sched.run()
+        t2 = generate_trace(poisson_config(
+            seed=9, n_requests=3, vocab_size=CFG.vocab_size,
+            rate_rps=40.0))
+        for r in t2.requests:
+            sched.submit(dataclasses.replace(r,
+                                             session_id="w2_"
+                                             + r.session_id))
+        res2 = sched.run()
+        assert res1.arrivals == 4 and res2.arrivals == 3
+        assert res2.now_s > res1.now_s > 0
+        assert sum(res1.horizon_hist.values()) > 0
+        assert sum(res2.horizon_hist.values()) > 0
+        # second run's macro-ticks only (not cumulative):
+        assert sum(res2.horizon_hist.values()) < res2.ticks + 1
+        for r in t2.requests:
+            s = res2.sessions["w2_" + r.session_id]
+            # rebased: arrival offsets are relative to the second run
+            assert s.arrival_s == pytest.approx(res1.now_s + r.arrival_s)
+
+    def test_slo_report_math(self):
+        """Goodput counts ONLY sessions inside both bounds; a class
+        whose bound is impossible contributes zero."""
+        model, params = _model()
+        trace = self._trace()
+        res = _replay(model, params, trace.requests, timed=False,
+                      paged=True, page_size=8)
+        loose = {n: dataclasses.replace(c, slo_ttft_s=1e3, slo_tpot_s=1e3)
+                 for n, c in trace.classes.items()}
+        tight = {n: dataclasses.replace(c, slo_ttft_s=1e-9,
+                                        slo_tpot_s=1e-9)
+                 for n, c in trace.classes.items()}
+        rl, rt = slo_report(res, loose), slo_report(res, tight)
+        assert rl["slo_frac"] == 1.0 and rt["slo_frac"] == 0.0
+        assert rt["goodput_tok_s"] == 0.0
+        assert rl["goodput_tok_s"] == pytest.approx(
+            rl["tokens_per_s_virtual"])
+        total = sum(len(s.tokens) for s in res.sessions.values())
+        assert rl["goodput_tok_s"] == pytest.approx(
+            total / rl["makespan_s"])
