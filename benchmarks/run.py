@@ -11,6 +11,7 @@ and wall time to a machine-readable file, so the perf trajectory
 Every selected table runs even if an earlier one fails; any failure
 makes the process exit nonzero (with a ``# FAILED`` line per broken
 table), so a CI stage over a sweep can never silently pass.
+``--list`` prints the table ids with one-line descriptions and exits 0.
 """
 from __future__ import annotations
 
@@ -20,7 +21,28 @@ import time
 import traceback
 
 
+DESCRIPTIONS = {
+    "table1": "analytic R_floor matrix across archs and chips",
+    "table2": "dispatch-mode A/B: eager vs stage_jit vs full_jit tax",
+    "table4": "batch-size sweep: decode latency vs batched throughput",
+    "table6": "decode attention backends: sdpa / math / split_kv / pallas",
+    "table7": "weight quantisation matrix: dequant vs fused kernels",
+    "table8": "roofline accounting: bytes moved vs model footprint",
+    "fig9": "cost-of-inference ladder across optimisation stages",
+    "table9": "continuous batching vs sequential serving",
+    "table10": "paged KV: oversubscription, chunked prefill, preemption",
+    "table11": "launch overhead: horizon-K fused macro-tick amortisation",
+    "table12": "prefix sharing: CoW page dedup across sessions",
+    "table13": "SLO metrics under trace load: fixed-K vs adaptive-K",
+    "table14": "host-DRAM KV tier: park/restore vs re-prefill",
+}
+
+
 def main() -> None:
+    if "--list" in sys.argv:
+        for name, desc in DESCRIPTIONS.items():
+            print(f"{name:8s} {desc}")
+        return
     quick = "--quick" in sys.argv
     only = None
     json_path = None
@@ -42,7 +64,8 @@ def main() -> None:
                             table6_attention_backends, table7_quant_matrix,
                             table8_accounting, table9_continuous_batching,
                             table10_paged_kv, table11_launch_overhead,
-                            table12_prefix_sharing, table13_slo_load)
+                            table12_prefix_sharing, table13_slo_load,
+                            table14_kv_tiering)
     suites = {
         "table1": table1_rfloor_matrix.run,
         "table2": lambda: table2_dispatch_ab.run(quick=quick),
@@ -56,7 +79,9 @@ def main() -> None:
         "table11": lambda: table11_launch_overhead.run(quick=quick),
         "table12": lambda: table12_prefix_sharing.run(quick=quick),
         "table13": lambda: table13_slo_load.run(quick=quick),
+        "table14": lambda: table14_kv_tiering.run(quick=quick),
     }
+    assert set(suites) == set(DESCRIPTIONS), "--list out of sync"
     if only is not None and only not in suites:
         print(f"# FAILED: unknown table {only!r} "
               f"(have: {', '.join(suites)})", flush=True)

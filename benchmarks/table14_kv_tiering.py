@@ -1,0 +1,210 @@
+"""Table 14 (extension): the host-DRAM KV page tier under preemption
+churn — re-admission cost, pages migrated, goodput, token identity.
+
+The paged scheduler's answer to page pressure is preemption, and the
+single-tier cost of preemption is *recompute*: the victim's KV is
+destroyed and re-admission re-prefills prompt + generated prefix from
+scratch.  The host tier turns that recompute into *page migration* —
+preemption parks full KV pages in host DRAM, re-admission copies them
+back and re-prefills only the partial tail — which is the right trade
+exactly when a batched device<->host page copy is cheaper than the
+chunked re-prefill it replaces.  The virtual cost model makes that
+trade explicit (``virtual_host_copy_s`` per migrated page vs a launch
+tax + service quantum per re-prefill chunk), so rows are
+machine-independent.
+
+Wave A (identity + balance): an all-at-once session wave through a
+pool small enough to force preemption churn, on both decode routes
+(gather+SDPA and fused Pallas).  Arms: single-tier baseline, then the
+host tier under each policy (prefer-device control / spill /
+lookahead).  Asserted per route:
+
+  * the baseline really preempts (otherwise the table measures nothing);
+  * greedy token identity of EVERY tier arm against the single-tier
+    baseline, per session — placement policy changes copies, never
+    streams;
+  * the spill arms actually migrate (pages_spilled > 0 and
+    tier_restores > 0) while the prefer-device control migrates nothing
+    and re-prefills exactly like the baseline;
+  * memory balance at the end: every device page back on the free list
+    after a prefix flush, every host page released after the host
+    flush (refcount/pool-balance accounting closes).
+
+Wave B (load): the bursty two-class trace replayed tier-off vs
+tier-on (spill).  Reports goodput-under-SLO, interactive-class TTFT
+p95, preemptions, pages migrated; asserts token identity and that the
+tier strictly reduces re-prefill work (prefill tokens dispatched)
+whenever it restored anything — the mechanism by which re-admission
+TTFT improves.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import SessionRequest, SlotScheduler, generate_trace, slo_report
+from repro.serving.trace import bursty_config
+
+SLOTS = 2
+PAGE = 4
+CHUNK = 4            # makes re-prefill multi-dispatch, so restores can win
+TIER_ARMS = ("prefer-device", "spill", "lookahead")
+
+
+def _cfg():
+    return get_config("qwen2.5-3b").reduced().replace(
+        vocab_size=512, d_model=64, d_ff=128, n_layers=2,
+        n_heads=4, n_kv_heads=2, head_dim=16, dtype="float32")
+
+
+def _wave_requests(cfg, n):
+    """Deterministic all-at-once wave sized to thrash a small pool:
+    prompts of 2-4 pages, budgets long enough that resident sessions
+    keep allocating decode pages under each other."""
+    rng = np.random.RandomState(7)
+    reqs = []
+    for i in range(n):
+        plen = 8 + 3 * (i % 3)            # 8, 11, 14
+        n_new = 6 + 2 * (i % 3)           # 6, 8, 10
+        prompt = rng.randint(0, cfg.vocab_size, size=plen).astype(np.int32)
+        reqs.append(SessionRequest(f"s{i}", prompt, n_new))
+    return reqs
+
+
+def _serve_wave(model, params, reqs, *, max_len, n_pages, **kw):
+    sched = SlotScheduler(model, params, n_slots=SLOTS, max_len=max_len,
+                          paged=True, page_size=PAGE, n_pages=n_pages,
+                          prefill_chunk=CHUNK, prefix_cache=True,
+                          timed=False, shared_programs=True, **kw)
+    for r in reqs:
+        sched.submit(r)
+    return sched, sched.run()
+
+
+def _assert_identity(base, res, reqs, label):
+    for r in reqs:
+        np.testing.assert_array_equal(
+            base.tokens_for(r.session_id), res.tokens_for(r.session_id),
+            err_msg=f"{r.session_id} diverged under {label}")
+
+
+def _wave_a(route, model, params, quick):
+    reqs = _wave_requests(model.cfg, 5 if quick else 6)
+    max_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 1
+    # well below full backing (1 + SLOTS*ceil(max_len/PAGE)): two
+    # resident sessions cannot both hold their full footprint, and the
+    # pressure also reclaims parked sessions' cached prefix pages while
+    # they wait — which is what forces resumes through the restore path
+    # instead of a full device prefix match
+    n_pages = 1 + -(-max_len // PAGE)
+    sched, base = _serve_wave(model, params, reqs,
+                              max_len=max_len, n_pages=n_pages)
+    assert base.preemptions > 0, (
+        f"{route}: pool of {n_pages} pages never forced a preemption — "
+        f"the tier A/B would measure nothing")
+    sched.flush_prefix_cache()
+    assert sched.store.allocator.n_free == n_pages - 1, "page leak (base)"
+    emit(f"tier/{route}/wave/none", base.now_s * 1e6,
+         f"preemptions={base.preemptions} "
+         f"prefill_tokens={base.prefill_tokens} spilled=0 restored=0")
+    for arm in TIER_ARMS:
+        sched, res = _serve_wave(model, params, reqs,
+                                 max_len=max_len, n_pages=n_pages,
+                                 kv_tier="host", tier_policy=arm,
+                                 host_pages=4 * n_pages)
+        _assert_identity(base, res, reqs, f"{route}/{arm}")
+        if arm == "prefer-device":
+            assert res.pages_spilled == 0 and res.tier_restores == 0, (
+                f"control arm migrated: {res.pages_spilled} pages")
+            assert res.prefill_tokens == base.prefill_tokens, (
+                "prefer-device must re-prefill exactly like single-tier")
+        else:
+            assert res.pages_spilled > 0, f"{arm}: nothing spilled"
+            assert res.tier_restores > 0, f"{arm}: nothing restored"
+            assert res.prefill_tokens < base.prefill_tokens, (
+                f"{arm}: restores did not reduce re-prefill work "
+                f"({res.prefill_tokens} vs base {base.prefill_tokens})")
+        store = sched.store
+        sched.flush_prefix_cache()
+        store.flush_host()
+        assert store.allocator.n_free == n_pages - 1, f"page leak ({arm})"
+        assert store.host_used == 0, (
+            f"{arm}: {store.host_used} host pages leaked after flush")
+        emit(f"tier/{route}/wave/{arm}", res.now_s * 1e6,
+             f"preemptions={res.preemptions} "
+             f"prefill_tokens={res.prefill_tokens} "
+             f"spilled={res.pages_spilled} restored={res.pages_restored} "
+             f"tier_restores={res.tier_restores} "
+             f"host_prefix_hits={res.host_prefix_hits} "
+             f"token_identical=True")
+
+
+def _replay(model, params, trace, *, max_len, n_pages, **kw):
+    sched = SlotScheduler(model, params, n_slots=SLOTS, max_len=max_len,
+                          paged=True, page_size=PAGE, n_pages=n_pages,
+                          prefill_chunk=CHUNK, timed=False,
+                          shared_programs=True, **kw)
+    for r in trace.requests:
+        sched.submit(r)
+    res = sched.run()
+    assert res.arrivals == len(trace.requests), "trace not fully replayed"
+    return res
+
+
+def _wave_b(route, model, params, quick):
+    cfg = model.cfg
+    trace = generate_trace(bursty_config(
+        seed=13, n_requests=10 if quick else 20,
+        vocab_size=cfg.vocab_size, rate_rps=25.0,
+        burst_len=5, burst_factor=10.0))
+    max_len = trace.max_len() + 1
+    n_pages = 2 + -(-max_len // PAGE)
+    base = _replay(model, params, trace, max_len=max_len, n_pages=n_pages)
+    rep0 = slo_report(base, trace.classes)
+    tier = _replay(model, params, trace, max_len=max_len, n_pages=n_pages,
+                   kv_tier="host", tier_policy="spill",
+                   host_pages=4 * n_pages)
+    rep1 = slo_report(tier, trace.classes)
+    for r in trace.requests:
+        np.testing.assert_array_equal(
+            base.tokens_for(r.session_id), tier.tokens_for(r.session_id),
+            err_msg=f"{r.session_id} diverged tier-on ({route})")
+    if tier.tier_restores:
+        assert tier.prefill_tokens < base.prefill_tokens, (
+            f"{route}: {tier.tier_restores} restores but prefill work "
+            f"did not drop ({tier.prefill_tokens} vs "
+            f"{base.prefill_tokens})")
+    for name, res, rep in (("off", base, rep0), ("spill", tier, rep1)):
+        emit(f"tier/{route}/bursty/{name}", rep["ttft"]["p95"] * 1e6,
+             f"goodput={rep['goodput_tok_s']:.2f} "
+             f"slo_frac={rep['slo_frac']:.3f} "
+             f"makespan_s={rep['makespan_s']:.4f} "
+             f"preemptions={res.preemptions} "
+             f"prefill_tokens={res.prefill_tokens} "
+             f"spilled={res.pages_spilled} restored={res.pages_restored} "
+             f"token_identical=True")
+    emit(f"tier/{route}/bursty/summary", rep1["goodput_tok_s"],
+         f"goodput_off={rep0['goodput_tok_s']:.2f} "
+         f"goodput_spill={rep1['goodput_tok_s']:.2f} "
+         f"prefill_off={base.prefill_tokens} "
+         f"prefill_spill={tier.prefill_tokens} "
+         f"restores={tier.tier_restores}")
+
+
+def run(quick: bool = False) -> None:
+    header("table14: host-DRAM KV page tier — park/restore vs re-prefill "
+           "(identity, balance, goodput; paged gather / pallas)")
+    cfg = _cfg()
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    for route, model in (("gather", Model(cfg)),
+                         ("pallas", Model(cfg, decode_backend="pallas"))):
+        _wave_a(route, model, params, quick)
+        _wave_b(route, model, params, quick)
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

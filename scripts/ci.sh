@@ -6,7 +6,10 @@
 #   bash scripts/ci.sh --fast    # tier-1 only (pre-push gate)
 #
 # Stages (each individually timed; first failure aborts, nonzero exit):
-#   tier1             pytest suite (ROADMAP "tier-1 verify")
+#   tier1             pytest suite minus slow-marked soaks
+#                     (ROADMAP "tier-1 verify")
+#   soak              the slow-marked property soaks (hypothesis runs
+#                     them at full example counts when installed)
 #   smoke-continuous  continuous-batching serve (slotted cache)
 #   smoke-paged       paged serve: oversubscribed pool + chunked prefill
 #   smoke-paged-fused paged serve through the fused Pallas block-table
@@ -28,11 +31,17 @@
 #                     balance (gather + pallas routes)
 #   smoke-trace       trace-driven load replay (--trace bursty) with
 #                     adaptive horizon-K and the per-class SLO report
+#   smoke-tier        paged serve with the host-DRAM KV tier
+#                     (--kv-tier host) through a pool small enough to
+#                     force preemption, so parks/restores actually run
 #   table13-quick     SLO metrics under Poisson + bursty traces on both
 #                     paged routes: TTFT/TPOT percentiles,
 #                     goodput-under-SLO, adaptive-K >= best fixed-K on
 #                     the bursty trace, token identity vs the
 #                     fixed-K/FIFO baseline
+#   table14-quick     host-tier A/B: per-policy token identity vs the
+#                     single-tier baseline, spill arms migrate and cut
+#                     re-prefill work, device + host pools balance
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -55,12 +64,14 @@ stage() {
     echo "== stage: $name ok ($((SECONDS - t0))s) =="
 }
 
-stage tier1 python -m pytest -x -q
+stage tier1 python -m pytest -x -q -m "not slow"
 
 if [ "$FAST" = 1 ]; then
     echo "== ci green (--fast: tier-1 only) =="
     exit 0
 fi
+
+stage soak python -m pytest -x -q -m slow
 
 stage smoke-continuous \
     python -m repro.launch.serve --arch qwen2.5-3b --reduced --continuous \
@@ -102,7 +113,16 @@ stage smoke-trace \
         --trace bursty --sessions 8 --slots 3 --page-size 8 \
         --steps-per-tick 8 --adaptive-k
 
+stage smoke-tier \
+    python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+        --kv-tier host --tier-policy spill --slots 2 --sessions 6 \
+        --prompt-len 8 --new-tokens 8 --page-size 4 --pages 10 \
+        --host-pages 8 --prefill-chunk 4 --timed
+
 stage table13-quick \
     python -m benchmarks.run --quick --only=table13 --json bench_table13.json
+
+stage table14-quick \
+    python -m benchmarks.run --quick --only=table14 --json bench_table14.json
 
 echo "== ci green =="

@@ -86,6 +86,24 @@ def main():
                          "(prefill skipped for the match, CoW copy "
                          "before any write could touch a shared page); "
                          "implies --paged")
+    # host-DRAM KV page tier (serving/memory/tiers.py)
+    ap.add_argument("--kv-tier", default="none", choices=["none", "host"],
+                    help="with --paged: add a host-DRAM page tier — "
+                         "preempted sessions park their full KV pages "
+                         "host-side and re-admission restores them "
+                         "instead of re-prefilling; LRU-evicted prefix "
+                         "pages spill into a host prefix index "
+                         "(implies --paged)")
+    ap.add_argument("--tier-policy", default="spill",
+                    choices=["prefer-device", "spill", "lookahead"],
+                    help="placement/migration policy for --kv-tier host: "
+                         "prefer-device never spills (the control arm), "
+                         "spill migrates exactly on eviction, lookahead "
+                         "additionally pre-copies the predicted next "
+                         "victim's cold pages on idle ticks")
+    ap.add_argument("--host-pages", type=int, default=None,
+                    help="host pool capacity in pages (default: one full "
+                         "device pool)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many identical tokens to every "
                          "session's prompt (the physical-AI fleet "
@@ -128,6 +146,8 @@ def main():
     if args.trace:
         args.continuous = True
     if args.prefix_cache:
+        args.paged = True
+    if args.kv_tier != "none":
         args.paged = True
     if args.paged:
         args.continuous = True
@@ -215,7 +235,9 @@ def serve_trace(engine: DecodeEngine, cfg, args):
         prefill_chunk=args.prefill_chunk,
         steps_per_tick=args.steps_per_tick, timed=args.timed,
         prefix_cache=args.prefix_cache, adaptive_k=args.adaptive_k,
-        priority_preemption=not args.no_priority_preemption)
+        priority_preemption=not args.no_priority_preemption,
+        kv_tier=args.kv_tier, tier_policy=args.tier_policy,
+        host_pages=args.host_pages)
     rep = slo_report(res, trace.classes)
     if args.slo_json:
         print(json.dumps(rep, indent=2, allow_nan=False))
@@ -227,6 +249,11 @@ def serve_trace(engine: DecodeEngine, cfg, args):
           f"{res.dispatches} decode dispatches, "
           f"{res.preemptions} preemptions, "
           f"virtual makespan {rep['makespan_s']:.3f}s")
+    if res.kv_tier != "none":
+        print(f"kv tier ({res.tier_policy}): {res.pages_spilled} spilled / "
+              f"{res.pages_restored} restored pages, "
+              f"{res.tier_restores} parked restores, "
+              f"{res.host_prefix_hits} host prefix hits")
     print(f"ttft p50/p95/p99 {rep['ttft']['p50']:.4f}/"
           f"{rep['ttft']['p95']:.4f}/{rep['ttft']['p99']:.4f} s, "
           f"tpot p50/p95/p99 {rep['tpot']['p50']:.4f}/"
@@ -257,7 +284,8 @@ def serve_continuous(engine: DecodeEngine, cfg, args):
         page_size=args.page_size, n_pages=args.pages,
         prefill_chunk=args.prefill_chunk,
         steps_per_tick=args.steps_per_tick, timed=args.timed,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache, kv_tier=args.kv_tier,
+        tier_policy=args.tier_policy, host_pages=args.host_pages)
     n_tok = sum(len(s.tokens) for s in res.sessions.values())
     layout = "paged" if args.paged else "contiguous"
     backend = engine.model.decode_backend
@@ -293,6 +321,13 @@ def serve_continuous(engine: DecodeEngine, cfg, args):
                   f"prefill work skipped), "
                   f"{res.cow_copies} CoW page cop"
                   f"{'y' if res.cow_copies == 1 else 'ies'}")
+        if res.kv_tier != "none":
+            print(f"kv tier ({res.tier_policy}): "
+                  f"{res.pages_spilled} pages spilled / "
+                  f"{res.pages_restored} restored, "
+                  f"{res.tier_restores} parked-session restores, "
+                  f"{res.host_prefix_hits} host prefix hits, "
+                  f"{res.host_pages_used} host pages resident")
         if res.step_kv_blocks:
             from repro.kernels.paged_decode_attention.ops import (
                 serving_traffic_bytes)

@@ -388,6 +388,34 @@ class Model:
                     k=cache["k"].at[:, dst].set(cache["k"][:, src]),
                     v=cache["v"].at[:, dst].set(cache["v"][:, src]))
 
+    def save_kv_pages(self, cache: Cache, pages: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Gather ``pages`` (a (P,) id vector) out of the paged pool —
+        every layer's K and V rows — as two (L, P, page, Hkv, hd)
+        slabs: the device→host half of KV-page tiering
+        (serving/memory/tiers.py).  ``pages`` is traced, so one
+        compiled program serves every save of the same P; callers pad
+        P to a power of two with the garbage page to bound the program
+        count."""
+        assert "block_table" in cache, "save_kv_pages targets paged caches"
+        pages = jnp.asarray(pages, jnp.int32)
+        return cache["k"][:, pages], cache["v"][:, pages]
+
+    def restore_kv_pages(self, cache: Cache, pages: jnp.ndarray,
+                         k_pages: jnp.ndarray, v_pages: jnp.ndarray
+                         ) -> Cache:
+        """Scatter saved KV slabs back into pool ``pages`` — the
+        host→device half of tiering.  Padding lanes target the garbage
+        page (a write sink by contract; duplicate scatter indices onto
+        it are harmless)."""
+        assert "block_table" in cache, "restore_kv_pages targets paged caches"
+        pages = jnp.asarray(pages, jnp.int32)
+        return dict(cache,
+                    k=cache["k"].at[:, pages].set(
+                        k_pages.astype(cache["k"].dtype)),
+                    v=cache["v"].at[:, pages].set(
+                        v_pages.astype(cache["v"].dtype)))
+
     # ------------------------------------------------------------------
     # prefill
     # ------------------------------------------------------------------

@@ -139,7 +139,12 @@ class DecodeEngine:
                             min_steps_per_tick: int = 1,
                             priority_preemption: bool = True,
                             virtual_step_s: float = 1e-3,
-                            virtual_dispatch_s: float = 4e-3):
+                            virtual_dispatch_s: float = 4e-3,
+                            shared_programs: bool = False,
+                            kv_tier: str = "none",
+                            tier_policy="spill",
+                            host_pages: Optional[int] = None,
+                            virtual_host_copy_s: float = 5e-4):
         """Continuous batching: serve ``sessions`` (SessionRequest list)
         through a fixed-capacity slotted cache — admission, per-slot
         prefill, shared batched decode, eviction, FIFO backfill.  The
@@ -170,6 +175,14 @@ class DecodeEngine:
         the [min_steps_per_tick, steps_per_tick] ladder based on queue
         depth and resident budgets; ``priority_preemption=False``
         degrades page-pressure eviction to the youngest-first baseline.
+
+        ``kv_tier='host'`` (paged only) adds a host-DRAM page tier:
+        preempted sessions *park* their full KV pages host-side and
+        re-admission restores them instead of re-prefilling, and
+        LRU-evicted prefix pages get a second life in a host prefix
+        index — placement steered by ``tier_policy``
+        (prefer-device | spill | lookahead), capacity by ``host_pages``,
+        virtual migration cost by ``virtual_host_copy_s`` per page.
         Returns a ``ContinuousResult``."""
         from repro.serving.scheduler import SlotScheduler
         sched = SlotScheduler(self.model, self.params, n_slots=n_slots,
@@ -184,7 +197,11 @@ class DecodeEngine:
                               min_steps_per_tick=min_steps_per_tick,
                               priority_preemption=priority_preemption,
                               virtual_step_s=virtual_step_s,
-                              virtual_dispatch_s=virtual_dispatch_s)
+                              virtual_dispatch_s=virtual_dispatch_s,
+                              shared_programs=shared_programs,
+                              kv_tier=kv_tier, tier_policy=tier_policy,
+                              host_pages=host_pages,
+                              virtual_host_copy_s=virtual_host_copy_s)
         for req in sessions:
             sched.submit(req)
         return sched.run()

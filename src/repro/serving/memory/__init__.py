@@ -1,0 +1,23 @@
+"""Serving memory subsystem: page accounting, prefix index, tiers.
+
+Split out of the scheduler monolith so admission/dispatch (scheduler)
+and page placement (here) evolve independently: the scheduler programs
+against the narrow ``PageStore`` seam, and the host-DRAM tier plus its
+placement/migration policies slot in behind it without touching
+dispatch."""
+from repro.serving.memory.allocator import GARBAGE_PAGE, BlockAllocator
+from repro.serving.memory.policy import (LookAheadSpill, PreferDevice,
+                                         SpillOnEvict, TierPolicy,
+                                         get_policy)
+from repro.serving.memory.prefix import PrefixCache
+from repro.serving.memory.tiers import (HostPagePool, PageStore,
+                                        TieredPageStore, restore_kv_blobs,
+                                        save_kv_blobs)
+
+__all__ = [
+    "GARBAGE_PAGE", "BlockAllocator", "PrefixCache",
+    "PageStore", "TieredPageStore", "HostPagePool",
+    "save_kv_blobs", "restore_kv_blobs",
+    "TierPolicy", "PreferDevice", "SpillOnEvict", "LookAheadSpill",
+    "get_policy",
+]

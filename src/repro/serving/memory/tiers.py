@@ -1,0 +1,494 @@
+"""Page tiers: the device pool facade and the host-DRAM spill tier.
+
+The paper's serving-side finding is that for batch-1 physical-AI
+fleets *capacity*, not bandwidth, caps concurrent sessions — the regime
+a 10x-capacity host-memory tier targets.  Two stores implement one
+narrow interface the scheduler programs against:
+
+  * ``PageStore`` — the single-tier baseline.  Owns the
+    ``BlockAllocator``, the optional ``PrefixCache``, and the
+    host-authoritative block-table / position mirrors; eviction and
+    preemption destroy KV (sessions re-prefill on resume).
+  * ``TieredPageStore`` — adds a fixed-capacity ``HostPagePool``.
+    Preemption *parks*: a session's full KV pages are copied
+    device→host (``Model.save_kv_pages``, one compiled program per
+    pow-2 run length) before its device pages are released, and copied
+    back (``Model.restore_kv_pages``) on re-admission — the tail past
+    the parked blocks re-prefills as usual, so streams are greedy
+    token-identical to the re-prefill baseline.  LRU-evicted prefix
+    pages spill into a host prefix index (keyed by the exact token
+    path) instead of dying, and admissions can restore a matching
+    continuation.  What spills and when is a ``TierPolicy``
+    (memory/policy.py); every migrated page is charged to the virtual
+    clock through ``charge_cb``.
+
+Restored bytes are the very bytes prefill/decode originally wrote, so
+restore == re-prefill == no-preemption for greedy streams by
+construction — the identity tests and table14 pin it end to end.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.memory.allocator import GARBAGE_PAGE, BlockAllocator
+from repro.serving.memory.prefix import PrefixCache
+
+Blob = Tuple[np.ndarray, np.ndarray]      # one page's (k, v), host-side
+
+
+def _pad_pow2(n: int) -> int:
+    """Pages per save/restore program are padded to the next power of
+    two, so the compiled-program count stays O(log max_blocks) instead
+    of one executable per distinct run length."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def save_kv_blobs(save_jit, cache, pages: Sequence[int]) -> List[Blob]:
+    """Batched device→host copy of ``pages``; padding gathers the
+    garbage page (never read, content irrelevant) and is sliced off."""
+    n = len(pages)
+    ids = np.full((_pad_pow2(n),), GARBAGE_PAGE, np.int32)
+    ids[:n] = pages
+    k, v = save_jit(cache, jnp.asarray(ids))
+    k, v = np.asarray(k), np.asarray(v)
+    return [(k[:, i], v[:, i]) for i in range(n)]
+
+
+def restore_kv_blobs(restore_jit, cache, pages: Sequence[int],
+                     blobs: Sequence[Blob]):
+    """Batched host→device copy of ``blobs`` into ``pages``; padding
+    writes zeros into the garbage page (a write sink by contract)."""
+    n = len(pages)
+    assert n == len(blobs)
+    pad = _pad_pow2(n)
+    ids = np.full((pad,), GARBAGE_PAGE, np.int32)
+    ids[:n] = pages
+    zero = np.zeros_like(blobs[0][0])
+    k = np.stack([b[0] for b in blobs] + [zero] * (pad - n), axis=1)
+    v = np.stack([b[1] for b in blobs] + [zero] * (pad - n), axis=1)
+    return restore_jit(cache, jnp.asarray(ids), jnp.asarray(k),
+                       jnp.asarray(v))
+
+
+class PageStore:
+    """Single-tier page store: the narrow seam the scheduler programs
+    against — allocation (with prefix-cache pressure relief), prefix
+    match/register, and the block-table / position mirrors whose dirty
+    flags gate the H2D upload (``sync``).  Tier hooks are no-ops here;
+    ``TieredPageStore`` overrides them."""
+
+    kv_tier = "none"
+    policy = None
+    # tier counters (class-level zeros on the single-tier store)
+    pages_spilled = 0
+    pages_restored = 0
+    tier_restores = 0
+    host_prefix_hits = 0
+    park_fails = 0
+
+    def __init__(self, *, n_slots: int, max_blocks: int, page_size: int,
+                 n_pages: int, prefix_cache: bool = False):
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.allocator = BlockAllocator(n_pages)
+        self.prefix = PrefixCache(self.allocator) if prefix_cache else None
+        self._bt = np.zeros((n_slots, max_blocks), np.int32)
+        self._bt_dirty = True
+        self._pos = np.zeros((n_slots,), np.int32)
+        self._pos_dirty = True
+
+    # ------------------------------------------------------- capacity
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return self.allocator.n_free
+
+    @property
+    def cached_pages(self) -> Optional[int]:
+        return len(self.prefix) if self.prefix is not None else None
+
+    # ----------------------------------------------------- allocation
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``allocator.alloc`` with prefix-cache pressure relief: when
+        the free list is short, unreferenced cached prefix pages are
+        reclaimed LRU-first to cover the shortfall.  Cached pages are a
+        soft reserve — they never deny a MANDATORY allocation the bare
+        pool could have served."""
+        got = self.allocator.alloc(n)
+        if got is None and self.prefix is not None:
+            self.prefix.reclaim(n - self.allocator.n_free)
+            got = self.allocator.alloc(n)
+        return got
+
+    def alloc_free(self, n: int) -> Optional[List[int]]:
+        """Free-list-only allocation (optional horizon lookahead):
+        speculative pages never drain the prefix cache."""
+        return self.allocator.alloc(n)
+
+    def can_cover(self, need: int, exclude: Sequence[int] = ()) -> bool:
+        """Could ``need`` pages be obtained without preempting anyone —
+        free list first, cache reclaim cascade as the fallback
+        (``exclude``: matched pages an admission in flight is about to
+        retain, which must count as pinned)?"""
+        if self.allocator.n_free >= need:
+            return True
+        if self.prefix is None:
+            return False
+        return (self.allocator.n_free
+                + self.prefix.reclaimable(exclude)) >= need
+
+    def retain(self, pages: Sequence[int]) -> None:
+        self.allocator.retain(pages)
+
+    def release(self, pages: Sequence[int]) -> None:
+        self.allocator.release(pages)
+
+    # --------------------------------------------------------- prefix
+    def match(self, seq: np.ndarray) -> List[int]:
+        if self.prefix is None:
+            return []
+        return self.prefix.match(seq, self.page_size)
+
+    def register(self, seq: np.ndarray, pages: Sequence[int],
+                 n_blocks: int) -> None:
+        if self.prefix is not None and n_blocks:
+            self.prefix.register(seq, self.page_size, pages, n_blocks)
+
+    def flush_prefix(self) -> int:
+        return self.prefix.flush() if self.prefix is not None else 0
+
+    # ---------------------------------------------------- block table
+    def map_pages(self, slot: int, start_blk: int,
+                  pages: Sequence[int]) -> None:
+        self._bt[slot, start_blk:start_blk + len(pages)] = pages
+        self._bt_dirty = True
+
+    def set_pos(self, slot: int, pos: int) -> None:
+        self._pos[slot] = pos
+        self._pos_dirty = True
+
+    def mirror_pos(self, slot: int, pos: int) -> None:
+        """Update the host pos mirror WITHOUT dirtying: the device
+        already holds this value (its decode step advanced it), so no
+        upload is owed — only host-side resets dirty the vector."""
+        self._pos[slot] = pos
+
+    def clear_slot(self, slot: int) -> None:
+        self._bt[slot, :] = GARBAGE_PAGE
+        self._bt_dirty = True
+        self._pos[slot] = 0
+        self._pos_dirty = True
+
+    def sync(self, cache, pos_always: bool = True) -> None:
+        """Push the host-authoritative block table + positions into the
+        cache pytree (pure data: never changes compiled shapes).  The
+        block table only uploads when admission/eviction/allocation
+        dirtied it; ``pos_always`` re-syncs positions every tick (the
+        K=1 path — its decode step advances every lane's device pos),
+        while the horizon-K path passes False (device steps clamp
+        inactive lanes, so only host-side resets need an upload)."""
+        if self._bt_dirty:
+            cache["block_table"] = jnp.asarray(self._bt)
+            self._bt_dirty = False
+        if pos_always or self._pos_dirty:
+            cache["pos"] = jnp.asarray(self._pos)
+            self._pos_dirty = False
+
+    # ---------------------------------------------- tier hooks (no-op)
+    def park(self, sid: str, n_full: int, pages: Sequence[int],
+             cache) -> Optional[int]:
+        """Single tier: nothing to park into — preemption re-prefills."""
+        return None
+
+    def parked_blocks(self, sid: str) -> int:
+        return 0
+
+    def take_parked(self, sid: str, skip: int, pages: Sequence[int],
+                    cache):
+        raise NotImplementedError("single-tier store parks nothing")
+
+    def drop_parked(self, sid: str) -> None:
+        pass
+
+    def drop_shadows(self, sid: str) -> None:
+        pass
+
+    def host_match(self, seq: np.ndarray, from_blk: int,
+                   max_blocks: int) -> List[Tuple[int, ...]]:
+        return []
+
+    def restore_host_prefix(self, paths, pages, cache):
+        raise NotImplementedError("single-tier store has no host index")
+
+    def flush_host(self) -> int:
+        return 0
+
+    @property
+    def host_used(self) -> int:
+        return 0
+
+
+class HostPagePool:
+    """Fixed-capacity pool of spilled KV page blobs in host DRAM.
+
+    Handles are opaque ints; *pinned* blobs (parked sessions and shadow
+    pre-spills — KV a waiting session will need back) are never
+    evicted, unpinned blobs (the host prefix index) are LRU-evicted to
+    make room.  ``on_drop`` tells the owner an unpinned handle was
+    evicted so its index entry can be forgotten."""
+
+    def __init__(self, capacity: int):
+        assert capacity >= 1, "a host tier needs at least one page"
+        self.capacity = capacity
+        self._blobs: Dict[int, Blob] = {}
+        self._pinned: set = set()
+        self._lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        self._next = 0
+        self.spilled = 0                 # total puts
+        self.dropped = 0                 # LRU evictions of unpinned blobs
+        self.on_drop: Optional[Callable[[int], None]] = None
+
+    @property
+    def used(self) -> int:
+        return len(self._blobs)
+
+    @property
+    def free(self) -> int:
+        return self.capacity - len(self._blobs)
+
+    def reserve(self, n: int) -> bool:
+        """Make room for ``n`` blobs by LRU-dropping unpinned entries;
+        False (and no change beyond the drops) when pinned blobs alone
+        leave the pool too full."""
+        while self.free < n and self._lru:
+            h, _ = self._lru.popitem(last=False)
+            del self._blobs[h]
+            self.dropped += 1
+            if self.on_drop is not None:
+                self.on_drop(h)
+        return self.free >= n
+
+    def put(self, blob: Blob, pinned: bool) -> Optional[int]:
+        if not self.reserve(1):
+            return None
+        h = self._next
+        self._next += 1
+        self._blobs[h] = blob
+        if pinned:
+            self._pinned.add(h)
+        else:
+            self._lru[h] = None
+        self.spilled += 1
+        return h
+
+    def touch(self, handle: int) -> None:
+        if handle in self._lru:
+            self._lru.move_to_end(handle)
+
+    def get(self, handle: int) -> Blob:
+        return self._blobs[handle]
+
+    def pop(self, handle: int) -> Blob:
+        blob = self._blobs.pop(handle)
+        self._pinned.discard(handle)
+        self._lru.pop(handle, None)
+        return blob
+
+
+class TieredPageStore(PageStore):
+    """Device pool + host-DRAM spill tier behind the ``PageStore``
+    seam.  See the module docstring for the migration contract."""
+
+    kv_tier = "host"
+
+    def __init__(self, *, host_pages: int, policy, save_fn, restore_fn,
+                 get_cache, charge_cb=None, **kw):
+        super().__init__(**kw)
+        self.policy = policy
+        self.host = HostPagePool(host_pages)
+        self.host.on_drop = self._forget_handle
+        self._save = save_fn             # (cache, pages) -> [Blob]
+        self._restore = restore_fn       # (cache, pages, blobs) -> cache
+        self._get_cache = get_cache      # live cache for the evict hook
+        self._charge = charge_cb or (lambda n_pages: None)
+        self._parked: Dict[str, List[Optional[int]]] = {}  # sid -> handles
+        self._shadow: Dict[Tuple[str, int], int] = {}      # (sid, blk) -> h
+        self._shadow_sids: Dict[str, set] = {}
+        self._hpath: Dict[Tuple[int, ...], int] = {}       # token path -> h
+        self._by_handle: Dict[int, Tuple[int, ...]] = {}
+        # instance counters shadow the class-level zeros
+        self.pages_spilled = 0
+        self.pages_restored = 0
+        self.tier_restores = 0
+        self.host_prefix_hits = 0
+        self.park_fails = 0
+        if policy.spill_prefix and self.prefix is not None:
+            self.prefix.on_evict = self._spill_evicted_prefix
+
+    # ------------------------------------------------- host prefix index
+    def _forget_handle(self, handle: int) -> None:
+        path = self._by_handle.pop(handle, None)
+        if path is not None:
+            self._hpath.pop(path, None)
+
+    def _spill_evicted_prefix(self, path: Tuple[int, ...],
+                              page: int) -> None:
+        """PrefixCache eviction hook: copy the dying page host-side and
+        index it by its exact token path (content == f(token path), so
+        the path is a collision-free key)."""
+        if path in self._hpath:
+            return
+        (blob,) = self._save(self._get_cache(), [page])
+        h = self.host.put(blob, pinned=False)
+        if h is None:
+            return                       # pinned blobs own the pool
+        self._hpath[path] = h
+        self._by_handle[h] = path
+        self.pages_spilled += 1
+        self._charge(1)
+
+    def host_match(self, seq: np.ndarray, from_blk: int,
+                   max_blocks: int) -> List[Tuple[int, ...]]:
+        """Token paths of host-index blocks continuing ``seq`` from
+        block ``from_blk`` (exclusive-capped at ``max_blocks`` so a
+        fresh prompt always keeps >= 1 tail token to prefill — its
+        first sample comes from the tail's logits)."""
+        paths = []
+        for blk in range(from_blk, max_blocks):
+            path = tuple(int(t) for t in seq[:(blk + 1) * self.page_size])
+            if path not in self._hpath:
+                break
+            paths.append(path)
+        return paths
+
+    def restore_host_prefix(self, paths: Sequence[Tuple[int, ...]],
+                            pages: Sequence[int], cache):
+        """Copy matched host-index blobs back into fresh device pages
+        (the entries move back to the device tier — the caller registers
+        the pages in the device prefix cache)."""
+        blobs = [self.host.pop(self._hpath[p]) for p in paths]
+        for p in paths:
+            self._by_handle.pop(self._hpath[p], None)
+            del self._hpath[p]
+        cache = self._restore(cache, pages, blobs)
+        self.pages_restored += len(pages)
+        self.host_prefix_hits += len(pages)
+        self._charge(len(pages))
+        return cache
+
+    def flush_host(self) -> int:
+        """Drop every host prefix-index entry (end-of-run accounting;
+        parked/shadow blobs — pinned KV a session still owns — stay)."""
+        n = 0
+        for path, h in list(self._hpath.items()):
+            self.host.pop(h)
+            self._by_handle.pop(h, None)
+            del self._hpath[path]
+            n += 1
+        return n
+
+    @property
+    def host_used(self) -> int:
+        return self.host.used
+
+    def host_stats(self) -> Dict[str, int]:
+        return {"capacity": self.host.capacity, "used": self.host.used,
+                "parked": sum(len(h) for h in self._parked.values()),
+                "shadow": len(self._shadow),
+                "prefix": len(self._hpath)}
+
+    # -------------------------------------------------- park / restore
+    def park(self, sid: str, n_full: int, pages: Sequence[int],
+             cache) -> Optional[int]:
+        """Spill a preempted session's ``n_full`` full KV pages to the
+        host pool (reusing shadow pre-spills — LookAheadSpill — where
+        present).  Returns the pages copied *now*, or None when parking
+        was impossible (no full pages, or pinned blobs already fill the
+        host pool) — the caller then falls back to plain re-prefill."""
+        assert sid not in self._parked, f"{sid} parked twice"
+        shadows = self._shadow_sids.get(sid, set())
+        fresh = [b for b in range(n_full) if b not in shadows]
+        if n_full == 0 or not self.host.reserve(len(fresh)):
+            self.drop_shadows(sid)
+            self.park_fails += 1
+            return None
+        handles: List[Optional[int]] = [None] * n_full
+        if fresh:
+            blobs = self._save(cache, [pages[b] for b in fresh])
+            for b, blob in zip(fresh, blobs):
+                handles[b] = self.host.put(blob, pinned=True)
+                assert handles[b] is not None, "reserve() covered park"
+        for b in range(n_full):           # adopt shadows, drop overshoot
+            if b in shadows:
+                handles[b] = self._shadow.pop((sid, b))
+        for b in shadows - set(range(n_full)):
+            self.host.pop(self._shadow.pop((sid, b)))
+        self._shadow_sids.pop(sid, None)
+        self._parked[sid] = handles
+        self.pages_spilled += len(fresh)
+        if fresh:
+            self._charge(len(fresh))
+        return len(fresh)
+
+    def parked_blocks(self, sid: str) -> int:
+        return len(self._parked.get(sid, ()))
+
+    def take_parked(self, sid: str, skip: int, pages: Sequence[int],
+                    cache):
+        """Restore a parked session's blocks ``skip..n_full-1`` into
+        fresh device ``pages`` (blocks below ``skip`` were covered by a
+        device prefix match — same tokens, same content) and retire the
+        parked entry."""
+        handles = self._parked.pop(sid)
+        assert len(pages) == len(handles) - skip
+        blobs = [self.host.pop(h) for h in handles[skip:]]
+        for h in handles[:skip]:
+            self.host.pop(h)
+        cache = self._restore(cache, pages, blobs)
+        self.pages_restored += len(pages)
+        self.tier_restores += 1
+        self._charge(len(pages))
+        return cache
+
+    def drop_parked(self, sid: str) -> None:
+        """Forget a parked entry without restoring (the session was
+        re-admitted through a device prefix match or plain
+        re-prefill)."""
+        for h in self._parked.pop(sid, ()):
+            self.host.pop(h)
+
+    # ---------------------------------------------- shadow pre-spills
+    def has_shadow(self, sid: str, blk: int) -> bool:
+        return (sid, blk) in self._shadow
+
+    def shadow_spill(self, sid: str, blks: Sequence[int],
+                     pages: Sequence[int], cache) -> int:
+        """LookAheadSpill: pre-copy a *resident* session's cold full
+        pages host-side during idle ticks, so a later park copies only
+        the un-shadowed remainder.  Cold full pages are immutable
+        (decode writes only at ``pos``), so the copies stay valid."""
+        if not self.host.reserve(len(blks)):
+            return 0
+        blobs = self._save(cache, pages)
+        for blk, blob in zip(blks, blobs):
+            h = self.host.put(blob, pinned=True)
+            assert h is not None
+            self._shadow[(sid, blk)] = h
+            self._shadow_sids.setdefault(sid, set()).add(blk)
+        self.pages_spilled += len(blks)
+        self._charge(len(blks))
+        return len(blks)
+
+    def drop_shadows(self, sid: str) -> None:
+        for blk in self._shadow_sids.pop(sid, set()):
+            self.host.pop(self._shadow.pop((sid, blk)))

@@ -1,135 +1,22 @@
 """Continuous-batching session scheduler over a slotted KV cache.
 
-The paper's conclusion (batch-1 decode is launch-bound, fixed by keeping
-the whole step inside ONE compiled program) scales to multi-user serving
-only if session churn never forces a recompile.  The scheduler therefore
-serves K concurrent sessions out of a **fixed-capacity slotted cache**:
-
-  * the decode batch dimension is the (constant) slot count — the step
-    program, its shapes, and its compiled executable never change;
-  * each slot carries its own write position (``cache["pos"]`` is a
-    (n_slots,) vector) and a per-slot length mask, so sequences of
-    different ages decode together (models/attention.py);
-  * admission prefills a session's prompt **into** its slot
-    (``Model.prefill_into_slot`` — one compile per distinct prompt
-    length, amortised across all future admissions);
-  * completed sessions are evicted and their slot is backfilled from a
-    FIFO waiting queue; free slots ride along in the batch as masked
-    lanes (their outputs are discarded, their stale K/V stays masked).
-
-**Paged mode** (``paged=True``) removes the last capacity cliff: slots
-no longer each reserve a full ``max_len`` K/V row.  The cache becomes a
-pool of fixed-size pages plus a per-slot block table
-(``Model.init_cache(paged=True)``); a host-side ``BlockAllocator``
-free-list hands pages out on demand.  Admission is gated on free pages,
-eviction reclaims them, and the pool may be *oversubscribed*
-(``n_pages`` smaller than full backing) — capacity follows live tokens,
-which is exactly the memory term the paper says dominates once the
-launch tax is gone.  If decode outgrows the pool mid-flight, the
-youngest session is preempted (pages reclaimed, session requeued and
-later re-prefilled from its prompt + generated prefix) so the oldest
-always progresses.  Long prompts can be admitted in fixed-size
-**chunks** (``prefill_chunk``) interleaved with decode ticks, so one big
-admission never stalls live sessions.  Shapes stay constant throughout:
-the paged decode step is still ONE compiled program; page residency is
-pure data (the block table).
-
-The paged step's attention route follows the Model's ``decode_backend``:
-``"pallas"`` runs the fused block-table kernel
-(kernels/paged_decode_attention — pages read in place, per-step KV
-traffic tracked in ``step_kv_blocks``), any other backend takes the
-gather+SDPA reference through the materialised ``paged_view``.
-
-**Prefix sharing** (``prefix_cache=True``, paged mode only) stops
-moving — or even re-computing — shared prompt bytes at all: physical-AI
-fleets replay the same system prompt / scene preamble across sessions,
-and with a block table already indirecting every page, "the same
-prefix" can simply BE the same pages.  A ``PrefixCache`` hash-chain
-indexes every fully-prefilled page by (parent page, its token run); on
-admission the longest cached page-aligned prefix is matched, the new
-slot's block table points at the shared pages (``BlockAllocator``
-refcounts track the holders), and only the unmatched tail is prefilled
-(``prefill_chunk_into_slot`` from the matched boundary — tail chunks
-write fresh private pages, so shared pages are never written).  A fully
-cached prompt skips prefill entirely: the last prompt token is replayed
-through the decode step for its logits, and since that step's KV write
-lands inside the last shared page, the page is first **CoW-faulted**
-into a private copy (one host-side page copy, before dispatch).
-Eviction and preemption *release* (decrement) instead of freeing;
-cached pages whose only holder is the cache are reclaimed LRU-leaf-
-first, and only under allocation pressure.  The decode read path —
-fused Pallas kernel and gather route alike — is untouched by
-construction: which physical page backs a block was always pure data.
-The identity contract is GREEDY: temperature-0 streams are token-
-identical to the no-sharing baseline.  With ``temperature > 0`` a
-fully-cached admission draws its first token under a decode-tick salt
-instead of the admission salt (and shifts later admission salts), so
-stochastic streams sample the same distributions under different keys
-— same family, different draws.
-
-**Trace replay** (requests with ``arrival_s > 0``) turns the scheduler
-from a lockstep-wave harness into a load harness: sessions are released
-into the FIFO queue by *virtual arrival time* instead of all at once,
-against a deterministic virtual clock that charges every dispatched
-program a launch tax (``virtual_dispatch_s``) plus ``virtual_step_s``
-per device decode step — the paper's two latency terms, made explicit
-so queueing, admission, and horizon policy trade off in a
-machine-independent currency.  Every generated token is stamped with
-its virtual emission time (and, when ``timed``, a wall timestamp), so
-``SessionResult`` carries what the *session* feels: TTFT and the
-per-token latency stream, including queueing and preemption stalls —
-not just aggregate tok/s (serving/trace.py generates traces and turns
-these stamps into SLO metrics).
-
-**Adaptive horizon-K** (``adaptive_k=True``) makes the macro-tick react
-to load instead of being a fixed throughput/latency trade: each tick
-picks a horizon from a halving ladder (``steps_per_tick`` down to
-``min_steps_per_tick``) — shrinking while the admission queue is deep
-or the next arrival lands mid-horizon (a long fused tick would hold
-admission hostage and blow TTFT), growing toward the ladder top while
-resident sessions are long-running and nobody waits (amortising the
-launch tax when latency is not under pressure).  Every ladder horizon
-compiles once and is reused; greedy streams are token-identical to any
-fixed K.  **Priority-aware preemption** (on by default; the
-``priority_preemption=False`` baseline keeps youngest-first) picks
-page-pressure victims lowest-priority-first, youngest within a
-priority, and never evicts a higher-priority session for a lower one —
-sessions of equal priority behave exactly like the old youngest-first
-rule.
-
-Scheduling is host-side Python; the per-token hot path is exactly the
-paper's ``full_jit`` arm — one dispatch per decode step for the whole
-slot batch — and the eager / stage_jit executors (core.dispatch) remain
-available for the dispatch-tax A/B on the live continuous workload
-(contiguous layout only; paged serving is full_jit-only).
-
-**Horizon-K fused ticks** (``steps_per_tick=K > 1``) take the paper's
-CUDA-Graphs finding one level further: even the full_jit arm pays one
-Python round-trip + dispatch + sync *per token*, and on fast hardware
-that launch tax — not bandwidth — caps batch-1 decode.  A macro-tick
-runs ONE compiled program (``Model.decode_steps``: ``lax.scan`` over
-``decode_step`` with on-device sampling) that advances every live slot
-up to K tokens; lanes that hit EOS or their token budget mid-horizon
-are masked no-ops on device (write-clamped like the ring path, frozen
-pos), the (n_slots, K) token matrix returns in a single transfer, and
-the host reconciles afterwards — trimming over-generated tokens,
-evicting finished sessions, reclaiming their pages.  In paged mode the
-``BlockAllocator`` pre-reserves lookahead pages covering each slot's
-granted horizon BEFORE dispatch (shrinking the grant, preempting
-younger sessions, or preempting the needy slot itself exactly like the
-K=1 page-fault path), so the device never outruns its block table.
-Admission and chunked prefill interleave between macro-ticks.  Greedy
-output is token-identical to K=1 on every route (contiguous,
-paged-gather, paged-pallas); there is exactly ONE compiled multi-step
-program per (backend, K) reused through session churn.
+Owns admission, dispatch, and reconciliation only: the decode batch
+dimension is the constant slot count (session churn never recompiles —
+the paper's launch-bound finding scaled to serving), page accounting
+sits behind the ``PageStore`` seam in serving/memory/ (allocator,
+prefix cache, host-DRAM tier, policies), and the compiled programs live
+in serving/programs.py.  Feature axes — paged KV, prefix sharing + CoW,
+the host KV tier (preemption parks full pages, resume restores them),
+trace replay on a deterministic virtual clock, horizon-K fused
+macro-ticks, adaptive-K, priority preemption — are each greedy
+token-identity-tested against their baselines.  Design notes: README.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-import heapq
 import time
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -137,420 +24,23 @@ import numpy as np
 
 from repro.core.dispatch import MODES, launch_count
 from repro.models.model import Model
+from repro.serving.memory import (GARBAGE_PAGE, BlockAllocator, PageStore,
+                                  PrefixCache, TieredPageStore, get_policy,
+                                  restore_kv_blobs, save_kv_blobs)
+from repro.serving.programs import SchedulerPrograms, jit_cache_size
 from repro.serving.sampling import sample
+from repro.serving.session import (ContinuousResult, Event, SessionRequest,
+                                   SessionResult, _Session)
+from repro.serving.vclock import VirtualClockMixin, build_k_ladder
 
-Event = Tuple  # ("admit"|"token"|"finish"|"preempt", session_id, slot[, token])
-
-GARBAGE_PAGE = 0   # reserved pool page free/mid-prefill lanes point at
-
-
-def jit_cache_size(fn) -> Optional[int]:
-    """Compiled-executable count of a ``jax.jit`` callable.
-
-    ``_cache_size()`` is a private jax internal (the only hook that
-    exposes the per-callable executable cache today); wrap it so a jax
-    upgrade that renames it degrades the recompile guard to ``None``
-    (= "unknown") instead of crashing the scheduler.
-    """
-    try:
-        return fn._cache_size()
-    except Exception:
-        return None
+__all__ = [
+    "SlotScheduler", "jit_cache_size", "GARBAGE_PAGE", "Event",
+    "BlockAllocator", "PrefixCache", "SessionRequest", "SessionResult",
+    "ContinuousResult",
+]
 
 
-class BlockAllocator:
-    """Refcounted LIFO free-list over a fixed pool of KV pages.
-
-    Page ``GARBAGE_PAGE`` (0) is reserved as the write sink for lanes
-    that have no real page under their current position (free slots,
-    blocks beyond a session's allocation) and is never handed out.
-
-    ``alloc`` hands pages out with refcount 1; prefix sharing adds
-    holders (``retain``) when another slot's block table — or the prefix
-    cache — points at the same physical page, and ``release`` drops one
-    holder, returning the page to the free list only when the last
-    holder is gone.  The free list is mirrored by a set, so double-free
-    detection is O(1) per page instead of an O(free-list) membership
-    scan (a long session releasing hundreds of pages used to make
-    reclaim quadratic on big pools)."""
-
-    def __init__(self, n_pages: int):
-        assert n_pages >= 2, "need the garbage page plus >= 1 real page"
-        self.n_pages = n_pages
-        self._free: List[int] = list(range(n_pages - 1, 0, -1))
-        self._free_set = set(self._free)
-        self._refs = [0] * n_pages
-
-    @property
-    def n_free(self) -> int:
-        return len(self._free)
-
-    def refcount(self, page: int) -> int:
-        return self._refs[page]
-
-    def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` pages (refcount 1 each), or None (and no change) if
-        under-supplied."""
-        if n > len(self._free):
-            return None
-        got = [self._free.pop() for _ in range(n)]
-        for p in got:
-            self._free_set.discard(p)
-            self._refs[p] = 1
-        return got
-
-    def retain(self, pages: Sequence[int]) -> None:
-        """Add one holder to each (already allocated) page."""
-        for p in pages:
-            assert 0 < p < self.n_pages, f"bad page id {p}"
-            assert self._refs[p] > 0, f"retain of unallocated page {p}"
-            self._refs[p] += 1
-
-    def release(self, pages: Sequence[int]) -> None:
-        """Drop one holder per page; the last release frees the page."""
-        for p in pages:
-            assert 0 < p < self.n_pages, f"bad page id {p}"
-            assert p not in self._free_set and self._refs[p] > 0, \
-                f"double free of page {p}"
-            self._refs[p] -= 1
-            if self._refs[p] == 0:
-                self._free.append(p)
-                self._free_set.add(p)
-
-
-@dataclasses.dataclass
-class _PrefixNode:
-    """One cached page: ``key = (parent page, the page's token run)``."""
-    key: Tuple[int, Tuple[int, ...]]
-    page: int
-    parent: int                      # parent page id; GARBAGE_PAGE = root
-    children: set = dataclasses.field(default_factory=set)  # child pages
-    last_used: int = 0               # LRU clock stamp
-
-
-class PrefixCache:
-    """Hash-chain prefix index over page-aligned token runs → pool pages.
-
-    A node's key is ``(parent page id, tuple of the page's tokens)`` —
-    exact (dict equality, never a hash collision) and chain-unique: a
-    page's KV content is a pure function of the token path from the
-    root, so any two sessions whose prompts share a page-aligned prefix
-    resolve to the SAME physical pages, whichever session prefilled
-    them first.  Only *full* pages are indexed (a partial page is still
-    being written and its content is not final).
-
-    The cache holds one allocator reference per registered page, which
-    is what keeps a finished session's prefix resident after its slot
-    is reclaimed.  A cached page whose only remaining holder is the
-    cache is *reclaimable*; under allocation pressure ``reclaim``
-    releases such pages leaf-first in LRU order (a parent is never
-    evicted while a child chain still hangs off it — the child's
-    content is only reachable through the parent's chain)."""
-
-    def __init__(self, allocator: BlockAllocator):
-        self._allocator = allocator
-        self._nodes: Dict[Tuple[int, Tuple[int, ...]], _PrefixNode] = {}
-        self._by_page: Dict[int, _PrefixNode] = {}
-        self._clock = 0
-
-    def __len__(self) -> int:
-        return len(self._nodes)
-
-    def pages(self) -> List[int]:
-        """Physical page ids currently registered (sorted)."""
-        return sorted(self._by_page)
-
-    def _now(self) -> int:
-        self._clock += 1
-        return self._clock
-
-    @staticmethod
-    def _run(tokens: np.ndarray, blk: int, page_size: int
-             ) -> Tuple[int, ...]:
-        return tuple(int(t)
-                     for t in tokens[blk * page_size:(blk + 1) * page_size])
-
-    def match(self, tokens: np.ndarray, page_size: int) -> List[int]:
-        """Pages backing the longest cached page-aligned prefix of
-        ``tokens``, root-first (empty when the first page misses).
-        Walked nodes get their LRU stamp refreshed."""
-        now = self._now()
-        pages: List[int] = []
-        parent = GARBAGE_PAGE
-        for blk in range(len(tokens) // page_size):
-            node = self._nodes.get((parent, self._run(tokens, blk,
-                                                      page_size)))
-            if node is None:
-                break
-            node.last_used = now
-            pages.append(node.page)
-            parent = node.page
-        return pages
-
-    def register(self, tokens: np.ndarray, page_size: int,
-                 pages: Sequence[int], n_blocks: int) -> None:
-        """Index the first ``n_blocks`` (full) pages of a session's
-        prefilled run.  Each newly registered page gains a cache
-        reference; blocks whose content is already cached (the session
-        matched them, or another session prefilled identical content
-        concurrently) keep the incumbent page — the walk continues down
-        the INDEX's chain, so a mixed-ownership chain stays coherent."""
-        now = self._now()
-        parent = GARBAGE_PAGE
-        for blk in range(n_blocks):
-            key = (parent, self._run(tokens, blk, page_size))
-            node = self._nodes.get(key)
-            if node is None:
-                page = pages[blk]
-                if page in self._by_page:     # already indexed elsewhere
-                    break
-                node = _PrefixNode(key, page, parent, last_used=now)
-                self._nodes[key] = node
-                self._by_page[page] = node
-                if parent != GARBAGE_PAGE:
-                    self._by_page[parent].children.add(page)
-                self._allocator.retain([page])
-            node.last_used = now
-            parent = node.page
-
-    def reclaimable(self, exclude: Sequence[int] = ()) -> int:
-        """Pages a full cascade of leaf-first evictions could free right
-        now — cached pages held only by the cache whose entire subtree
-        is likewise unreferenced.  ``exclude`` pages (about to be
-        retained by an admission in flight) count as pinned.  Iterative
-        post-order with memoisation: O(nodes) per call, no recursion
-        depth to hit on deep chains."""
-        ex = set(exclude)
-        memo: Dict[int, bool] = {}
-        for root in self._by_page:
-            if root in memo:
-                continue
-            stack = [(root, False)]
-            while stack:
-                page, visited = stack.pop()
-                if page in memo:
-                    continue
-                node = self._by_page[page]
-                if visited:
-                    memo[page] = (page not in ex
-                                  and self._allocator.refcount(page) == 1
-                                  and all(memo[c] for c in node.children))
-                else:
-                    stack.append((page, True))
-                    stack.extend((c, False) for c in node.children
-                                 if c not in memo)
-        return sum(memo.values())
-
-    def _evict(self, node: _PrefixNode) -> None:
-        del self._nodes[node.key]
-        del self._by_page[node.page]
-        if node.parent != GARBAGE_PAGE and node.parent in self._by_page:
-            self._by_page[node.parent].children.discard(node.page)
-        self._allocator.release([node.page])
-
-    def reclaim(self, n: int) -> int:
-        """Release up to ``n`` unreferenced cached pages back to the
-        free list, LRU leaves first (evicting a leaf may expose its
-        parent as the next candidate).  A heap of candidate leaves keeps
-        this O((cache + n) log cache) — this runs inside the mandatory
-        allocation path, so a per-eviction rescan (quadratic on deep
-        chains, the same class of bug the allocator's free-set fixed)
-        is not acceptable.  Returns the pages actually freed."""
-        freed = 0
-        heap = [(nd.last_used, nd.page) for nd in self._by_page.values()
-                if not nd.children
-                and self._allocator.refcount(nd.page) == 1]
-        heapq.heapify(heap)
-        while freed < n and heap:
-            stamp, page = heapq.heappop(heap)
-            nd = self._by_page.get(page)
-            if nd is None or nd.children or nd.last_used != stamp \
-                    or self._allocator.refcount(page) != 1:
-                continue        # stale candidate
-            parent = nd.parent
-            self._evict(nd)
-            freed += 1
-            if parent != GARBAGE_PAGE:
-                pn = self._by_page.get(parent)
-                if pn is not None and not pn.children \
-                        and self._allocator.refcount(parent) == 1:
-                    heapq.heappush(heap, (pn.last_used, parent))
-        return freed
-
-    def flush(self) -> int:
-        """Drop every unreferenced cached page (end-of-run accounting;
-        pages still shared by live sessions stay)."""
-        return self.reclaim(len(self._by_page))
-
-
-@dataclasses.dataclass(frozen=True)
-class SessionRequest:
-    """One user session: a prompt, a token budget, and (for trace
-    replay) an arrival time plus class/priority metadata.
-
-    ``arrival_s`` is in *virtual seconds relative to the ``run()`` that
-    serves the request*: 0.0 (the default) keeps the legacy behaviour —
-    the request is queued the moment it is submitted.  ``priority``
-    orders preemption victims (higher = more important; equal
-    priorities degrade to the youngest-first rule).  ``klass`` is a
-    free-form session-class label carried through to ``SessionResult``
-    so per-class SLO metrics can be grouped (serving/trace.py)."""
-    session_id: str
-    prompt: Sequence[int]            # (S,) token ids
-    max_new_tokens: int
-    arrival_s: float = 0.0           # virtual arrival (0 = immediate)
-    priority: int = 0                # preemption priority (higher wins)
-    klass: str = ""                  # session-class label (SLO grouping)
-
-
-@dataclasses.dataclass
-class SessionResult:
-    session_id: str
-    tokens: np.ndarray               # (max_new_tokens,) generated ids
-    slot: int                        # slot the session was served in
-    admitted_tick: int
-    finished_tick: int
-    step_times_s: List[float]        # shared-batch decode-step walls
-    klass: str = ""                  # session-class label (from request)
-    priority: int = 0
-    arrival_s: float = 0.0           # virtual arrival on the run clock
-    token_times_s: np.ndarray = dataclasses.field(
-        default_factory=lambda: np.zeros(0))
-    # virtual emission timestamp per generated token (same clock as
-    # ``arrival_s``) — queueing, prefill, preemption stalls and macro-
-    # tick position all included, so diffs are the per-token latency
-    # the session FELT, not the shared-batch service wall
-    ttft_s: Optional[float] = None   # token_times_s[0] - arrival_s
-    ttft_wall_s: Optional[float] = None
-    # wall-clock TTFT (queue release -> first token); None when the
-    # scheduler ran timed=False — never NaN, so JSON stays clean
-
-    def token_latencies_s(self) -> np.ndarray:
-        """Virtual inter-token latencies (the TPOT stream): gaps
-        between consecutive emission stamps.  Empty for 1-token
-        sessions."""
-        return np.diff(self.token_times_s)
-
-
-@dataclasses.dataclass
-class ContinuousResult:
-    """Outcome of one ``SlotScheduler.run()`` call.
-
-    ``run()`` may be called repeatedly on one scheduler (submit → run →
-    submit → run); every field belongs to exactly one of two groups,
-    and which group is part of its contract:
-
-    **Cumulative** over the scheduler's lifetime (all ``run()`` calls so
-    far): ``sessions``, ``events``, ``decode_steps``.
-    ``step_cache_size``, ``launches_per_step``, and ``steps_per_tick``
-    describe the compiled program / configuration, not a count.
-
-    **This ``run()`` call only** (delta since the call started):
-    ``ticks``, ``wall_s``, ``tokens_per_s``, ``preemptions``,
-    ``dispatches``, ``run_tokens``, ``step_kv_blocks``,
-    ``host_dispatch_s``, ``host_sync_s``, ``prefill_tokens``,
-    ``prefix_hits``, ``prefix_tokens_saved``, ``cow_copies``,
-    ``arrivals``, ``horizon_hist``.
-    (``dispatches`` is the per-run delta of the cumulative
-    ``decode_steps``.)
-
-    ``now_s`` is the scheduler's virtual clock at the end of the call —
-    monotone across calls (a clock, not a counter); per-run virtual
-    makespan is the difference of consecutive ``now_s`` readings."""
-    sessions: Dict[str, SessionResult]  # cumulative: every finished session
-    ticks: int                       # scheduler iterations this run()
-    decode_steps: int                # batched decode dispatches (cumulative)
-    wall_s: float
-    tokens_per_s: float              # aggregate generated tokens / wall
-    step_cache_size: Optional[int]   # compiled decode-step count (full_jit)
-    launches_per_step: int           # host dispatches per decode step
-    events: List[Event]              # cumulative event log
-    preemptions: int = 0             # paged: sessions requeued for pages
-    step_kv_blocks: Optional[List[int]] = None
-    # paged: per decode step, summed ceil(live_len/page_size) over the
-    # active lanes — the pages the fused kernel actually walks.  None
-    # for contiguous runs.
-    steps_per_tick: int = 1          # horizon K of the fused macro-tick
-    dispatches: int = 0              # decode dispatches this run() call
-    run_tokens: int = 0              # tokens generated this run() call
-    host_dispatch_s: float = 0.0     # host wall building + dispatching
-                                     # decode work (the launch term the
-                                     # horizon amortises)
-    host_sync_s: float = 0.0         # host wall blocked on the per-tick
-                                     # token transfer
-    prefill_tokens: int = 0          # tokens actually dispatched through
-                                     # prefill programs this run()
-    prefix_hits: int = 0             # admissions that matched a cached
-                                     # prefix (prefix sharing; resumed
-                                     # re-admissions count too, so this
-                                     # may exceed the session count)
-    prefix_tokens_saved: int = 0     # sequence tokens (prompt, plus the
-                                     # generated prefix on resume) whose
-                                     # prefill was skipped via shared
-                                     # pages
-    cow_copies: int = 0              # copy-on-write page faults served
-    now_s: float = 0.0               # virtual clock at the end of the
-                                     # call (monotone across calls)
-    arrivals: int = 0                # trace requests released from the
-                                     # arrival queue this run()
-    adaptive_k: bool = False         # horizon chosen per tick (config)
-    horizon_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
-    # macro-ticks dispatched per horizon K this run() — the adaptive
-    # policy's visible footprint ({} for single-step runs)
-
-    def tokens_for(self, session_id: str) -> np.ndarray:
-        return self.sessions[session_id].tokens
-
-
-@dataclasses.dataclass
-class _Session:
-    request: SessionRequest
-    tokens: List[int] = dataclasses.field(default_factory=list)
-    slot: int = -1
-    admitted_tick: int = -1
-    finished_tick: int = -1
-    step_times_s: List[float] = dataclasses.field(default_factory=list)
-    # ---- paged bookkeeping ----
-    pages: List[int] = dataclasses.field(default_factory=list)
-    pos: int = 0                     # host mirror of cache["pos"][slot]
-    prefilled: int = 0               # prefill_seq tokens written so far
-    prefill_seq: Optional[np.ndarray] = None   # sequence being prefilled
-    seq_cache: Optional[np.ndarray] = None     # memoised admission seq
-                                     # (valid while waiting: tokens only
-                                     # grow while resident in a slot)
-    resume: bool = False             # re-admission after preemption
-    admit_seq: int = -1              # monotone admission order (preempt prio)
-    arrival_s: float = 0.0           # virtual arrival on the run clock
-    release_wall: Optional[float] = None   # perf_counter at queue entry
-    token_times_s: List[float] = dataclasses.field(default_factory=list)
-    first_token_wall: Optional[float] = None
-
-    @property
-    def priority(self) -> int:
-        return self.request.priority
-
-    @property
-    def done(self) -> bool:
-        return len(self.tokens) >= self.request.max_new_tokens
-
-    @property
-    def decoding(self) -> bool:
-        """Prefill complete: the session takes part in decode steps."""
-        return (self.prefill_seq is not None
-                and self.prefilled >= len(self.prefill_seq))
-
-    @property
-    def next_input_token(self) -> int:
-        """Token the next decode step feeds this lane.  Normally the
-        last generated token; a fully-prefix-matched fresh admission has
-        generated nothing yet and replays the last prompt token (its KV
-        row is rewritten in place — into the CoW private copy — and the
-        step's logits stand in for the skipped prefill's)."""
-        return (self.tokens[-1] if self.tokens
-                else int(self.prefill_seq[-1]))
-
-
-class SlotScheduler:
+class SlotScheduler(VirtualClockMixin):
     """Admission / decode / eviction / backfill over a slotted cache."""
 
     def __init__(self, model: Model, params, *, n_slots: int, max_len: int,
@@ -565,23 +55,26 @@ class SlotScheduler:
                  priority_preemption: bool = True,
                  virtual_step_s: float = 1e-3,
                  virtual_dispatch_s: float = 4e-3,
-                 shared_programs: bool = False):
+                 shared_programs: bool = False,
+                 kv_tier: str = "none",
+                 tier_policy="spill",
+                 host_pages: Optional[int] = None,
+                 virtual_host_copy_s: float = 5e-4):
         assert n_slots >= 1
         assert dispatch_mode in MODES, dispatch_mode
         assert steps_per_tick >= 1
         assert 1 <= min_steps_per_tick <= steps_per_tick
+        assert kv_tier in ("none", "host"), kv_tier
         if adaptive_k and steps_per_tick < 2:
             raise NotImplementedError(
-                "adaptive_k picks horizons from a ladder below "
-                "steps_per_tick; a ceiling of 1 leaves nothing to adapt")
+                "adaptive_k needs a horizon ceiling >= 2 to adapt below")
         cfg = model.cfg
         if cfg.n_codebooks:
             raise NotImplementedError(
                 "continuous batching serves single-codebook archs")
         if steps_per_tick > 1 and dispatch_mode != "full_jit":
             raise NotImplementedError(
-                "horizon-K fused ticks ARE the one-program arm; the "
-                "stage/eager dispatch A/B only decomposes single steps")
+                "horizon-K fused ticks ARE the one-program (full_jit) arm")
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -599,23 +92,14 @@ class SlotScheduler:
         self.adaptive_k = adaptive_k
         self.min_steps_per_tick = min_steps_per_tick
         self.priority_preemption = priority_preemption
-        # the horizon ladder: halvings of the ceiling down to the floor.
-        # Each value compiles its own (backend, K) executable exactly
-        # once, so the compiled-program count is bounded by the ladder
-        # length (~log2), not by anything traffic-dependent.
-        ladder = set()
-        k = steps_per_tick
-        while k > min_steps_per_tick:
-            ladder.add(k)
-            k //= 2
-        ladder.add(min_steps_per_tick)
-        self.k_ladder: Tuple[int, ...] = tuple(sorted(ladder))
-        # virtual clock + cost model (trace replay / SLO metrics): every
-        # dispatched program costs a launch tax, every device decode
-        # step a service quantum.  Pure host arithmetic — zero overhead
-        # on the hot path, fully deterministic.
+        self.k_ladder: Tuple[int, ...] = build_k_ladder(
+            steps_per_tick, min_steps_per_tick)
+        # virtual clock (trace replay / SLO metrics): launch tax per
+        # dispatch + service quantum per decode step + host-copy
+        # quantum per migrated page; deterministic host arithmetic
         self.virtual_step_s = virtual_step_s
         self.virtual_dispatch_s = virtual_dispatch_s
+        self.virtual_host_copy_s = virtual_host_copy_s
         self.now_s = 0.0
         self._pending: List[Tuple[float, int, _Session]] = []
         self._arrivals: List[Tuple[float, int, _Session]] = []
@@ -626,41 +110,33 @@ class SlotScheduler:
         self.paged = paged
         if prefix_cache and not paged:
             raise NotImplementedError(
-                "prefix sharing rides the paged block table; contiguous "
-                "slots have no page indirection to share through")
+                "prefix sharing rides the paged block table")
+        if kv_tier != "none" and not paged:
+            raise NotImplementedError(
+                "the host KV tier spills pool pages; contiguous slots "
+                "have none to migrate")
         if paged:
             if dispatch_mode != "full_jit":
                 raise NotImplementedError(
-                    "paged serving runs the full_jit arm only (the "
-                    "stage/eager A/B targets the contiguous layout)")
+                    "paged serving runs the full_jit arm only")
             if prefill_chunk is not None:
                 assert prefill_chunk >= page_size and \
-                    prefill_chunk % page_size == 0, (
-                        "prefill_chunk must be a positive multiple of "
-                        "page_size so chunk boundaries stay page-aligned")
+                    prefill_chunk % page_size == 0, \
+                    "prefill_chunk must be a multiple of page_size"
             self.page_size = page_size
             self.max_blocks = -(-max_len // page_size)
             if n_pages is None:
                 n_pages = 1 + n_slots * self.max_blocks   # full backing
             self.n_pages = n_pages
             self.prefill_chunk = prefill_chunk
-            self.allocator = BlockAllocator(n_pages)
-            self.prefix = PrefixCache(self.allocator) if prefix_cache \
-                else None
-            self.preemptions = 0
-            self.step_kv_blocks: List[int] = []
-            self._bt = np.zeros((n_slots, self.max_blocks), np.int32)
-            self._bt_dirty = True
-            self._pos = np.zeros((n_slots,), np.int32)
-            self._pos_dirty = True
             self.cache = model.init_cache(
                 n_slots, max_len, kv_dtype=kv_dtype, paged=True,
                 page_size=page_size, n_pages=n_pages)
         else:
-            self.preemptions = 0
-            self.prefix = None
             self.cache = model.init_cache(n_slots, max_len,
                                           kv_dtype=kv_dtype, slotted=True)
+        self.preemptions = 0
+        self.step_kv_blocks: List[int] = []
         self.slots: List[Optional[_Session]] = [None] * n_slots
         self.waiting: Deque[_Session] = collections.deque()
         self.finished: List[_Session] = []
@@ -674,74 +150,39 @@ class SlotScheduler:
         self._admit_count = 0       # sampling-salt counter (even salts)
         self._admission_order = 0   # monotone admission id (preempt prio)
 
-        # shared_programs: A/B drivers that build many schedulers over
-        # ONE model (e.g. table13's arm sweep) pay a full recompile per
-        # instance, because each jax.jit wrapper carries its own trace
-        # cache.  Opting in parks the wrappers on the model so every
-        # scheduler over it reuses the same compiled executables —
-        # donation is per call, so sharing the callable is safe.
-        # step_cache_size() then reports the delta since construction,
-        # keeping the "one executable per (backend, K)" accounting
-        # per scheduler.
-        if shared_programs:
-            _shared = model.__dict__.setdefault("_shared_sched_jits", {})
-
-            def _jit(name, make):
-                if name not in _shared:
-                    _shared[name] = make()
-                return _shared[name]
-        else:
-            def _jit(name, make):
-                return make()
-
+        self._progs = SchedulerPrograms(
+            model, paged=paged, kv_tier=kv_tier,
+            dispatch_mode=dispatch_mode, steps_per_tick=steps_per_tick,
+            shared_programs=shared_programs)
         if paged:
-            self._prefill_chunk_jit = _jit(
-                "prefill_chunk",
-                lambda: jax.jit(model.prefill_chunk_into_slot,
-                                donate_argnums=(2,)))
-            self._copy_page_jit = _jit(
-                "copy_page",
-                lambda: jax.jit(model.copy_kv_page, donate_argnums=(0,)))
-        else:
-            self._prefill_slot = _jit(
-                "prefill_slot",
-                lambda: jax.jit(model.prefill_into_slot,
-                                donate_argnums=(2,)))
-        if dispatch_mode == "full_jit":
-            # the production hot path: the whole step is one program,
-            # cache donated so steps run allocation-free.  With
-            # steps_per_tick > 1 the program is the horizon-K multi-step
-            # scan (decode_steps) — ONE executable per (backend, K),
-            # dispatched once per macro-tick; lanes that finish
-            # mid-horizon are masked off on device (steps_left/EOS), so
-            # partial horizons never need a second program.
-            self._step_jit = None
-            self._steps_jit = None
-            if steps_per_tick > 1:
-                self._steps_jit = _jit(
-                    "decode_steps",
-                    lambda: jax.jit(
-                        model.decode_steps,
-                        static_argnames=("horizon", "temperature",
-                                         "top_k", "eos_id"),
-                        donate_argnums=(1,)))
+            store_kw = dict(n_slots=n_slots, max_blocks=self.max_blocks,
+                            page_size=page_size, n_pages=n_pages,
+                            prefix_cache=prefix_cache)
+            if kv_tier == "host":
+                self.store: PageStore = TieredPageStore(
+                    host_pages=(host_pages if host_pages is not None
+                                else n_pages - 1),
+                    policy=get_policy(tier_policy),
+                    save_fn=lambda cache, pages: save_kv_blobs(
+                        self._progs.save_pages, cache, pages),
+                    restore_fn=lambda cache, pages, blobs: restore_kv_blobs(
+                        self._progs.restore_pages, cache, pages, blobs),
+                    get_cache=lambda: self.cache,
+                    charge_cb=self._charge_migration, **store_kw)
             else:
-                self._step_jit = _jit(
-                    "decode_step",
-                    lambda: jax.jit(model.decode_step,
-                                    donate_argnums=(1,)))
+                self.store = PageStore(**store_kw)
+        else:
+            self.store = None
+        self.tiered = paged and self.store.kv_tier == "host"
+        if dispatch_mode == "full_jit":
             self._program = None
         else:
-            # dispatch A/B hooks: same math through the eager/stage_jit
-            # executors of the StepProgram decomposition
-            self._step_jit = None
-            self._steps_jit = None
+            # dispatch A/B: the StepProgram decomposition's executors
             self._program = model.step_program(params, self.cache)
             self._executor = self._program.executor(dispatch_mode)
-        # shared wrappers can arrive pre-warmed by an earlier scheduler
-        # over the same model; compile counts are reported relative to
-        # this instance's start so the recompile guard stays meaningful
-        self._step_cache_base = self._raw_step_cache_size() or 0
+        # shared wrappers may arrive pre-warmed: report compile counts
+        # relative to this instance's start
+        self._step_cache_base = self._progs.raw_step_cache_size() or 0
 
     # ------------------------------------------------------------- intro
     @property
@@ -753,39 +194,30 @@ class SlotScheduler:
         return [s.request.session_id for s in self.slots if s is not None]
 
     @property
+    def allocator(self) -> Optional[BlockAllocator]:
+        return self.store.allocator if self.paged else None
+
+    @property
+    def prefix(self) -> Optional[PrefixCache]:
+        return self.store.prefix if self.paged else None
+
+    @property
     def free_pages(self) -> Optional[int]:
-        return self.allocator.n_free if self.paged else None
+        return self.store.free_pages if self.paged else None
 
     @property
     def cached_pages(self) -> Optional[int]:
-        """Pages currently held by the prefix cache (None when prefix
-        sharing is off)."""
-        return len(self.prefix) if self.prefix is not None else None
+        """Pages held by the prefix cache (None when sharing is off)."""
+        return self.store.cached_pages if self.paged else None
 
     def flush_prefix_cache(self) -> int:
-        """Drop every unreferenced cached prefix page back to the free
-        list (end-of-run accounting; under allocation pressure the LRU
-        reclaim does this incrementally on its own)."""
-        return self.prefix.flush() if self.prefix is not None else 0
-
-    def _raw_step_cache_size(self) -> Optional[int]:
-        if self._steps_jit is not None:
-            return jit_cache_size(self._steps_jit)
-        if self._step_jit is not None:
-            return jit_cache_size(self._step_jit)
-        return None
+        """Drop every unreferenced cached prefix page to the free list."""
+        return self.store.flush_prefix() if self.paged else 0
 
     def step_cache_size(self) -> Optional[int]:
-        """Number of decode-step executables compiled SINCE THIS
-        SCHEDULER was built (the recompile guard: must be 1 after any
-        amount of session churn — for ``steps_per_tick > 1`` that is
-        the ONE horizon-K multi-step program, reused across
-        macro-ticks).  With ``shared_programs`` the underlying cache is
-        shared across schedulers, so the count is a delta against the
-        size at construction.  ``None`` when unknown (staged/eager
-        executors, or a jax version that dropped the private cache-size
-        hook — see ``jit_cache_size``)."""
-        raw = self._raw_step_cache_size()
+        """Decode-step executables compiled since this scheduler was
+        built (recompile guard; None when unknown)."""
+        raw = self._progs.raw_step_cache_size()
         if raw is None:
             return None
         return raw - self._step_cache_base
@@ -804,23 +236,17 @@ class SlotScheduler:
         # last decode write lands at S + max_new - 2; keep it in-cache
         assert prompt.size + request.max_new_tokens - 1 <= self.max_len, (
             f"session {request.session_id}: prompt {prompt.size} + "
-            f"{request.max_new_tokens} new tokens exceeds max_len "
-            f"{self.max_len}")
+            f"{request.max_new_tokens} new exceeds max_len {self.max_len}")
         if self.paged:
             need = self._pages_for(prompt.size + request.max_new_tokens - 1)
             assert need <= self.n_pages - 1, (
-                f"session {request.session_id} needs {need} pages but the "
-                f"pool only holds {self.n_pages - 1}")
+                f"session {request.session_id} needs {need} pages; the "
+                f"pool holds {self.n_pages - 1}")
         req = dataclasses.replace(request, prompt=prompt)
         sess = _Session(req)
         if req.arrival_s > 0.0:
-            # trace replay: the request enters the FIFO queue only once
-            # the virtual clock reaches its arrival.  Arrival times are
-            # relative to the run() that serves them — they are rebased
-            # onto the absolute clock at release time (_release_arrivals
-            # anchors the batch to now_s when it first sees it), so a
-            # scheduler that already served earlier waves replays a new
-            # trace correctly.
+            # trace replay: queued once the virtual clock reaches the
+            # arrival; times are rebased to the serving run()
             self._pending.append((float(req.arrival_s),
                                   self._arrival_seq, sess))
             self._arrival_seq += 1
@@ -838,135 +264,38 @@ class SlotScheduler:
     def _hit_eos(self, tok: int) -> bool:
         return self.eos_id is not None and tok == self.eos_id
 
-    # ------------------------------------------------- trace replay clock
-    def _release_arrivals(self) -> None:
-        """Move trace requests whose virtual arrival has come into the
-        FIFO queue.  Newly submitted arrival batches are anchored to the
-        clock as it stood when the batch is first seen; when the whole
-        system is idle the clock fast-forwards to the next arrival (an
-        empty server does not spin through dead air)."""
-        if self._pending:
-            base = self.now_s
-            for rel, seq, sess in self._pending:
-                sess.arrival_s = base + rel
-                heapq.heappush(self._arrivals, (base + rel, seq, sess))
-            self._pending.clear()
-        if self._arrivals and not self.waiting \
-                and all(s is None for s in self.slots):
-            self.now_s = max(self.now_s, self._arrivals[0][0])
-        while self._arrivals and self._arrivals[0][0] <= self.now_s:
-            _, _, sess = heapq.heappop(self._arrivals)
-            sess.release_wall = time.perf_counter() if self.timed else None
-            self.waiting.append(sess)
-            self.arrivals_released += 1
-
-    def _charge(self, steps: int, dispatches: int = 1) -> None:
-        """Advance the virtual clock: ``dispatches`` launch taxes plus
-        ``steps`` device service quanta."""
-        self.now_s += (dispatches * self.virtual_dispatch_s
-                       + steps * self.virtual_step_s)
-
-    def _stamp(self, sess: _Session, vt: Optional[float] = None) -> None:
-        """Record the emission time of the token just appended to
-        ``sess.tokens``: virtual always, wall only when timed."""
-        sess.token_times_s.append(self.now_s if vt is None else vt)
-        if self.timed and sess.first_token_wall is None \
-                and len(sess.tokens) == 1:
-            sess.first_token_wall = time.perf_counter()
-
     def _finish(self, slot: int, sess: _Session) -> None:
         sess.finished_tick = self.tick_count
         self.slots[slot] = None
         self.finished.append(sess)
         if self.paged:
+            self.store.drop_shadows(sess.sid)   # stale pre-spills die
             self._release_slot(slot, sess)
-        self.events.append(("finish", sess.request.session_id, slot))
+        self.events.append(("finish", sess.sid, slot))
 
     # ------------------------------------------------------ paged plumbing
     def _pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
-    def _alloc_pages(self, n: int) -> Optional[List[int]]:
-        """``allocator.alloc`` with prefix-cache pressure relief: when
-        the free list is short, unreferenced cached prefix pages are
-        reclaimed LRU-first to cover the shortfall.  Cached pages are a
-        soft reserve — they never deny a MANDATORY allocation the bare
-        pool could have served.  (Optional horizon lookahead stays
-        free-list-only by design: speculative pages are worth less than
-        cached prefills, so a warm cache shrinks the lookahead grant
-        rather than the other way round.)"""
-        got = self.allocator.alloc(n)
-        if got is None and self.prefix is not None:
-            self.prefix.reclaim(n - self.allocator.n_free)
-            got = self.allocator.alloc(n)
-        return got
-
-    def _can_cover(self, need: int, exclude: Sequence[int] = ()) -> bool:
-        """Could ``need`` pages be obtained without preempting anyone —
-        free list first, cache reclaim cascade as the fallback
-        (``exclude``: matched pages an admission in flight is about to
-        retain, which must count as pinned)?  The cache walk only runs
-        when the free list alone is short."""
-        if self.allocator.n_free >= need:
-            return True
-        if self.prefix is None:
-            return False
-        return (self.allocator.n_free
-                + self.prefix.reclaimable(exclude)) >= need
-
-    def _match_prefix(self, seq: np.ndarray) -> List[int]:
-        """Pages backing the longest cached page-aligned prefix of the
-        session's prefill sequence ([] when sharing is off)."""
-        if self.prefix is None:
-            return []
-        return self.prefix.match(seq, self.page_size)
-
-    def _register_prefix(self, sess: _Session) -> None:
-        """Index the session's fully-prefilled pages so later admissions
-        can share them.  Only full pages enter the index, and only after
-        their prefill chunk completed — a page mid-prefill has no final
-        content to share."""
-        if self.prefix is None:
-            return
-        n_blocks = sess.prefilled // self.page_size
-        if n_blocks:
-            self.prefix.register(sess.prefill_seq, self.page_size,
-                                 sess.pages, n_blocks)
-
     def _release_slot(self, slot: int, sess: _Session) -> None:
         """Reclaim a session's pages and park the lane on the sentinel."""
-        self.allocator.release(sess.pages)
+        self.store.release(sess.pages)
         sess.pages = []
-        self._bt[slot, :] = GARBAGE_PAGE
-        self._bt_dirty = True
-        self._pos[slot] = 0
-        self._pos_dirty = True
+        self.store.clear_slot(slot)
 
     def _sync_device(self, pos_always: bool = True) -> None:
-        """Push the host-authoritative block table + positions into the
-        cache pytree (pure data: never changes compiled shapes).  The
-        block table only uploads when admission/eviction/allocation
-        dirtied it, keeping steady-state decode free of the extra H2D
-        transfer.
-
-        ``pos_always=True`` (the single-step path) re-syncs positions
-        every tick: the K=1 decode step advances every lane's device
-        pos, including masked ones.  The horizon-K path passes False —
-        its device steps clamp inactive lanes' positions, so device pos
-        stays correct end-to-end and only host-side resets (slot
-        release) need an upload."""
-        if self._bt_dirty:
-            self.cache["block_table"] = jnp.asarray(self._bt)
-            self._bt_dirty = False
-        if pos_always or self._pos_dirty:
-            self.cache["pos"] = jnp.asarray(self._pos)
-            self._pos_dirty = False
+        self.store.sync(self.cache, pos_always)
 
     def _preempt(self, slot: int, sess: _Session) -> None:
-        """Requeue a session to reclaim its pages.  It keeps its
-        generated tokens and is later re-prefilled from prompt +
-        generated prefix, so its stream is unchanged — preemption costs
-        recompute, never correctness."""
+        """Requeue a session to reclaim its pages; preemption costs
+        recompute (or, tiered, copies), never correctness — the host
+        tier parks full pages; the partial tail always re-prefills."""
+        if self.tiered and self.store.policy.spill_parked \
+                and sess.pos >= self.page_size:
+            self.store.park(sess.sid, sess.pos // self.page_size,
+                            sess.pages, self.cache)
+        elif self.paged:
+            self.store.drop_shadows(sess.sid)
         self._release_slot(slot, sess)
         self.slots[slot] = None
         sess.slot = -1
@@ -974,25 +303,15 @@ class SlotScheduler:
         sess.prefill_seq = None
         sess.resume = True
         self.preemptions += 1
-        self.events.append(("preempt", sess.request.session_id, slot))
+        self.events.append(("preempt", sess.sid, slot))
         self.waiting.appendleft(sess)   # it was admitted before the waiters
 
     def _alloc_or_preempt(self, n: int, needy: _Session) -> Optional[List[int]]:
-        """Allocate ``n`` pages, preempting one resident victim at a
-        time until it fits.  Returns None if it still can't fit with
-        only the needy session (and its non-victims) resident.
-
-        Victim policy: with ``priority_preemption`` (the default) a
-        session is eligible if it is STRICTLY lower priority than the
-        needy one, or of equal priority but strictly younger (later
-        ``admit_seq``) — a higher-priority session is never evicted for
-        a lower-priority page fault.  Among eligibles the
-        lowest-priority-youngest goes first.  With
-        ``priority_preemption=False`` priorities are ignored and the
-        rule degrades to the original youngest-first baseline — the
-        FIFO arm of the SLO A/B (benchmarks/table13)."""
+        """Allocate ``n`` pages, preempting one victim at a time until
+        it fits (None if it still can't).  Victims: lowest-priority-
+        youngest first (youngest-first when priority preemption is off)."""
         while True:
-            got = self._alloc_pages(n)
+            got = self.store.alloc(n)
             if got is not None:
                 return got
             if self.priority_preemption:
@@ -1019,9 +338,8 @@ class SlotScheduler:
         return min(self.prefill_chunk, remaining)
 
     def _prefill_next_chunk(self, slot: int, sess: _Session) -> bool:
-        """Run ONE prefill chunk for the session in ``slot`` (allocate
-        its pages first).  Returns False if pages are short even after
-        preempting younger sessions — the chunk retries next tick."""
+        """Run ONE prefill chunk (allocating its pages first); False
+        when pages stay short after preemption — retried next tick."""
         start = sess.prefilled
         C = self._next_chunk_len(sess)
         need = self._pages_for(start + C) - len(sess.pages)
@@ -1031,23 +349,21 @@ class SlotScheduler:
                 return False
             base = len(sess.pages)
             sess.pages.extend(got)
-            self._bt[slot, base:base + need] = got
-            self._bt_dirty = True
+            self.store.map_pages(slot, base, got)
         self._sync_device()
         chunk = jnp.asarray(sess.prefill_seq[start:start + C])[None, :]
-        logits, self.cache = self._prefill_chunk_jit(
+        logits, self.cache = self._progs.prefill_chunk(
             self.params, {"tokens": chunk}, self.cache, jnp.int32(slot),
             jnp.int32(start))
         sess.prefilled = start + C
         sess.pos = sess.prefilled
-        self._pos[slot] = sess.prefilled
+        self.store.set_pos(slot, sess.prefilled)
         self.prefill_tokens += C
         self._charge(1)          # one prefill program: launch + a quantum
         self._register_prefix(sess)
         if sess.decoding:
-            # prefill complete: sample the first token — unless resuming
-            # after preemption, where the last generated token is still
-            # waiting to be fed through the next decode step
+            # prefill complete: sample the first token — unless resuming,
+            # where the last generated token re-feeds through decode
             if sess.resume and sess.tokens:
                 sess.resume = False
             else:
@@ -1057,20 +373,21 @@ class SlotScheduler:
                 tok = int(self._sample(logits[:, -1], salt)[0])
                 sess.tokens.append(tok)
                 self._stamp(sess)
-                self.events.append(
-                    ("token", sess.request.session_id, slot, tok))
+                self.events.append(("token", sess.sid, slot, tok))
                 if sess.done or self._hit_eos(tok):
                     self._finish(slot, sess)
         return True
 
+    def _register_prefix(self, sess: _Session) -> None:
+        """Index the session's fully-prefilled pages for sharing."""
+        self.store.register(sess.prefill_seq, sess.pages,
+                            sess.prefilled // self.page_size)
+
     @staticmethod
     def _prefill_seq_for(sess: _Session) -> np.ndarray:
-        """The token sequence admission must make resident: the prompt,
-        plus the generated prefix when resuming after preemption (all
-        but the last generated token — that one is re-fed through the
-        next decode step).  Memoised on the session: a gate-blocked
-        queue head is re-examined every tick, and its sequence is
-        frozen while it waits (tokens only grow while resident)."""
+        """The sequence admission must make resident: prompt, plus on
+        resume all but the last generated token (that one re-feeds
+        through decode).  Memoised while the head waits at the gate."""
         if sess.seq_cache is None:
             sess.seq_cache = (
                 np.concatenate([sess.request.prompt,
@@ -1081,19 +398,12 @@ class SlotScheduler:
 
     def _admit_paged(self, slot: int, sess: _Session, seq: np.ndarray,
                      shared: List[int]) -> None:
-        """Install a session in ``slot``; with prefix sharing, point the
-        block table at the ``shared`` pages (retaining them) so only the
-        tail past the match is ever prefilled.
-
-        When the match covers the WHOLE sequence there is nothing left
-        to prefill.  A resumed session needs no logits either (its next
-        input token is already known) and starts decoding at once; a
-        fresh session still owes its first sample, so it *replays* the
-        last prompt token through the decode path — and because that
-        step's KV write lands at position ``len(seq) - 1``, inside the
-        last shared page, that page is CoW-faulted into a private copy
-        (host-side page copy, before any dispatch) so shared pages are
-        never written."""
+        """Install a session in ``slot``, aliasing the ``shared`` prefix
+        pages so only the tail past the match prefills.  A whole-
+        sequence match leaves nothing to prefill: resumes decode at
+        once; a fresh prompt replays its last token through decode,
+        CoW-faulting the last shared page first (shared pages are never
+        written)."""
         sess.prefill_seq = seq
         sess.seq_cache = None        # tokens grow while resident
         sess.prefilled = 0
@@ -1103,10 +413,8 @@ class SlotScheduler:
         sess.admit_seq = self._admission_order
         self._admission_order += 1
         self.slots[slot] = sess
-        self._bt[slot, :] = GARBAGE_PAGE
-        self._bt_dirty = True
-        self._pos[slot] = 0
-        self.events.append(("admit", sess.request.session_id, slot))
+        self.store.clear_slot(slot)
+        self.events.append(("admit", sess.sid, slot))
         if not shared:
             return
         k = len(shared)
@@ -1114,96 +422,145 @@ class SlotScheduler:
         self.prefix_hits += 1
         if matched < len(seq):
             # tail remains: share the matched run, prefill only the tail
-            # (which writes fresh private pages — no CoW needed)
-            self.allocator.retain(shared)
+            # (fresh private pages — no CoW needed)
+            self.store.retain(shared)
             sess.pages = list(shared)
-            self._bt[slot, :k] = shared
+            self.store.map_pages(slot, 0, shared)
             sess.prefilled = matched
             sess.pos = matched
-            self._pos[slot] = matched
+            self.store.set_pos(slot, matched)
             self.prefix_tokens_saved += matched
         elif sess.resume and sess.tokens:
             # fully cached resume: nothing to prefill, nothing to sample
-            self.allocator.retain(shared)
+            self.store.retain(shared)
             sess.pages = list(shared)
-            self._bt[slot, :k] = shared
+            self.store.map_pages(slot, 0, shared)
             sess.prefilled = len(seq)
             sess.pos = len(seq)
-            self._pos[slot] = len(seq)
+            self.store.set_pos(slot, len(seq))
             sess.resume = False
             self.prefix_tokens_saved += len(seq)
         else:
-            # fully cached fresh prompt: CoW-fault the last shared page
-            # (the replayed token's write target), then replay the last
-            # prompt token through decode for the first sample.  Retain
-            # BEFORE allocating: the copy's allocation may reclaim
-            # cached pages, and the retained ones must be pinned.  (The
-            # reclaim may legally steal the unretained source page
-            # itself — the copy then degrades to an in-place no-op and
-            # the page simply changes owner, content already correct.)
-            self.allocator.retain(shared[:-1])
-            got = self._alloc_pages(1)
+            # fully cached fresh prompt: CoW-fault the last shared page.
+            # Retain BEFORE allocating — the allocation may reclaim
+            # cached pages (legally even the unretained source page
+            # itself, degrading the copy to an in-place no-op).
+            self.store.retain(shared[:-1])
+            got = self.store.alloc(1)
             assert got is not None, "admission gate covered the CoW page"
             sess.pages = list(shared[:-1]) + got
-            self._bt[slot, :k - 1] = shared[:-1]
-            self._bt[slot, k - 1] = got[0]
-            self.cache = self._copy_page_jit(
+            self.store.map_pages(slot, 0, sess.pages)
+            self.cache = self._progs.copy_page(
                 self.cache, jnp.int32(shared[-1]), jnp.int32(got[0]))
             self.cow_copies += 1
             self._charge(0)      # the CoW copy is one dispatched program
             sess.prefilled = len(seq)
             sess.pos = len(seq) - 1
-            self._pos[slot] = len(seq) - 1
+            self.store.set_pos(slot, len(seq) - 1)
             self.prefix_tokens_saved += len(seq)
-        self._pos_dirty = True
-        self._bt_dirty = True
+
+    def _try_admit_tiered(self, slot: int) -> bool:
+        """Tier-aware admission of the queue head: restore parked (or
+        host-prefix-indexed) KV pages into fresh device pages instead
+        of re-prefilling.  The device prefix cache is consulted first —
+        blocks it covers alias and their parked blobs drop.  False when
+        the host tier has nothing or the page gate can't cover the
+        restore; the re-prefill admission then runs and stays the
+        liveness anchor.  Restored bytes are the originally written
+        bytes: the resumed stream is token-identical by construction."""
+        store, head = self.store, self.waiting[0]
+        seq = self._prefill_seq_for(head)
+        shared = store.match(seq)
+        k = len(shared)
+        n_parked = store.parked_blocks(head.sid)
+        if n_parked > k:
+            paths = None
+            n_restore = n_parked - k
+            covered = n_parked * self.page_size
+        else:
+            # host prefix index: extend the device match, capped one
+            # block short of the sequence so a fresh session keeps >= 1
+            # tail token to prefill (first sample needs its logits)
+            paths = store.host_match(seq, k,
+                                     (len(seq) - 1) // self.page_size)
+            if not paths:
+                return False
+            n_restore = len(paths)
+            covered = (k + n_restore) * self.page_size
+        if covered < len(seq):
+            tail = len(seq) - covered
+            first = (tail if self.prefill_chunk is None
+                     else min(self.prefill_chunk, tail))
+            need = self._pages_for(covered + first) - k
+        else:
+            need = n_restore + 1    # +1: first decode write headroom
+        if not store.can_cover(need, shared):
+            return False
+        self.waiting.popleft()
+        self._admit_paged(slot, head, seq, [])
+        if shared:
+            self.prefix_hits += 1
+        store.retain(shared)        # pin BEFORE the restore allocation
+        got = store.alloc(n_restore)
+        assert got is not None, "tier gate covered the restore pages"
+        head.pages = list(shared) + got
+        self.store.map_pages(slot, 0, head.pages)
+        if paths is None:
+            self.cache = store.take_parked(head.sid, k, got, self.cache)
+        else:
+            self.cache = store.restore_host_prefix(paths, got, self.cache)
+        head.prefilled = covered
+        head.pos = covered
+        store.set_pos(slot, covered)
+        self.prefix_tokens_saved += covered
+        self._register_prefix(head)   # restored blocks become shareable
+        if covered == len(seq):
+            head.resume = False       # fully covered: decode directly
+        return True
 
     def _backfill_paged(self) -> None:
-        """FIFO admission gated on free pages: the queue head is
-        admitted only when its first chunk's pages are available
-        (head-of-line blocking is deliberate — skipping ahead would
-        starve long prompts).  With prefix sharing the gate charges only
-        the UNMATCHED pages (shared pages are already resident) and may
-        count reclaimable cached pages as free — excluding the matched
-        run itself, which the admission is about to pin."""
+        """FIFO admission gated on free pages (head-of-line blocking is
+        deliberate — skip-ahead would starve long prompts).  The host
+        tier gets first refusal; the ordinary gate charges only the
+        UNMATCHED pages, counting reclaimable cached pages as free —
+        excluding the match itself, which is about to be pinned."""
         for slot in range(self.n_slots):
             while self.slots[slot] is None and self.waiting:
-                head = self.waiting[0]
-                seq = self._prefill_seq_for(head)
-                shared = self._match_prefix(seq)
-                while True:
-                    matched = len(shared) * self.page_size
-                    if shared and matched >= len(seq):
-                        # fully cached: a fresh admission needs 1 page
-                        # (the CoW copy) and pins only shared[:-1] — the
-                        # last matched page is a legal reclaim target
-                        # (it may even BE the copy, already holding the
-                        # right content); a resume pins the whole match
-                        # and needs 1 so its first decode write can't
-                        # instantly wedge
-                        resume = head.resume and head.tokens
-                        pinned = shared if resume else shared[:-1]
-                        need = 1
-                    else:
-                        pinned = shared
-                        tail = len(seq) - matched
-                        first = (tail if self.prefill_chunk is None
-                                 else min(self.prefill_chunk, tail))
-                        need = (self._pages_for(matched + first)
-                                - len(shared))
-                    if self._can_cover(need, pinned):
-                        break
-                    if not shared:
-                        return      # gate: wait for reclaim
-                    # pool can't cover the admission with the full match
-                    # pinned: shrink the match — its dropped tail pages
-                    # become reclaimable fuel for this very admission
-                    # (degrades to the unshared gate, which keeps the
-                    # no-cache liveness property)
-                    shared = shared[:-1]
-                self._admit_paged(slot, self.waiting.popleft(), seq,
-                                  shared)
-                sess = self.slots[slot]
+                if self.tiered and self._try_admit_tiered(slot):
+                    sess = self.slots[slot]
+                else:
+                    head = self.waiting[0]
+                    seq = self._prefill_seq_for(head)
+                    shared = self.store.match(seq)
+                    while True:
+                        matched = len(shared) * self.page_size
+                        if shared and matched >= len(seq):
+                            # fully cached: fresh needs 1 page (the CoW
+                            # copy) pinning shared[:-1]; resume pins the
+                            # whole match, +1 decode-write headroom
+                            resume = head.resume and head.tokens
+                            pinned = shared if resume else shared[:-1]
+                            need = 1
+                        else:
+                            pinned = shared
+                            tail = len(seq) - matched
+                            first = (tail if self.prefill_chunk is None
+                                     else min(self.prefill_chunk, tail))
+                            need = (self._pages_for(matched + first)
+                                    - len(shared))
+                        if self.store.can_cover(need, pinned):
+                            break
+                        if not shared:
+                            return      # gate: wait for reclaim
+                        # shrink the match: its dropped tail pages
+                        # become reclaimable fuel for this admission
+                        # (degrades to the unshared gate = liveness)
+                        shared = shared[:-1]
+                    self._admit_paged(slot, self.waiting.popleft(), seq,
+                                      shared)
+                    # re-prefill admission supersedes any parked copy
+                    self.store.drop_parked(head.sid)
+                    sess = self.slots[slot]
                 if not sess.decoding:
                     ok = self._prefill_next_chunk(slot, sess)
                     assert ok, "gated admission must have its first chunk"
@@ -1221,7 +578,7 @@ class SlotScheduler:
             while self.slots[slot] is None and self.waiting:
                 sess = self.waiting.popleft()
                 prompt = jnp.asarray(sess.request.prompt)[None, :]
-                logits, self.cache = self._prefill_slot(
+                logits, self.cache = self._progs.prefill_slot(
                     self.params, {"tokens": prompt}, self.cache,
                     jnp.int32(slot))
                 sess.slot = slot
@@ -1229,16 +586,15 @@ class SlotScheduler:
                 self.slots[slot] = sess
                 self.prefill_tokens += int(prompt.shape[1])
                 self._charge(1)
-                sid = sess.request.session_id
-                self.events.append(("admit", sid, slot))
-                # even salts for admissions (one per admission, counted
-                # monotonically), odd for decode steps — never collide
+                self.events.append(("admit", sess.sid, slot))
+                # even salts for admissions (counted monotonically), odd
+                # for decode steps — never collide
                 salt = 2 * self._admit_count
                 self._admit_count += 1
                 tok = int(self._sample(logits[:, -1], salt)[0])
                 sess.tokens.append(tok)
                 self._stamp(sess)
-                self.events.append(("token", sid, slot, tok))
+                self.events.append(("token", sess.sid, slot, tok))
                 if sess.done or self._hit_eos(tok):
                     # 1-token / instant-EOS session: retire immediately,
                     self._finish(slot, sess)   # loop backfills the slot
@@ -1249,16 +605,15 @@ class SlotScheduler:
                    for i, s in enumerate(self.slots)), "slot bookkeeping"
 
     def _run_step(self, tokens: jnp.ndarray):
-        if self._step_jit is not None:
-            return self._step_jit(self.params, self.cache, tokens)
+        if self._progs.step is not None:
+            return self._progs.step(self.params, self.cache, tokens)
         state = self._executor({"tokens": tokens, "cache": self.cache})
         return state["logits"], state["cache"]
 
     def _ensure_decode_page(self, slot: int, sess: _Session) -> bool:
-        """Guarantee the page under ``sess.pos`` (this tick's KV write)
-        exists, preempting younger sessions if the pool is dry.  If even
-        that fails, the needy session itself is preempted (an older
-        session holds the pool — it will finish and reclaim)."""
+        """Guarantee the page under ``sess.pos`` exists, preempting
+        younger sessions if the pool is dry; failing that, the needy
+        session itself is preempted (an older one holds the pool)."""
         blk = sess.pos // self.page_size
         if blk < len(sess.pages):
             return True
@@ -1267,34 +622,23 @@ class SlotScheduler:
         if got is None:
             self._preempt(slot, sess)
             return False
-        self._bt[slot, blk] = got[0]
-        self._bt_dirty = True
+        self.store.map_pages(slot, blk, got)
         sess.pages.extend(got)
         return True
 
     def _reserve_horizon(self, slot: int, sess: _Session, want: int) -> int:
-        """Pre-reserve lookahead pages so the session can take ``want``
-        decode steps inside one fused macro-tick (its last KV write
-        lands at ``pos + want - 1``).  Lookahead beyond the next step is
-        *optional*: it is taken from the free list only, and when the
-        pool is short the grant shrinks to what the session's held pages
-        cover — never evicting anyone for speculative pages.  Only the
-        MANDATORY next page (the K=1 requirement) preempts
-        strictly-younger sessions, exactly like ``_ensure_decode_page``.
-        Returns the steps granted; 0 means the session itself was
-        preempted (the same failure path as K=1)."""
+        """Pre-reserve pages for ``want`` decode steps of one fused
+        macro-tick.  Lookahead past the next step is *optional*
+        (free-list-only); only the MANDATORY next page preempts, like
+        ``_ensure_decode_page``.  Returns steps granted; 0 = the
+        session itself was preempted."""
         def take(n_pages: int) -> bool:
-            """Free-list-only allocation of ``n_pages`` pages: optional
-            lookahead never evicts a session AND never drains the
-            prefix cache — speculative pages are not allocation
-            pressure (the mandatory-page path below does apply it)."""
-            got = self.allocator.alloc(n_pages)
+            got = self.store.alloc_free(n_pages)
             if got is None:
                 return False
             base = len(sess.pages)
             sess.pages.extend(got)
-            self._bt[slot, base:base + n_pages] = got
-            self._bt_dirty = True
+            self.store.map_pages(slot, base, got)
             return True
 
         def top_up(n_steps: int) -> bool:
@@ -1303,13 +647,12 @@ class SlotScheduler:
 
         if top_up(want):
             return want
-        # pool short of the full horizon: take the partial lookahead the
-        # free list can spare — but leave one page per OTHER live
-        # decoding slot, so optional lookahead never forces a later
-        # slot's mandatory-page allocation into preempting someone
+        # partial lookahead: take what the free list can spare, leaving
+        # one page per OTHER live decoding slot so optional lookahead
+        # never forces a later mandatory allocation into preempting
         others = sum(1 for i, s in enumerate(self.slots)
                      if s is not None and s is not sess and s.decoding)
-        spare = self.allocator.n_free - others
+        spare = self.store.free_pages - others
         need = self._pages_for(sess.pos + want) - len(sess.pages)
         if 0 < spare < need:
             take(spare)
@@ -1322,20 +665,15 @@ class SlotScheduler:
         if got is None:
             self._preempt(slot, sess)
             return 0
-        blk = len(sess.pages)
-        self._bt[slot, blk] = got[0]
-        self._bt_dirty = True
+        self.store.map_pages(slot, len(sess.pages), got)
         sess.pages.extend(got)
         if top_up(want):                 # eviction may have freed plenty
             return want
         return min(want, len(sess.pages) * self.page_size - sess.pos)
 
     def tick(self) -> List[Event]:
-        """One scheduler iteration: continue chunked prefills, backfill,
-        one batched decode dispatch for every decoding slot (a single
-        step, or a horizon-K fused macro-tick advancing every live slot
-        up to ``steps_per_tick`` tokens in ONE program), evict completed
-        sessions."""
+        """One iteration: continue chunked prefills, backfill, tier idle
+        work, one batched decode dispatch, evict completed sessions."""
         n_before = len(self.events)
         self._release_arrivals()
         if self.paged:
@@ -1343,6 +681,10 @@ class SlotScheduler:
                 if sess is not None and not sess.decoding:
                     self._prefill_next_chunk(slot, sess)
         self._backfill()
+        if self.tiered and not self.waiting and not self._arrivals:
+            # no admission pressure: let the policy pre-migrate
+            # (LookAheadSpill shadow-copies the predicted victim)
+            self.store.policy.idle_tick(self)
         if self.steps_per_tick == 1:
             self._decode_tick_single()
         else:
@@ -1350,57 +692,8 @@ class SlotScheduler:
         self.tick_count += 1
         return self.events[n_before:]
 
-    def _tick_horizon(self) -> int:
-        """Horizon K for this macro-tick.  Fixed-K schedulers always use
-        the configured ceiling; the adaptive policy ends macro-ticks at
-        the next *scheduling event* instead of a fixed stride:
-
-          * **demand against full slots** — someone is waiting (or due
-            to arrive) and every slot is busy: cap at the shortest
-            remaining budget among residents, so the tick ends exactly
-            when the first slot frees and the backfill happens
-            immediately (a longer tick would burn that slot on masked
-            no-op lanes while the waiter keeps paying TTFT);
-          * **arrival against a free slot** — never run a macro-tick so
-            long that an arrival which could be admitted on the spot
-            would sit out most of it (with full slots the arrival can
-            only join the queue, so ending the tick for it buys nothing
-            and costs a launch tax);
-          * **otherwise grow** — nobody waiting and no arrival due: take
-            the largest rung no bigger than the longest remaining
-            budget (the launch tax amortises across the whole horizon).
-
-        Only ladder rungs are ever dispatched, so the compiled-program
-        count stays bounded by the ladder length."""
-        if not self.adaptive_k:
-            return self.steps_per_tick
-        k = self.steps_per_tick
-        remaining = [s.request.max_new_tokens - len(s.tokens)
-                     for s in self.slots
-                     if s is not None and (not self.paged or s.decoding)]
-        slots_full = all(s is not None for s in self.slots)
-        if remaining:
-            demand = bool(self.waiting) or bool(self._arrivals)
-            k = min(k, min(remaining) if demand and slots_full
-                    else max(remaining))
-        if self._arrivals and not slots_full:
-            # steps the clock can take before the next arrival is due;
-            # +1 so an arrival inside the very next quantum still lets
-            # one step run
-            until = self._arrivals[0][0] - self.now_s
-            k = min(k, 1 + int(max(until, 0.0) / self.virtual_step_s))
-        k = max(k, self.min_steps_per_tick)
-        for rung in reversed(self.k_ladder):
-            if rung <= k:
-                return rung
-        return self.min_steps_per_tick
-
     def _decode_tick_single(self) -> None:
-        """K=1 decode: one dispatch, one host round-trip per token.
-        The only hard sync is the token transfer itself (the data
-        dependency of host-side sampling feedback); per-step walls are
-        recorded only when ``timed`` — there is no unconditional
-        ``block_until_ready`` barrier anymore."""
+        """K=1 decode: one dispatch + one host round-trip per token."""
         if self.paged:
             for slot, sess in list(enumerate(self.slots)):
                 if sess is not None and sess.decoding and \
@@ -1415,9 +708,8 @@ class SlotScheduler:
         for slot, sess in active:
             toks[slot, 0] = sess.next_input_token
         if self.paged:
-            # this step reads blocks 0..ceil((pos+1)/page)-1 per live
-            # lane (pos+1 counts the row the step writes) — the KV
-            # traffic of the fused in-place kernel
+            # blocks this step reads per live lane (pos+1 counts the
+            # written row) — the KV traffic of the fused kernel
             self.step_kv_blocks.append(sum(
                 -(-(sess.pos + 1) // self.page_size)
                 for _, sess in active))
@@ -1435,32 +727,27 @@ class SlotScheduler:
         for slot, sess in active:
             sess.pos += 1
             if self.paged:
-                self._pos[slot] = sess.pos
+                self.store.mirror_pos(slot, sess.pos)
             tok = int(nxt[slot])
             sess.tokens.append(tok)
             self._stamp(sess)
             if self.timed:
                 sess.step_times_s.append(dt)
-            self.events.append(
-                ("token", sess.request.session_id, slot, tok))
+            self.events.append(("token", sess.sid, slot, tok))
             if sess.done or self._hit_eos(tok):
                 self._finish(slot, sess)
 
     def _decode_tick_horizon(self, K: int) -> None:
-        """Horizon-K fused decode: ONE compiled program advances every
-        live slot up to ``K`` tokens (lax.scan over ``decode_step`` with
-        on-device sampling), the (n_slots, K) token matrix comes back in
-        a single transfer, and the host reconciles after the fact —
-        trimming lanes that hit EOS or their budget mid-horizon (their
-        device steps were masked no-ops) and evicting finished sessions.
-        Pages covering each slot's full granted horizon are reserved
-        BEFORE dispatch, so the device never outruns its block table.
-        ``K`` is the configured ceiling for fixed-K schedulers or the
-        ladder rung ``_tick_horizon`` chose for this tick."""
+        """Horizon-K fused decode: ONE program advances every live slot
+        up to ``K`` tokens (lax.scan, on-device sampling), the
+        (n_slots, K) token matrix returns in one transfer, and the host
+        reconciles afterwards — trimming lanes that hit EOS or budget
+        mid-horizon (masked no-ops on device).  Pages covering each
+        granted horizon are reserved BEFORE dispatch."""
         plan: Dict[int, int] = {}
         for slot, sess in list(enumerate(self.slots)):
-            # skip free lanes, mid-chunked-prefill lanes, and lanes whose
-            # session an earlier reservation's preemption already evicted
+            # skip free lanes, mid-prefill lanes, and lanes an earlier
+            # reservation's preemption already evicted
             if sess is None or (self.paged and not sess.decoding) or \
                     self.slots[slot] is not sess:
                 continue
@@ -1481,7 +768,7 @@ class SlotScheduler:
             steps_left[slot] = plan[slot]
         key = jax.random.fold_in(self.key, 2 * self.tick_count + 1)
         t0 = time.perf_counter()
-        tok_mat, self.cache = self._steps_jit(
+        tok_mat, self.cache = self._progs.steps(
             self.params, self.cache, jnp.asarray(toks), key,
             jnp.asarray(steps_left), horizon=K,
             temperature=self.temperature, top_k=self.top_k,
@@ -1508,26 +795,21 @@ class SlotScheduler:
                     continue
                 sess.pos += 1
                 if self.paged:
-                    self._pos[slot] = sess.pos
+                    self.store.mirror_pos(slot, sess.pos)
                     # blocks this device step walked for the lane: its
                     # live length after the write (same accounting as K=1)
                     kv_blocks[j] += -(-sess.pos // self.page_size)
                 emitted[j] += 1
                 tok = int(tok_mat[slot, j])
                 sess.tokens.append(tok)
-                # device step j's token leaves at the j+1'th quantum of
-                # the macro-tick — a session's stamp stream sees its own
-                # position inside the fused horizon, not just tick ends
+                # step j's token leaves at the j+1'th quantum — stamps
+                # see positions inside the fused horizon, not tick ends
                 self._stamp(sess, vt0 + (j + 1) * self.virtual_step_s)
                 if self.timed:
                     sess.step_times_s.append(per_tok_dt)
-                self.events.append(
-                    ("token", sess.request.session_id, slot, tok))
+                self.events.append(("token", sess.sid, slot, tok))
                 if sess.done or self._hit_eos(tok):
-                    # budget exhausted or EOS sampled mid-horizon: the
-                    # lane's remaining device steps were no-ops (the
-                    # device cleared its alive bit on the same token);
-                    # trim here and reclaim the slot + its pages
+                    # remaining device steps were masked no-ops
                     done.add(slot)
                     self._finish(slot, sess)
         if self.paged:
@@ -1537,13 +819,9 @@ class SlotScheduler:
                 b for b, n in zip(kv_blocks, emitted) if n)
 
     def run(self) -> ContinuousResult:
-        """Drive until the waiting queue and all slots drain.
-
-        May be called repeatedly (submit → run → submit → run) on one
-        scheduler — compiled programs are reused across waves.  See
-        ``ContinuousResult`` for which fields are cumulative across
-        calls (``sessions``, ``events``, ``decode_steps``) and which
-        cover this call only (everything else)."""
+        """Drive until the queue and slots drain.  Callable repeatedly
+        (submit → run → submit → run) with programs reused; see
+        ``ContinuousResult`` for cumulative vs per-call fields."""
         fin0 = len(self.finished)
         tick0 = self.tick_count
         pre0 = self.preemptions
@@ -1554,15 +832,16 @@ class SlotScheduler:
         blk0 = len(self.step_kv_blocks) if self.paged else 0
         pf0, ph0 = self.prefill_tokens, self.prefix_hits
         ps0, cw0 = self.prefix_tokens_saved, self.cow_copies
+        st = self.store if self.paged else PageStore  # class-level zeros
+        sp0, pr0 = st.pages_spilled, st.pages_restored
+        tr0, hp0 = st.tier_restores, st.host_prefix_hits
         limit = self.max_ticks
         if limit is None:
             def ticks_for(s: _Session) -> int:
-                # a macro-tick advances up to steps_per_tick tokens, but
-                # the conservative per-token budget stays valid for K>1
+                # conservative per-token budget (valid for K>1 too)
                 t = s.request.max_new_tokens
                 if self.paged and self.prefill_chunk:
-                    # chunked admission spends one tick per chunk, and a
-                    # preempted session re-prefills prompt + generated
+                    # one tick per chunk; preemption re-prefills all
                     seq = len(s.request.prompt) + s.request.max_new_tokens
                     t += -(-seq // self.prefill_chunk)
                 return t
@@ -1572,8 +851,7 @@ class SlotScheduler:
             budget = sum(ticks_for(s) for s in backlog)
             budget += sum(ticks_for(s)
                           for s in self.slots if s is not None)
-            # + one release tick per trace arrival (an idle tick may do
-            # nothing but fast-forward the clock and release a request)
+            # + one release tick per trace arrival
             limit = 4 * budget + len(self._pending) \
                 + len(self._arrivals) + 16
         t0 = time.perf_counter()
@@ -1585,33 +863,15 @@ class SlotScheduler:
                     f"scheduler made no progress within {limit} ticks")
         wall = time.perf_counter() - t0
         n_tokens = sum(len(s.tokens) for s in self.finished[fin0:])
-        sessions = {
-            s.request.session_id: SessionResult(
-                session_id=s.request.session_id,
-                tokens=np.asarray(s.tokens, np.int32),
-                slot=s.slot,
-                admitted_tick=s.admitted_tick,
-                finished_tick=s.finished_tick,
-                step_times_s=s.step_times_s,
-                klass=s.request.klass,
-                priority=s.request.priority,
-                arrival_s=s.arrival_s,
-                token_times_s=np.asarray(s.token_times_s),
-                ttft_s=(s.token_times_s[0] - s.arrival_s
-                        if s.token_times_s else None),
-                ttft_wall_s=(s.first_token_wall - s.release_wall
-                             if s.first_token_wall is not None
-                             and s.release_wall is not None else None))
-            for s in self.finished}
+        sessions = {s.sid: s.to_result() for s in self.finished}
         return ContinuousResult(
             sessions=sessions, ticks=self.tick_count - tick0,
             decode_steps=self.decode_steps, wall_s=wall,
             tokens_per_s=n_tokens / wall if wall > 0 else float("nan"),
             step_cache_size=self.step_cache_size(),
             launches_per_step=self.launches_per_step,
-            # snapshot: a returned result must not mutate when the
-            # scheduler keeps running (events stays cumulative — the
-            # full log up to the end of THIS call)
+            # snapshot: a returned result must not mutate if the
+            # scheduler keeps running (events stays cumulative)
             events=list(self.events),
             preemptions=self.preemptions - pre0,
             step_kv_blocks=(self.step_kv_blocks[blk0:] if self.paged
@@ -1628,4 +888,12 @@ class SlotScheduler:
             now_s=self.now_s,
             arrivals=self.arrivals_released - arr0,
             adaptive_k=self.adaptive_k,
-            horizon_hist=dict(self.horizon_hist - hist0))
+            horizon_hist=dict(self.horizon_hist - hist0),
+            kv_tier=(self.store.kv_tier if self.paged else "none"),
+            tier_policy=(self.store.policy.name
+                         if self.tiered else None),
+            pages_spilled=st.pages_spilled - sp0,
+            pages_restored=st.pages_restored - pr0,
+            tier_restores=st.tier_restores - tr0,
+            host_prefix_hits=st.host_prefix_hits - hp0,
+            host_pages_used=(self.store.host_used if self.paged else 0))

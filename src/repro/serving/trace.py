@@ -166,24 +166,41 @@ def generate_trace(cfg: TraceConfig) -> Trace:
 
 
 def validate_trace(trace: Trace) -> None:
-    """Schema validity: monotone arrivals, positive lengths, known
-    class labels, in-vocab tokens.  Raises AssertionError on violation
-    (the golden-trace test runs this on the checked-in file too)."""
+    """Schema validity: unique session ids, positive monotone arrivals,
+    positive lengths, known class labels, in-vocab tokens.  Raises
+    ``ValueError`` with the offending session named (explicit raises,
+    not asserts — a hand-edited trace file must fail loudly even under
+    ``python -O``; the golden-trace test runs this on the checked-in
+    file too)."""
+    def bad(msg: str) -> None:
+        raise ValueError(f"invalid trace: {msg}")
+
     classes = trace.classes
+    seen: set = set()
     last = 0.0
     for req in trace.requests:
-        assert req.arrival_s >= last and req.arrival_s > 0, \
-            f"{req.session_id}: arrivals must be positive and monotone"
+        if req.session_id in seen:
+            bad(f"duplicate session id {req.session_id!r} — replay "
+                f"results key sessions by id, duplicates would collide")
+        seen.add(req.session_id)
+        if req.arrival_s <= 0:
+            bad(f"{req.session_id}: arrival_s={req.arrival_s!r} must be "
+                f"> 0 (non-positive arrivals bypass trace release)")
+        if req.arrival_s < last:
+            bad(f"{req.session_id}: arrivals must be monotone "
+                f"({req.arrival_s!r} after {last!r})")
         last = req.arrival_s
-        assert len(req.prompt) >= 1, f"{req.session_id}: empty prompt"
-        assert req.max_new_tokens >= 1, f"{req.session_id}: no budget"
-        assert req.klass in classes, \
-            f"{req.session_id}: unknown class {req.klass!r}"
-        assert req.priority == classes[req.klass].priority, \
-            f"{req.session_id}: priority disagrees with its class"
+        if len(req.prompt) < 1:
+            bad(f"{req.session_id}: empty prompt")
+        if req.max_new_tokens < 1:
+            bad(f"{req.session_id}: no token budget")
+        if req.klass not in classes:
+            bad(f"{req.session_id}: unknown class {req.klass!r}")
+        if req.priority != classes[req.klass].priority:
+            bad(f"{req.session_id}: priority disagrees with its class")
         toks = np.asarray(req.prompt)
-        assert toks.min() >= 0 and toks.max() < trace.config.vocab_size, \
-            f"{req.session_id}: token out of vocab"
+        if toks.min() < 0 or toks.max() >= trace.config.vocab_size:
+            bad(f"{req.session_id}: token out of vocab")
 
 
 # --------------------------------------------------------------- text I/O

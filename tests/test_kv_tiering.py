@@ -1,0 +1,342 @@
+"""Host-DRAM KV page tier: save/restore fidelity, host-pool accounting,
+park/restore token identity on both decode routes, the eviction→resume
+interplay between the prefix cache and the tier, and policy arms.
+
+The tier's one correctness contract: restored bytes are the bytes
+prefill/decode originally wrote, so a preempted-and-parked session's
+greedy stream is token-identical to the re-prefill (single-tier)
+baseline — placement policy changes copies, never streams.  Everything
+else is accounting: the device free list and the host pool must balance
+after every wave, whatever interleaving of parking, prefix eviction,
+shadow spills and restores the schedule produced.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import SessionRequest, SlotScheduler
+from repro.serving.memory import (HostPagePool, PageStore, TieredPageStore,
+                                  get_policy, restore_kv_blobs,
+                                  save_kv_blobs)
+from repro.serving.memory.tiers import _pad_pow2
+
+KEY = jax.random.PRNGKey(11)
+CFG = get_config("qwen2.5-3b").reduced().replace(
+    vocab_size=64, d_model=64, d_ff=128, n_layers=2,
+    n_heads=4, n_kv_heads=2, head_dim=16, dtype="float32")
+
+_STATE: dict = {}
+
+
+def _model(backend="sdpa"):
+    if backend not in _STATE:
+        m = Model(CFG) if backend == "sdpa" else \
+            Model(CFG, decode_backend=backend)
+        _STATE[backend] = (m, m.init(KEY))
+    return _STATE[backend]
+
+
+def _serve(model, params, reqs, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 24)
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("timed", False)
+    kw.setdefault("shared_programs", True)
+    sched = SlotScheduler(model, params, **kw)
+    for r in reqs:
+        sched.submit(r)
+    return sched, sched.run()
+
+
+def _churn_requests(n=5):
+    """Deterministic wave sized to thrash a small pool: multi-page
+    prompts, budgets long enough that residents preempt each other."""
+    rng = np.random.RandomState(3)
+    return [SessionRequest(
+        f"s{i}",
+        rng.randint(0, CFG.vocab_size, size=8 + 3 * (i % 3)).astype(
+            np.int32),
+        6 + 2 * (i % 2)) for i in range(n)]
+
+
+# ------------------------------------------------------- page movers
+class TestSaveRestore:
+    def test_pad_pow2(self):
+        assert [_pad_pow2(n) for n in (1, 2, 3, 4, 5, 8, 9)] \
+            == [1, 2, 4, 4, 8, 8, 16]
+
+    def test_roundtrip_is_bit_exact(self):
+        """save → clobber → restore returns the original page bytes,
+        and the garbage-page padding never corrupts a real page."""
+        model, params = _model()
+        cache = model.init_cache(2, 16, paged=True, page_size=4,
+                                 n_pages=8)
+        rng = np.random.RandomState(0)
+        k0 = rng.randn(*cache["k"].shape).astype(np.float32)
+        v0 = rng.randn(*cache["v"].shape).astype(np.float32)
+        cache = dict(cache, k=jnp.asarray(k0), v=jnp.asarray(v0))
+        save = jax.jit(model.save_kv_pages)
+        restore = jax.jit(model.restore_kv_pages)
+        pages = [3, 5, 6]                      # pads to 4 with garbage
+        blobs = save_kv_blobs(save, cache, pages)
+        clobbered = dict(cache, k=jnp.zeros_like(cache["k"]),
+                         v=jnp.zeros_like(cache["v"]))
+        out = restore_kv_blobs(restore, clobbered, pages, blobs)
+        for p in pages:
+            np.testing.assert_array_equal(np.asarray(out["k"][:, p]),
+                                          k0[:, p])
+            np.testing.assert_array_equal(np.asarray(out["v"][:, p]),
+                                          v0[:, p])
+        # non-restored real pages stay clobbered (zero)
+        assert not np.any(np.asarray(out["k"][:, 2]))
+
+    def test_program_count_is_pow2_bounded(self):
+        """Distinct compiled save shapes grow with log2 of the run
+        length, not linearly — the padding contract."""
+        seen = []
+
+        def fake_save(cache, ids):
+            ids = np.asarray(ids)
+            seen.append(ids.shape[0])
+            return (np.zeros((1, ids.shape[0], 4, 2, 2), np.float32),
+                    np.zeros((1, ids.shape[0], 4, 2, 2), np.float32))
+
+        for n in range(1, 9):
+            save_kv_blobs(fake_save, {}, list(range(1, n + 1)))
+        assert set(seen) == {1, 2, 4, 8}
+
+
+# ------------------------------------------------------ host pool
+class TestHostPagePool:
+    def _blob(self, i):
+        return (np.full((1,), i, np.float32), np.zeros((1,), np.float32))
+
+    def test_pinned_survive_lru_unpinned_die(self):
+        pool = HostPagePool(3)
+        hp = pool.put(self._blob(0), pinned=True)
+        h1 = pool.put(self._blob(1), pinned=False)
+        h2 = pool.put(self._blob(2), pinned=False)
+        pool.touch(h1)                   # h2 becomes the LRU victim
+        dropped = []
+        pool.on_drop = dropped.append
+        h3 = pool.put(self._blob(3), pinned=False)
+        assert dropped == [h2] and pool.dropped == 1
+        assert pool.get(hp)[0][0] == 0 and pool.get(h1)[0][0] == 1
+        assert pool.get(h3)[0][0] == 3
+        with pytest.raises(KeyError):
+            pool.get(h2)
+
+    def test_reserve_fails_when_pinned_fill(self):
+        pool = HostPagePool(2)
+        pool.put(self._blob(0), pinned=True)
+        pool.put(self._blob(1), pinned=True)
+        assert not pool.reserve(1)
+        assert pool.put(self._blob(2), pinned=False) is None
+        assert pool.used == 2            # failed put changes nothing
+
+    def test_pop_releases_capacity(self):
+        pool = HostPagePool(1)
+        h = pool.put(self._blob(7), pinned=True)
+        assert pool.free == 0
+        assert pool.pop(h)[0][0] == 7
+        assert pool.free == 1 and pool.used == 0
+
+
+# -------------------------------------- store-level eviction interplay
+def _fake_store(**kw):
+    """TieredPageStore over fake page movers: blobs are (page_id,)
+    sentinels, so restores are checkable without a device."""
+    moved = {"restored": []}
+
+    def save_fn(cache, pages):
+        return [(np.full((1,), p, np.float32), np.zeros((1,), np.float32))
+                for p in pages]
+
+    def restore_fn(cache, pages, blobs):
+        moved["restored"].extend(
+            (int(b[0][0]), p) for p, b in zip(pages, blobs))
+        return cache
+
+    store = TieredPageStore(
+        n_slots=2, max_blocks=6, page_size=4, n_pages=10,
+        prefix_cache=True, host_pages=kw.pop("host_pages", 8),
+        policy=get_policy(kw.pop("policy", "spill")),
+        save_fn=save_fn, restore_fn=restore_fn, get_cache=lambda: {},
+        **kw)
+    return store, moved
+
+
+class TestEvictionResumeInterplay:
+    def test_prefix_reclaim_mid_parking_spills_then_resumes(self):
+        """The satellite scenario: a session parks, its (now cache-only)
+        prefix pages get reclaimed under allocation pressure — each one
+        spilling into the host prefix index — and the parked session
+        still restores its own pinned blobs intact.  Free list and host
+        pool balance afterwards."""
+        store, moved = _fake_store()
+        seq = np.asarray([1] * 8, np.int32)
+        pages = store.alloc(3)                 # 2 full blocks + tail
+        store.register(seq, pages, 2)          # prefix cache aliases them
+        store.park("sid", 2, pages, {})        # preempt: park full blocks
+        store.release(pages)                   # device pages freed
+        assert store.parked_blocks("sid") == 2
+        assert store.pages_spilled == 2
+        # allocation pressure reclaims the cached prefix pages; the
+        # eviction hook gives each a second life in the host index
+        got = store.alloc(9)                   # > free list alone
+        assert got is not None
+        assert len(store.host_match(seq, 0, 2)) >= 1
+        prefix_spills = store.pages_spilled - 2
+        assert prefix_spills >= 1
+        store.release(got)
+        # resume: device match is gone (k=0), parked blobs restore
+        fresh = store.alloc(2)
+        store.take_parked("sid", 0, fresh, {})
+        assert store.tier_restores == 1
+        assert [m[0] for m in moved["restored"]] == pages[:2], \
+            "restored blobs must be the very pages that were parked"
+        store.release(fresh)
+        store.flush_prefix()
+        store.flush_host()
+        assert store.allocator.n_free == store.n_pages - 1
+        assert store.host_used == 0
+
+    def test_host_index_restore_consumes_entry(self):
+        store, moved = _fake_store()
+        seq = np.asarray([2] * 8, np.int32)
+        pages = store.alloc(2)
+        store.register(seq, pages, 2)
+        store.release(pages)
+        store.prefix.reclaim(99)               # evict both -> host index
+        paths = store.host_match(seq, 0, 2)
+        assert len(paths) == 2
+        fresh = store.alloc(2)
+        store.restore_host_prefix(paths, fresh, {})
+        assert store.host_prefix_hits == 2
+        assert store.host_match(seq, 0, 2) == [], "entry must be consumed"
+        store.release(fresh)
+        store.flush_host()
+        assert store.host_used == 0
+
+    def test_prefer_device_never_touches_the_host(self):
+        store, moved = _fake_store(policy="prefer-device")
+        seq = np.asarray([3] * 8, np.int32)
+        pages = store.alloc(2)
+        store.register(seq, pages, 2)
+        store.release(pages)
+        store.prefix.reclaim(99)               # hook not wired: no spill
+        assert store.pages_spilled == 0 and store.host_used == 0
+        assert store.host_match(seq, 0, 2) == []
+
+    def test_double_park_asserts(self):
+        store, _ = _fake_store()
+        pages = store.alloc(2)
+        store.park("sid", 2, pages, {})
+        with pytest.raises(AssertionError, match="parked twice"):
+            store.park("sid", 2, pages, {})
+
+    def test_park_fails_clean_when_host_full(self):
+        store, _ = _fake_store(host_pages=1)
+        a = store.alloc(2)
+        assert store.park("a", 2, a, {}) is None   # needs 2, cap 1
+        assert store.park_fails == 1
+        assert store.parked_blocks("a") == 0 and store.host_used == 0
+
+    def test_shadow_spill_consumed_by_park(self):
+        store, moved = _fake_store(policy="lookahead")
+        pages = store.alloc(3)
+        store.shadow_spill("sid", [0, 1], pages[:2], {})
+        assert store.pages_spilled == 2
+        copied_now = store.park("sid", 3, pages, {})
+        assert copied_now == 1, "park must only copy the un-shadowed page"
+        fresh = store.alloc(3)
+        store.take_parked("sid", 0, fresh, {})
+        assert [m[0] for m in moved["restored"]] == pages, \
+            "shadow blobs must restore as the pages they shadowed"
+        store.release(pages)
+        store.release(fresh)
+        assert store.host_used == 0
+
+
+# ------------------------------------------------- end-to-end identity
+class TestParkRestoreIdentity:
+    @pytest.mark.parametrize("backend", ["sdpa", "pallas"])
+    def test_tier_arms_token_identical_to_single_tier(self, backend):
+        """Forced preemption churn through a small pool: every tier
+        policy replays the exact greedy streams of the single-tier
+        baseline, the spill arms actually migrate, and both memory
+        pools balance afterwards."""
+        model, params = _model(backend)
+        reqs = _churn_requests()
+        kw = dict(n_pages=8, prefill_chunk=4, prefix_cache=True)
+        sched, base = _serve(model, params, reqs, **kw)
+        assert base.preemptions > 0, "pool never pressured: test is void"
+        sched.flush_prefix_cache()
+        assert sched.store.allocator.n_free == 7
+        spilled = {}
+        for arm in ("prefer-device", "spill", "lookahead"):
+            sched, res = _serve(model, params, reqs, kv_tier="host",
+                                tier_policy=arm, host_pages=24, **kw)
+            for r in reqs:
+                np.testing.assert_array_equal(
+                    base.tokens_for(r.session_id),
+                    res.tokens_for(r.session_id),
+                    err_msg=f"{r.session_id} diverged under {arm} "
+                            f"({backend})")
+            store = sched.store
+            sched.flush_prefix_cache()
+            store.flush_host()
+            assert store.allocator.n_free == 7, f"page leak ({arm})"
+            assert store.host_used == 0, f"host leak ({arm})"
+            spilled[arm] = res.pages_spilled
+            if arm == "prefer-device":
+                assert res.pages_spilled == 0 and res.tier_restores == 0
+                assert res.prefill_tokens == base.prefill_tokens, \
+                    "control arm must re-prefill exactly like single-tier"
+            else:
+                assert res.pages_spilled > 0 and res.tier_restores > 0
+                assert res.prefill_tokens < base.prefill_tokens, \
+                    f"{arm}: restores did not replace re-prefill work"
+
+    def test_resume_without_device_match_restores_parked(self):
+        """Same churn with the prefix cache OFF: resumes cannot lean on
+        a device match, so every tiered resume must come from parked
+        blobs — the pure park/restore path."""
+        model, params = _model()
+        reqs = _churn_requests(4)
+        kw = dict(n_pages=8, prefill_chunk=4)
+        _, base = _serve(model, params, reqs, **kw)
+        assert base.preemptions > 0
+        sched, res = _serve(model, params, reqs, kv_tier="host",
+                            host_pages=24, **kw)
+        assert res.tier_restores > 0
+        for r in reqs:
+            np.testing.assert_array_equal(
+                base.tokens_for(r.session_id),
+                res.tokens_for(r.session_id),
+                err_msg=f"{r.session_id} diverged (no prefix cache)")
+        assert sched.store.allocator.n_free == 7
+        sched.store.flush_host()
+        assert sched.store.host_used == 0
+
+    def test_tiny_host_pool_degrades_to_reprefill(self):
+        """A 1-page host pool can rarely park; failed parks must fall
+        back to plain re-prefill with identical streams and no leak."""
+        model, params = _model()
+        reqs = _churn_requests(4)
+        kw = dict(n_pages=8, prefill_chunk=4)
+        _, base = _serve(model, params, reqs, **kw)
+        sched, res = _serve(model, params, reqs, kv_tier="host",
+                            host_pages=1, **kw)
+        for r in reqs:
+            np.testing.assert_array_equal(
+                base.tokens_for(r.session_id),
+                res.tokens_for(r.session_id),
+                err_msg=f"{r.session_id} diverged under a full host pool")
+        sched.store.flush_host()
+        assert sched.store.host_used == 0
+        assert sched.store.allocator.n_free == 7

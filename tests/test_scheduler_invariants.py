@@ -9,9 +9,10 @@ Three layers, cheapest first:
     registration/match/reclaim keeps every page accounted for;
   * full ``SlotScheduler`` churn — randomized waves (prompt lengths,
     budgets, priorities, arrival offsets) through module-cached
-    schedulers on the paged, prefix-cache and adaptive-horizon configs,
-    asserting free-list balance, empty slots, and a stable compiled
-    step count after warmup.  Schedulers are cached at module scope
+    schedulers on the paged, prefix-cache, adaptive-horizon and
+    host-tiered configs, asserting free-list balance, host-pool
+    balance (nothing pinned survives a drain), empty slots, and a
+    stable compiled step count after warmup.  Schedulers are cached at module scope
     because jit caches live per instance — a fresh scheduler per
     example would recompile and turn a soak into a compile benchmark.
 
@@ -206,14 +207,19 @@ def _sched(kind: str) -> SlotScheduler:
             kw["prefix_cache"] = True
         elif kind == "adaptive":
             kw.update(steps_per_tick=4, adaptive_k=True)
+        elif kind == "tiered":
+            # host pool smaller than the device pool: parks can fail
+            # (the fallback-to-reprefill path soaks too)
+            kw.update(prefix_cache=True, kv_tier="host", host_pages=6)
         _STATE[kind] = SlotScheduler(_STATE["model"], _STATE["params"],
                                      **kw)
     return _STATE[kind]
 
 
+@pytest.mark.slow
 class TestSchedulerChurnSoak:
     @given(seed=st.integers(0, 10**9),
-           kind=st.sampled_from(("paged", "prefix", "adaptive")),
+           kind=st.sampled_from(("paged", "prefix", "adaptive", "tiered")),
            n_sessions=st.integers(1, 4),
            gap_s=st.sampled_from((0.0, 0.004, 0.02)))
     @settings(max_examples=200, deadline=None)
@@ -255,6 +261,15 @@ class TestSchedulerChurnSoak:
         if sched.prefix is not None:
             for p in sched.prefix.pages():
                 assert sched.allocator.refcount(p) == 1
+        # ---- host pool balances: after a full drain nothing pinned
+        # may linger (parked blobs are consumed or dropped on resume,
+        # shadows die with their session) — only the unpinned host
+        # prefix index is allowed residue
+        if sched.tiered:
+            hs = sched.store.host_stats()
+            assert hs["parked"] == 0, "parked blobs leaked past drain"
+            assert hs["shadow"] == 0, "shadow blobs leaked past drain"
+            assert hs["used"] == hs["prefix"]
         # ---- compiled-program stability after warmup
         size_after = sched.step_cache_size()
         bound = len(sched.k_ladder) if kind == "adaptive" else 1
@@ -267,6 +282,6 @@ class TestSchedulerChurnSoak:
         """Meta-check: the sampled_from draws covered each scheduler
         kind (the shim's edge-first ordering guarantees this; real
         hypothesis covers it within the example budget)."""
-        for kind in ("paged", "prefix", "adaptive"):
+        for kind in ("paged", "prefix", "adaptive", "tiered"):
             _sched(kind)
             assert kind in _STATE

@@ -75,7 +75,7 @@ class TestGeneration:
         trace = generate_trace(poisson_config(seed=0, n_requests=4))
         reqs = list(trace.requests)
         reqs[2] = dataclasses.replace(reqs[2], arrival_s=0.0)
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="must be > 0"):
             validate_trace(dataclasses.replace(trace,
                                                requests=tuple(reqs)))
 
@@ -83,7 +83,33 @@ class TestGeneration:
         trace = generate_trace(poisson_config(seed=0, n_requests=4))
         reqs = list(trace.requests)
         reqs[0] = dataclasses.replace(reqs[0], klass="nosuch")
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="unknown class"):
+            validate_trace(dataclasses.replace(trace,
+                                               requests=tuple(reqs)))
+
+    def test_validate_rejects_duplicate_session_ids(self):
+        """Regression: replay keys results by session id — a duplicate
+        would silently collide in ``ContinuousResult.sessions``.  The
+        validator must name the repeated id."""
+        trace = generate_trace(poisson_config(seed=0, n_requests=4))
+        reqs = list(trace.requests)
+        reqs[2] = dataclasses.replace(
+            reqs[2], session_id=reqs[0].session_id)
+        with pytest.raises(ValueError,
+                           match=f"duplicate session id "
+                                 f"'{reqs[0].session_id}'"):
+            validate_trace(dataclasses.replace(trace,
+                                               requests=tuple(reqs)))
+
+    def test_validate_rejects_negative_arrival(self):
+        """Regression: a negative ``arrival_s`` (like 0) would bypass
+        the scheduler's trace-release path entirely — the request would
+        be admitted immediately instead of replayed.  Must be a clear
+        ValueError, not a confusing monotonicity complaint."""
+        trace = generate_trace(poisson_config(seed=0, n_requests=4))
+        reqs = list(trace.requests)
+        reqs[0] = dataclasses.replace(reqs[0], arrival_s=-1.5)
+        with pytest.raises(ValueError, match="must be > 0"):
             validate_trace(dataclasses.replace(trace,
                                                requests=tuple(reqs)))
 
