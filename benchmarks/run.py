@@ -10,8 +10,11 @@ and wall time to a machine-readable file, so the perf trajectory
 
 Every selected table runs even if an earlier one fails; any failure
 makes the process exit nonzero (with a ``# FAILED`` line per broken
-table), so a CI stage over a sweep can never silently pass.
-``--list`` prints the table ids with one-line descriptions and exits 0.
+table), so a CI stage over a sweep can never silently pass.  Exit codes
+distinguish the failure class: 3 when every failed table tripped one of
+its own inline assertions (a metric regression — the harness ran fine),
+1 when any table crashed outright.  ``--list`` prints the table ids
+with one-line descriptions and exits 0.
 """
 from __future__ import annotations
 
@@ -35,6 +38,8 @@ DESCRIPTIONS = {
     "table12": "prefix sharing: CoW page dedup across sessions",
     "table13": "SLO metrics under trace load: fixed-K vs adaptive-K",
     "table14": "host-DRAM KV tier: park/restore vs re-prefill",
+    "table15": "quantised KV pages + int4 weights: realised vs analytic "
+               "traffic per route",
 }
 
 
@@ -65,7 +70,7 @@ def main() -> None:
                             table8_accounting, table9_continuous_batching,
                             table10_paged_kv, table11_launch_overhead,
                             table12_prefix_sharing, table13_slo_load,
-                            table14_kv_tiering)
+                            table14_kv_tiering, table15_quant_serving)
     suites = {
         "table1": table1_rfloor_matrix.run,
         "table2": lambda: table2_dispatch_ab.run(quick=quick),
@@ -80,6 +85,7 @@ def main() -> None:
         "table12": lambda: table12_prefix_sharing.run(quick=quick),
         "table13": lambda: table13_slo_load.run(quick=quick),
         "table14": lambda: table14_kv_tiering.run(quick=quick),
+        "table15": lambda: table15_quant_serving.run(quick=quick),
     }
     assert set(suites) == set(DESCRIPTIONS), "--list out of sync"
     if only is not None and only not in suites:
@@ -87,7 +93,7 @@ def main() -> None:
               f"(have: {', '.join(suites)})", flush=True)
         sys.exit(2)
     t0 = time.time()
-    failed = []
+    failed, crashed = [], []
     report = {"quick": quick, "only": only, "tables": {}}
     for name, fn in suites.items():
         if only and name != only:
@@ -97,10 +103,16 @@ def main() -> None:
         ok = True
         try:
             fn()
+        except AssertionError:
+            traceback.print_exc()
+            print(f"# FAILED (assertion): {name}", flush=True)
+            failed.append(name)
+            ok = False
         except Exception:
             traceback.print_exc()
             print(f"# FAILED: {name}", flush=True)
             failed.append(name)
+            crashed.append(name)
             ok = False
         report["tables"][name] = {
             "ok": ok,
@@ -116,11 +128,16 @@ def main() -> None:
             # the run loudly instead
             json.dump(report, f, indent=2, allow_nan=False)
         print(f"# wrote {json_path}", flush=True)
+    for name, entry in report["tables"].items():
+        print(f"# {name}: {entry['seconds']:.1f}s"
+              f"{'' if entry['ok'] else ' FAILED'}", flush=True)
     print(f"# total {report['total_s']:.1f}s", flush=True)
     if failed:
         print(f"# {len(failed)} table(s) failed: {', '.join(failed)}",
               flush=True)
-        sys.exit(1)
+        # 3 = every failure was an inline-assertion trip (metric
+        # regression); 1 = at least one table crashed outright
+        sys.exit(1 if crashed else 3)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,235 @@
+"""Table 15 (extension): quantised KV pages + int4 weights on the paged
+serving routes — realised vs analytic traffic reduction per route.
+
+The paper's deployment headline (§7) is that quantisation only pays
+when the runtime *realises* the traffic reduction: on L4, bnb-nf4 and
+AWQ recover almost none of the 4x weight-traffic cut while
+GPTQ+ExLlamaV2's tuned kernels get 3.6x.  This table reproduces that
+realised-savings gap inside our own serving stack, on the KV axis:
+
+  * the FUSED route (``decode_backend="pallas"``) dequantises int8
+    codes in-register inside the paged kernel's block loads — per-step
+    KV traffic drops to live tokens at *stored* width (codes + scales),
+    the analytic floor;
+  * the GATHER route materialises a dequantised model-dtype view of the
+    whole virtual span before the SDPA reads it (bnb-style) — stored
+    bytes shrink ~3.6x but the step's read traffic barely moves.
+
+Arms per route (gather / pallas), all greedy, all f32 model dtype so
+the two routes compute the identical real-valued function and their
+token streams must coincide EXACTLY even under quantisation:
+
+  * f32 KV baseline, then int8 KV — asserted: route-vs-route token
+    identity within each arm; greedy top-1 agreement of the int8 stream
+    vs the f32 baseline >= ``AGREEMENT_TOL`` (mean per-session
+    longest-common-prefix fraction — quantised greedy streams diverge
+    permanently at the first flipped argmax, so prefix fraction is the
+    honest agreement metric); fused realised KV-bytes reduction >= 1.5x
+    and STRICTLY greater than the gather route's; the fused route's
+    int8 traffic equals the analytic floor while the gather route's
+    sits above it.
+  * int8 KV + int4 fused weights (the full quantised serving stack
+    under continuous batching) — per-step weight stream vs bf16.
+  * int8 KV through the host-DRAM tier under forced preemption churn —
+    parked quantised blobs (codes + scales) must restore bit-exactly:
+    token identity vs the single-tier int8 run, device free list and
+    host pool balanced after the flushes.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.kernels.paged_decode_attention.ops import serving_traffic_bytes
+from repro.launch.serve import mixed_requests
+from repro.models import Model
+from repro.quant import quantize_tree, tree_weight_traffic
+from repro.serving import SessionRequest, SlotScheduler
+
+PAGE = 4
+SLOTS = 3
+# documented tolerance: mean per-session longest-common-prefix fraction
+# of the int8-KV greedy stream vs the f32 baseline.  Int8 KV noise may
+# legitimately flip a near-tie argmax mid-stream (after which greedy
+# decoding never re-converges), so exact identity is the wrong contract;
+# >= 0.5 mean prefix agreement is what the per-(token, head)-scale
+# scheme comfortably clears on this config.
+AGREEMENT_TOL = 0.5
+
+
+def _cfg():
+    # f32 so fused-vs-gather is the same real function at the same
+    # precision (table10's identity discipline): codes * scale in f32
+    # in-kernel == the dequantised f32 view the gather route reads.
+    return get_config("qwen2.5-3b").reduced().replace(
+        vocab_size=512, d_model=192, d_ff=384, n_layers=3,
+        n_heads=4, n_kv_heads=2, head_dim=32, dtype="float32")
+
+
+def _serve(model, params, reqs, *, max_len, kv_dtype=None, n_pages=None,
+           **kw):
+    sched = SlotScheduler(model, params, n_slots=kw.pop("n_slots", SLOTS),
+                          max_len=max_len, paged=True, page_size=PAGE,
+                          n_pages=n_pages, kv_dtype=kv_dtype, timed=False,
+                          shared_programs=True, **kw)
+    for r in reqs:
+        sched.submit(r)
+    return sched, sched.run()
+
+
+def _assert_identical(reqs, a, b, label):
+    for r in reqs:
+        np.testing.assert_array_equal(
+            a.tokens_for(r.session_id), b.tokens_for(r.session_id),
+            err_msg=f"{r.session_id} diverged: {label}")
+
+
+def _agreement(base, res, reqs) -> float:
+    """Mean per-session longest-common-prefix fraction vs baseline."""
+    fracs = []
+    for r in reqs:
+        a = np.asarray(base.tokens_for(r.session_id))
+        b = np.asarray(res.tokens_for(r.session_id))
+        n = min(len(a), len(b))
+        neq = np.nonzero(a[:n] != b[:n])[0]
+        lcp = int(neq[0]) if len(neq) else n
+        fracs.append(lcp / max(len(a), 1))
+    return float(np.mean(fracs))
+
+
+def _traffic(res, cfg, max_blocks, kv_quant):
+    return serving_traffic_bytes(res.step_kv_blocks, cfg, page_size=PAGE,
+                                 n_slots=SLOTS, max_blocks=max_blocks,
+                                 kv_quant=kv_quant)
+
+
+def _kv_arms(models, params, reqs, cfg, max_len):
+    """f32 vs int8 KV on both routes: identity, agreement, realised
+    traffic reduction per route."""
+    import jax.numpy as jnp
+    max_blocks = -(-max_len // PAGE)
+    base, quant, red = {}, {}, {}
+    for route, model in models.items():
+        _, base[route] = _serve(model, params, reqs, max_len=max_len)
+        _, quant[route] = _serve(model, params, reqs, max_len=max_len,
+                                 kv_dtype=jnp.int8)
+        assert quant[route].step_cache_size in (1, None), \
+            f"{route}: int8 paged decode step recompiled"
+    # routes must agree exactly within each arm (f32 math both sides)
+    _assert_identical(reqs, base["gather"], base["pallas"], "f32 routes")
+    _assert_identical(reqs, quant["gather"], quant["pallas"],
+                      "int8 routes (fused in-kernel dequant vs "
+                      "dequantised-view gather)")
+    for route in models:
+        agree = _agreement(base[route], quant[route], reqs)
+        assert agree >= AGREEMENT_TOL, (
+            f"{route}: int8-KV greedy agreement {agree:.3f} < "
+            f"{AGREEMENT_TOL} (documented tolerance)")
+        tb_f32 = _traffic(base[route], cfg, max_blocks, "none")
+        tb_i8 = _traffic(quant[route], cfg, max_blocks, "int8")
+        key = "fused" if route == "pallas" else "gather_sdpa"
+        red[route] = tb_f32[key] / tb_i8[key]
+        # the fused route achieves the analytic floor by construction;
+        # the gather route's realised traffic sits far above it
+        assert tb_i8["fused"] == tb_i8["floor"]
+        assert tb_i8["gather_sdpa"] > tb_i8["floor"]
+        emit(f"quant/{route}/kv_int8", quant[route].now_s * 1e6,
+             f"kv_step_bytes={tb_i8[key]} kv_step_bytes_f32={tb_f32[key]} "
+             f"floor_bytes={tb_i8['floor']} realised_reduction="
+             f"{red[route]:.3f} agreement={agree:.3f} "
+             f"route_identical=True")
+    assert red["pallas"] >= 1.5, (
+        f"fused realised KV reduction {red['pallas']:.2f}x < 1.5x")
+    assert red["pallas"] > red["gather"], (
+        f"realised-savings gap inverted: fused {red['pallas']:.2f}x <= "
+        f"gather {red['gather']:.2f}x")
+    emit("quant/realised_gap", 0.0,
+         f"fused_reduction={red['pallas']:.3f} "
+         f"gather_reduction={red['gather']:.3f} "
+         f"gap={red['pallas'] / red['gather']:.3f}")
+    return base, quant
+
+
+def _weight_arm(models, params, reqs, cfg, max_len, quant_runs):
+    """int4 fused weights + int8 KV under continuous batching."""
+    import jax.numpy as jnp
+    params_q = quantize_tree(params, "int4_fused")
+    wb = tree_weight_traffic(params)
+    wq = tree_weight_traffic(params_q)
+    assert wq < wb, "int4 weights did not shrink the per-step stream"
+    runs = {}
+    for route, model in models.items():
+        _, runs[route] = _serve(model, params_q, reqs, max_len=max_len,
+                                kv_dtype=jnp.int8)
+    # int4-weight logits are a different (quantised) function, so no
+    # bf16-agreement contract here — but the two ROUTES still share one
+    # function and must stay token-identical
+    _assert_identical(reqs, runs["gather"], runs["pallas"],
+                      "int4-weight routes")
+    agree = _agreement(quant_runs["pallas"], runs["pallas"], reqs)
+    emit("quant/pallas/int4_weights", runs["pallas"].now_s * 1e6,
+         f"weight_step_bytes={wq:.0f} weight_step_bytes_base={wb:.0f} "
+         f"weight_reduction={wb / wq:.3f} agreement_vs_int8kv="
+         f"{agree:.3f} route_identical=True")
+
+
+def _tier_arm(models, params, cfg, quick):
+    """int8 KV blobs (codes + scales) through the host-DRAM tier under
+    forced preemption: park/restore must be bit-exact."""
+    import jax.numpy as jnp
+    rng = np.random.RandomState(11)
+    reqs = []
+    for i in range(4 if quick else 6):
+        plen = 8 + 3 * (i % 3)
+        prompt = rng.randint(0, cfg.vocab_size, size=plen).astype(np.int32)
+        reqs.append(SessionRequest(f"t{i}", prompt, 6 + 2 * (i % 3)))
+    max_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 1
+    n_pages = 1 + -(-max_len // PAGE)   # far below 2-slot full backing
+    kw = dict(max_len=max_len, kv_dtype=jnp.int8, n_pages=n_pages,
+              n_slots=2, prefill_chunk=PAGE, prefix_cache=True)
+    for route, model in models.items():
+        _, single = _serve(model, params, reqs, **kw)
+        assert single.preemptions > 0, (
+            f"{route}: pool of {n_pages} pages never forced a preemption")
+        sched, tier = _serve(model, params, reqs, kv_tier="host",
+                             tier_policy="spill", host_pages=4 * n_pages,
+                             **kw)
+        assert tier.pages_spilled > 0, f"{route}: nothing parked"
+        assert tier.tier_restores > 0, f"{route}: nothing restored"
+        _assert_identical(reqs, single, tier,
+                          f"{route} int8 host-tier (codes+scales "
+                          f"park/restore must be bit-exact)")
+        store = sched.store
+        sched.flush_prefix_cache()
+        store.flush_host()
+        assert store.allocator.n_free == n_pages - 1, \
+            f"{route}: device page leak"
+        assert store.host_used == 0, f"{route}: host page leak"
+        emit(f"quant/{route}/kv_int8_host_tier", tier.now_s * 1e6,
+             f"preemptions={tier.preemptions} spilled={tier.pages_spilled} "
+             f"restored={tier.pages_restored} "
+             f"tier_restores={tier.tier_restores} token_identical=True "
+             f"balanced=True")
+
+
+def run(quick: bool = False) -> None:
+    header("table15: quantised KV + int4 weights on the paged routes — "
+           "realised vs analytic traffic (gather / pallas)")
+    cfg = _cfg()
+    models = {"gather": Model(cfg),
+              "pallas": Model(cfg, decode_backend="pallas")}
+    params = models["gather"].init(jax.random.PRNGKey(0))
+    n_sessions = 5 if quick else 9
+    reqs = mixed_requests(cfg, n_sessions, base_prompt=8,
+                          base_new=8 if quick else 12, seed=0)
+    max_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 1
+    _, quant_runs = _kv_arms(models, params, reqs, cfg, max_len)
+    _weight_arm(models, params, reqs, cfg, max_len, quant_runs)
+    _tier_arm(models, params, cfg, quick)
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

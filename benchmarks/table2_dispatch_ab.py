@@ -15,7 +15,6 @@ config, shrinking monotonically as compute grows.
 """
 from __future__ import annotations
 
-import json
 
 import jax
 

@@ -21,7 +21,6 @@ from benchmarks.common import emit, header
 from repro.configs import get_config
 from repro.core.protocol import measure_cell
 from repro.models import attention as A
-from repro.models.model import Model
 
 SHAPES = {
     # paper §6 backend-pinned shape

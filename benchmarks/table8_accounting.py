@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from benchmarks.common import emit, header
 from repro.analysis import analytic
-from repro.configs import SHAPES, get_config, list_configs, shape_applicable
+from repro.configs import SHAPES, get_config, list_configs
 from repro.core import floor as fl
 from repro.core.hardware import TPU_V5E
 

@@ -1,0 +1,92 @@
+"""Merge per-table ``bench_table*.json`` harness reports into one
+``BENCH_<date>.json`` perf-trajectory snapshot.
+
+The CI matrix's table jobs each leave ``bench_table*.json`` files
+(uploaded as artifacts); this script folds any number of them — or a
+directory of downloaded artifacts — into a single dated snapshot whose
+shape mirrors the harness report (one entry per table with status, wall
+seconds, and the emitted rows), so successive snapshots diff cleanly
+across PRs.
+
+Usage:
+    python scripts/bench_trajectory.py [paths...] [--date YYYY-MM-DD]
+                                       [--out DIR]
+
+With no paths, globs ``bench_table*.json`` in the repo root.  Paths may
+be files or directories (searched recursively, the artifact-download
+layout).  Exits 2 when nothing matches — an empty snapshot would read
+as "no regressions" in a trajectory diff.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import glob
+import json
+import os
+import sys
+
+
+def collect(paths):
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(sorted(glob.glob(
+                os.path.join(p, "**", "bench_table*.json"),
+                recursive=True)))
+        else:
+            files.append(p)
+    return files
+
+
+def merge(files):
+    out = {"tables": {}, "sources": {}, "failed": []}
+    for path in sorted(files):
+        with open(path) as f:
+            report = json.load(f)
+        for name, entry in report.get("tables", {}).items():
+            prev = out["sources"].get(name)
+            if prev is not None:
+                print(f"# note: {name} in both {prev} and {path}; "
+                      f"keeping {path}", file=sys.stderr)
+            out["tables"][name] = entry
+            out["sources"][name] = path
+        out["quick"] = report.get("quick", out.get("quick"))
+        for name in report.get("failed", []):
+            if name not in out["failed"]:
+                out["failed"].append(name)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="merge bench_table*.json into BENCH_<date>.json")
+    ap.add_argument("paths", nargs="*",
+                    help="report files or artifact directories "
+                         "(default: bench_table*.json in the repo root)")
+    ap.add_argument("--date", default=None,
+                    help="snapshot date (default: today, UTC)")
+    ap.add_argument("--out", default=".",
+                    help="directory to write BENCH_<date>.json into")
+    args = ap.parse_args()
+
+    files = collect(args.paths or glob.glob("bench_table*.json"))
+    if not files:
+        print("# no bench_table*.json found — nothing to merge",
+              file=sys.stderr)
+        return 2
+    snapshot = merge(files)
+    date = args.date or datetime.datetime.now(
+        datetime.timezone.utc).strftime("%Y-%m-%d")
+    snapshot["date"] = date
+    dest = os.path.join(args.out, f"BENCH_{date}.json")
+    with open(dest, "w") as f:
+        json.dump(snapshot, f, indent=2, allow_nan=False)
+    n_rows = sum(len(t.get("rows", [])) for t in snapshot["tables"].values())
+    print(f"# wrote {dest}: {len(snapshot['tables'])} table(s), "
+          f"{n_rows} row(s) from {len(files)} report(s)")
+    return 1 if snapshot["failed"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,47 +1,44 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 test suite + serving smoke stages, named and timed.
+# CI gate: lint + tier-1 test suite + serving smokes + quick table
+# sweeps, named and timed, grouped into three parallelisable stage
+# groups (the GitHub Actions matrix runs one group per job).
 #
 # Usage:
-#   bash scripts/ci.sh           # full staged pipeline (what CI runs)
-#   bash scripts/ci.sh --fast    # tier-1 only (pre-push gate)
+#   bash scripts/ci.sh                  # full pipeline (all groups)
+#   bash scripts/ci.sh --fast           # lint + tier-1 only (pre-push)
+#   bash scripts/ci.sh --stage tests    # one group (what a matrix job runs)
 #
-# Stages (each individually timed; first failure aborts, nonzero exit):
-#   tier1             pytest suite minus slow-marked soaks
-#                     (ROADMAP "tier-1 verify")
-#   soak              the slow-marked property soaks (hypothesis runs
-#                     them at full example counts when installed)
-#   smoke-continuous  continuous-batching serve (slotted cache)
-#   smoke-paged       paged serve: oversubscribed pool + chunked prefill
-#   smoke-paged-fused paged serve through the fused Pallas block-table
-#                     kernel (--decode-backend pallas; interpret on CPU)
-#   smoke-horizon     horizon-K fused macro-ticks (--steps-per-tick 4):
-#                     continuous + paged serve, K decode steps per
-#                     compiled dispatch
-#   smoke-prefix      paged serve with --prefix-cache on sessions
-#                     sharing a page-aligned prompt preamble (prefill
-#                     skipped for matched pages, CoW before any shared
-#                     write)
-#   table10-quick     paged sweep incl. fused-vs-gather token identity
-#                     (benchmarks/run.py exits nonzero on any failure)
-#   table11-quick     launch-overhead A/B: horizon-K amortisation >= K
-#                     across contiguous/paged-gather/paged-pallas, with
-#                     the --json results file exercised
-#   table12-quick     prefix-sharing A/B: prefill tokens reduced >= the
-#                     shared-prefix fraction, token identity, free-list
-#                     balance (gather + pallas routes)
-#   smoke-trace       trace-driven load replay (--trace bursty) with
-#                     adaptive horizon-K and the per-class SLO report
-#   smoke-tier        paged serve with the host-DRAM KV tier
-#                     (--kv-tier host) through a pool small enough to
-#                     force preemption, so parks/restores actually run
-#   table13-quick     SLO metrics under Poisson + bursty traces on both
-#                     paged routes: TTFT/TPOT percentiles,
-#                     goodput-under-SLO, adaptive-K >= best fixed-K on
-#                     the bursty trace, token identity vs the
-#                     fixed-K/FIFO baseline
-#   table14-quick     host-tier A/B: per-policy token identity vs the
-#                     single-tier baseline, spill arms migrate and cut
-#                     re-prefill work, device + host pools balance
+# Groups:
+#   tests   lint           ruff check (skipped with a notice when ruff
+#                          isn't installed — CI always installs it via
+#                          requirements.txt)
+#           tier1          pytest suite minus slow-marked soaks
+#                          (ROADMAP "tier-1 verify")
+#           soak           the slow-marked property soaks (hypothesis
+#                          runs them at full example counts when
+#                          installed)
+#   smokes  smoke-continuous  continuous-batching serve (slotted cache)
+#           smoke-paged       paged serve: oversubscribed pool +
+#                             chunked prefill
+#           smoke-paged-fused paged serve through the fused Pallas
+#                             block-table kernel (--decode-backend
+#                             pallas; interpret on CPU)
+#           smoke-horizon     horizon-K fused macro-ticks
+#                             (--steps-per-tick 4): continuous + paged
+#           smoke-prefix      paged serve with --prefix-cache on
+#                             sessions sharing a page-aligned preamble
+#           smoke-trace       trace-driven load replay (--trace bursty)
+#                             with adaptive horizon-K + SLO report
+#           smoke-tier        paged serve with the host-DRAM KV tier
+#                             under a preemption-forcing pool
+#           smoke-quant       the fully quantised serving stack: int8
+#                             KV pages + int4 weights on both paged
+#                             routes, incl. through the host tier
+#   tables  table10-quick ... table15-quick
+#                          quick benchmark sweeps; each --json run
+#                          leaves a bench_table*.json that CI uploads
+#                          as an artifact (exit 3 = a table's inline
+#                          assertion tripped, 1 = crash)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -49,12 +46,23 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 FAST=0
-for arg in "$@"; do
-    case "$arg" in
+GROUP=all
+while [ $# -gt 0 ]; do
+    case "$1" in
         --fast) FAST=1 ;;
-        *) echo "unknown argument: $arg" >&2; exit 2 ;;
+        --stage)
+            shift
+            GROUP="${1:?--stage requires a group (tests|smokes|tables)}" ;;
+        --stage=*) GROUP="${1#--stage=}" ;;
+        *) echo "unknown argument: $1" >&2; exit 2 ;;
     esac
+    shift
 done
+case "$GROUP" in
+    all|tests|smokes|tables) ;;
+    *) echo "unknown stage group: $GROUP (tests|smokes|tables)" >&2
+       exit 2 ;;
+esac
 
 stage() {
     local name="$1"; shift
@@ -64,65 +72,107 @@ stage() {
     echo "== stage: $name ok ($((SECONDS - t0))s) =="
 }
 
-stage tier1 python -m pytest -x -q -m "not slow"
+run_tests() {
+    if command -v ruff >/dev/null 2>&1; then
+        stage lint ruff check .
+    else
+        echo "== stage: lint skipped (ruff not installed) =="
+    fi
 
-if [ "$FAST" = 1 ]; then
-    echo "== ci green (--fast: tier-1 only) =="
-    exit 0
-fi
+    stage tier1 python -m pytest -x -q -m "not slow"
 
-stage soak python -m pytest -x -q -m slow
+    if [ "$FAST" = 1 ]; then
+        echo "== ci green (--fast: lint + tier-1 only) =="
+        exit 0
+    fi
 
-stage smoke-continuous \
-    python -m repro.launch.serve --arch qwen2.5-3b --reduced --continuous \
-        --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 --timed
+    stage soak python -m pytest -x -q -m slow
+}
 
-stage smoke-paged \
-    python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
-        --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
-        --page-size 8 --pages 9 --prefill-chunk 8 --timed
+run_smokes() {
+    stage smoke-continuous \
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+            --continuous --slots 3 --sessions 6 --prompt-len 8 \
+            --new-tokens 6 --timed
 
-stage smoke-paged-fused \
-    python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
-        --decode-backend pallas --slots 3 --sessions 6 --prompt-len 8 \
-        --new-tokens 6 --page-size 8 --pages 9 --timed
+    stage smoke-paged \
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+            --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
+            --page-size 8 --pages 9 --prefill-chunk 8 --timed
 
-stage smoke-horizon bash -c "
-    python -m repro.launch.serve --arch qwen2.5-3b --reduced --continuous \
-        --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
-        --steps-per-tick 4 --timed &&
-    python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
-        --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
-        --page-size 8 --pages 9 --steps-per-tick 4 --timed"
+    stage smoke-paged-fused \
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+            --decode-backend pallas --slots 3 --sessions 6 --prompt-len 8 \
+            --new-tokens 6 --page-size 8 --pages 9 --timed
 
-stage smoke-prefix \
-    python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
-        --prefix-cache --slots 3 --sessions 6 --prompt-len 6 \
-        --shared-prefix 16 --new-tokens 6 --page-size 8 --timed
+    stage smoke-horizon bash -c "
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced --continuous \
+            --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
+            --steps-per-tick 4 --timed &&
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+            --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
+            --page-size 8 --pages 9 --steps-per-tick 4 --timed"
 
-stage table10-quick python -m benchmarks.run --quick --only=table10
+    stage smoke-prefix \
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+            --prefix-cache --slots 3 --sessions 6 --prompt-len 6 \
+            --shared-prefix 16 --new-tokens 6 --page-size 8 --timed
 
-stage table11-quick \
-    python -m benchmarks.run --quick --only=table11 --json bench_table11.json
+    stage smoke-trace \
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+            --trace bursty --sessions 8 --slots 3 --page-size 8 \
+            --steps-per-tick 8 --adaptive-k
 
-stage table12-quick \
-    python -m benchmarks.run --quick --only=table12 --json bench_table12.json
+    stage smoke-tier \
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+            --kv-tier host --tier-policy spill --slots 2 --sessions 6 \
+            --prompt-len 8 --new-tokens 8 --page-size 4 --pages 10 \
+            --host-pages 8 --prefill-chunk 4 --timed
 
-stage smoke-trace \
-    python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
-        --trace bursty --sessions 8 --slots 3 --page-size 8 \
-        --steps-per-tick 8 --adaptive-k
+    stage smoke-quant bash -c "
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+            --kv-quant int8 --weights int4 --slots 3 --sessions 6 \
+            --prompt-len 8 --new-tokens 6 --page-size 8 --pages 9 \
+            --timed &&
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+            --decode-backend pallas --kv-quant int8 --weights int4 \
+            --slots 3 --sessions 6 --prompt-len 8 --new-tokens 6 \
+            --page-size 8 --pages 9 --timed &&
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+            --kv-quant int8 --kv-tier host --tier-policy spill --slots 2 \
+            --sessions 6 --prompt-len 8 --new-tokens 8 --page-size 4 \
+            --pages 10 --host-pages 8 --prefill-chunk 4 --timed"
+}
 
-stage smoke-tier \
-    python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
-        --kv-tier host --tier-policy spill --slots 2 --sessions 6 \
-        --prompt-len 8 --new-tokens 8 --page-size 4 --pages 10 \
-        --host-pages 8 --prefill-chunk 4 --timed
+run_tables() {
+    stage table10-quick python -m benchmarks.run --quick --only=table10
 
-stage table13-quick \
-    python -m benchmarks.run --quick --only=table13 --json bench_table13.json
+    stage table11-quick \
+        python -m benchmarks.run --quick --only=table11 \
+            --json bench_table11.json
 
-stage table14-quick \
-    python -m benchmarks.run --quick --only=table14 --json bench_table14.json
+    stage table12-quick \
+        python -m benchmarks.run --quick --only=table12 \
+            --json bench_table12.json
 
-echo "== ci green =="
+    stage table13-quick \
+        python -m benchmarks.run --quick --only=table13 \
+            --json bench_table13.json
+
+    stage table14-quick \
+        python -m benchmarks.run --quick --only=table14 \
+            --json bench_table14.json
+
+    stage table15-quick \
+        python -m benchmarks.run --quick --only=table15 \
+            --json bench_table15.json
+}
+
+case "$GROUP" in
+    tests)  run_tests ;;
+    smokes) run_smokes ;;
+    tables) run_tables ;;
+    all)    run_tests; run_smokes; run_tables ;;
+esac
+
+echo "== ci green ($GROUP) =="

@@ -10,11 +10,11 @@ confirmed/refuted records to results/perf/<cell>.json.
   PYTHONPATH=src python scripts/hillclimb.py olmo-1b train_4k pod \
       '{"strategy": "dp"}' "DP-only layout kills per-block ARs"
 """
-import json
-import sys
+import json  # noqa: E402
+import sys  # noqa: E402
 
-from repro.analysis.roofline import build_row
-from repro.launch.dryrun import build_cell
+from repro.analysis.roofline import build_row  # noqa: E402
+from repro.launch.dryrun import build_cell  # noqa: E402
 
 
 def terms(cell):

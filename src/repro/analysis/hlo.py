@@ -18,7 +18,6 @@ Byte cost per op uses ring-algorithm wire bytes per chip:
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from typing import Dict, List, Optional
 

@@ -21,7 +21,7 @@ paper's "touch the launch term and only the launch term" requirement.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Sequence
+from typing import Any, Callable, List
 
 import jax
 

@@ -14,7 +14,6 @@ Table 9 numbers (Qwen-2.5-7B / Mistral-7B / Llama-3.1-8B × 4 GPUs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 from repro.configs.base import ArchConfig
 from repro.core.hardware import ChipSpec

@@ -78,11 +78,67 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
                        ).astype(o_ref.dtype)
 
 
+def _kernel_quant(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, page: int, scale: float):
+    """Int8-KV variant: k/v blocks are int8 codes, ks/vs blocks the
+    per-(token, head) float32 scales riding the SAME block-table
+    indirection.  Dequantisation happens here, in-register, on the
+    (page, hd) tile the DMA just landed — no model-dtype copy of the
+    pool is ever materialised, so the stored-width traffic cut is
+    *realised* (the paper's GPTQ+ExLlamaV2-style path, vs the gather
+    route's bnb-style dequantised view)."""
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    ni = pl.num_programs(2)
+    length = len_ref[b]
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(i * page < length)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+        ks = ks_ref[0, :, 0]                         # (page,) f32
+        vs = vs_ref[0, :, 0]
+        k = k_ref[0, :, 0].astype(jnp.float32) * ks[:, None]   # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32) * vs[:, None]
+        G = q.shape[0]
+        tok = i * page + jax.lax.broadcasted_iota(jnp.int32, (G, page), 1)
+        valid = tok < length
+
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (G, page)
+        scores = jnp.where(valid, scores, NEG_INF)
+
+        m_prev = m_ref[...]                          # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)                  # (G, page)
+        p = jnp.where(valid, p, 0.0)
+
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == ni - 1)
+    def _out():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_attention_pallas(q: jnp.ndarray, k_pool: jnp.ndarray,
                                   v_pool: jnp.ndarray,
                                   block_table: jnp.ndarray,
-                                  lengths: jnp.ndarray, *,
+                                  lengths: jnp.ndarray,
+                                  k_scale_pool: jnp.ndarray = None,
+                                  v_scale_pool: jnp.ndarray = None, *,
                                   interpret: bool = False) -> jnp.ndarray:
     """q (B, Hq, hd); k_pool/v_pool (n_pages, page, Hkv, hd);
     block_table (B, max_blocks) page ids; lengths (B,) live tokens per
@@ -90,7 +146,14 @@ def paged_decode_attention_pallas(q: jnp.ndarray, k_pool: jnp.ndarray,
 
     A slot's output attends over virtual positions ``0..lengths[b]-1``,
     read through its block-table row; a slot with ``lengths[b] == 0``
-    returns zeros (free lane, output discarded by the scheduler)."""
+    returns zeros (free lane, output discarded by the scheduler).
+
+    With ``k_scale_pool``/``v_scale_pool`` (n_pages, page, Hkv) the
+    pools hold int8 codes and the kernel dequantises inside the block
+    loads (``_kernel_quant``): the scale tiles follow the same
+    ``bt[b, i]`` index maps, and the output attends over exactly
+    ``codes * scale`` — bitwise the function the dequantised-view
+    gather reference computes at float32."""
     B, Hq, hd = q.shape
     _, page, Hkv, _ = k_pool.shape
     max_blocks = block_table.shape[1]
@@ -98,20 +161,32 @@ def paged_decode_attention_pallas(q: jnp.ndarray, k_pool: jnp.ndarray,
     qg = q.reshape(B, Hkv, G, hd)
     block_table = block_table.astype(jnp.int32)
     lengths = lengths.astype(jnp.int32)
+    quantized = k_scale_pool is not None
+
+    pool_spec = pl.BlockSpec((1, page, 1, hd),
+                             lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0))
+    scale_spec = pl.BlockSpec((1, page, 1),
+                              lambda b, h, i, bt, ln: (bt[b, i], 0, h))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd), lambda b, h, i, bt, ln: (b, h, 0, 0)),
+        # the fused gather: the index map dereferences the prefetched
+        # block table, so page i of slot b streams straight from the
+        # pool — no materialised view
+        pool_spec,
+        pool_spec,
+    ]
+    operands = [block_table, lengths, qg, k_pool, v_pool]
+    if quantized:
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale_pool, v_scale_pool]
+        kernel = _kernel_quant
+    else:
+        kernel = _kernel
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,          # block table + lengths
         grid=(B, Hkv, max_blocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, i, bt, ln: (b, h, 0, 0)),
-            # the fused gather: the index map dereferences the prefetched
-            # block table, so page i of slot b streams straight from the
-            # pool — no materialised view
-            pl.BlockSpec((1, page, 1, hd),
-                         lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0)),
-            pl.BlockSpec((1, page, 1, hd),
-                         lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda b, h, i, bt, ln: (b, h, 0, 0)),
         scratch_shapes=[
@@ -121,9 +196,9 @@ def paged_decode_attention_pallas(q: jnp.ndarray, k_pool: jnp.ndarray,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, page=page, scale=hd ** -0.5),
+        functools.partial(kernel, page=page, scale=hd ** -0.5),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
         interpret=interpret,
-    )(block_table, lengths, qg, k_pool, v_pool)
+    )(*operands)
     return out.reshape(B, Hq, hd)

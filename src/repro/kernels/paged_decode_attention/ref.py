@@ -31,3 +31,18 @@ def paged_decode_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
     probs = jnp.where(mask[:, None, None, :], probs, 0.0)   # len-0 lanes
     out = jnp.einsum("bkgs,bskh->bkgh", probs, v_view.astype(jnp.float32))
     return out.reshape(B, Hq, hd)
+
+
+def paged_decode_attention_quant_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                                     v_pool: jnp.ndarray,
+                                     k_scale_pool: jnp.ndarray,
+                                     v_scale_pool: jnp.ndarray,
+                                     block_table: jnp.ndarray,
+                                     lengths: jnp.ndarray) -> jnp.ndarray:
+    """Int8-KV oracle: dequantise the pools to float32 (codes * scale,
+    the gather route's materialised-view semantics) and run the plain
+    reference.  The fused quant kernel computes the same function with
+    the dequantisation moved inside its block loads."""
+    k = k_pool.astype(jnp.float32) * k_scale_pool[..., None]
+    v = v_pool.astype(jnp.float32) * v_scale_pool[..., None]
+    return paged_decode_attention_ref(q, k, v, block_table, lengths)

@@ -24,26 +24,25 @@ Usage:
   python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh pod
   python -m repro.launch.dryrun --all --mesh both --out results/dryrun
 """
-import argparse
-import dataclasses
-import json
-import time
-import traceback
-from typing import Dict, Optional
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
 
-import jax
-import jax.numpy as jnp
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
-from repro.analysis import analytic
-from repro.analysis.hlo import collective_summary, parse_collectives
-from repro.configs import SHAPES, get_config, list_configs, shape_applicable
-from repro.core.hardware import DEFAULT_CHIP
-from repro.launch import sharding as shd
-from repro.launch.mesh import dp_size, make_production_mesh, tp_size
-from repro.models.model import Model, input_specs
-from repro.quant import quantize_tree
-from repro.training.optimizer import AdamW
-from repro.training.train_loop import make_train_step
+from repro.analysis import analytic  # noqa: E402
+from repro.analysis.hlo import collective_summary, parse_collectives  # noqa: E402
+from repro.configs import SHAPES, get_config, list_configs, shape_applicable  # noqa: E402
+from repro.core.hardware import DEFAULT_CHIP  # noqa: E402
+from repro.launch import sharding as shd  # noqa: E402
+from repro.launch.mesh import dp_size, make_production_mesh, tp_size  # noqa: E402
+from repro.models.model import Model, input_specs  # noqa: E402
+from repro.quant import quantize_tree  # noqa: E402
+from repro.training.optimizer import AdamW  # noqa: E402
+from repro.training.train_loop import make_train_step  # noqa: E402
 
 
 def cell_policy(arch: str, shape_name: str) -> Dict:

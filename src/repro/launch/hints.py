@@ -13,7 +13,7 @@ divide the dim is dropped (never an error).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 from jax.sharding import NamedSharding

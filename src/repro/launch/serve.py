@@ -35,6 +35,21 @@ def main():
     ap.add_argument("--quant", default="bf16",
                     choices=["bf16", "int8_dequant", "int8_fused",
                              "int4_dequant", "int4_fused"])
+    ap.add_argument("--weights", default=None,
+                    choices=["bf16", "int8", "int4", "int8_dequant",
+                             "int8_fused", "int4_dequant", "int4_fused"],
+                    help="weight quantisation path (alias for --quant; "
+                         "bare 'int8'/'int4' select the fused "
+                         "realised-savings path)")
+    ap.add_argument("--kv-quant", default="none", choices=["none", "int8"],
+                    help="KV cache quantisation: int8 stores codes + "
+                         "per-(token, head) f32 scales — on --paged the "
+                         "scales ride parallel pool slabs sharing the "
+                         "block table, and --decode-backend pallas "
+                         "dequantises inside the fused kernel's block "
+                         "loads (realised traffic cut); the gather "
+                         "route materialises a dequantised view "
+                         "(bnb-style, stored-only cut)")
     ap.add_argument("--mode", default="streamed", choices=["streamed", "fused"])
     ap.add_argument("--decode-backend", default="sdpa",
                     choices=["sdpa", "math", "split_kv", "pallas"],
@@ -143,6 +158,9 @@ def main():
                     help="with --trace: print the full SLO report as "
                          "JSON instead of the one-line summary")
     args = ap.parse_args()
+    if args.weights:
+        args.quant = {"int8": "int8_fused",
+                      "int4": "int4_fused"}.get(args.weights, args.weights)
     if args.trace:
         args.continuous = True
     if args.prefix_cache:
@@ -157,7 +175,10 @@ def main():
         cfg = cfg.reduced()
     model = Model(cfg, decode_backend=args.decode_backend)
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = DecodeEngine(model, params, quant_path=args.quant)
+    import jax.numpy as jnp
+    engine = DecodeEngine(
+        model, params, quant_path=args.quant,
+        kv_dtype=jnp.int8 if args.kv_quant == "int8" else None)
 
     if args.trace:
         return serve_trace(engine, cfg, args)
@@ -334,12 +355,22 @@ def serve_continuous(engine: DecodeEngine, cfg, args):
             tb = serving_traffic_bytes(res.step_kv_blocks, cfg,
                                        page_size=args.page_size,
                                        n_slots=args.slots,
-                                       max_blocks=max_blocks)
+                                       max_blocks=max_blocks,
+                                       kv_quant=args.kv_quant)
             route = "fused-in-place" if backend == "pallas" else "gather+sdpa"
             moved = tb["fused"] if backend == "pallas" else tb["gather_sdpa"]
+            quant_note = (f", kv_quant={args.kv_quant} "
+                          f"floor {tb['floor'] / 1024:.1f} KiB"
+                          if args.kv_quant != "none" else "")
             print(f"per-step KV traffic ({route}): {moved / 1024:.1f} KiB "
                   f"(fused would move {tb['fused'] / 1024:.1f}, gather "
-                  f"{tb['gather_sdpa'] / 1024:.1f})")
+                  f"{tb['gather_sdpa'] / 1024:.1f}{quant_note})")
+    if args.quant != "bf16" or args.kv_quant != "none":
+        from repro.quant import tree_weight_traffic
+        wb = tree_weight_traffic(engine.params)
+        print(f"quantised serving: weights={args.quant} "
+              f"kv={args.kv_quant}; per-step weight stream "
+              f"{wb / 1024:.1f} KiB")
     compiled = (f"compiled {res.step_cache_size}x"
                 if res.step_cache_size is not None else
                 "compile count n/a (staged/eager executors)")

@@ -22,14 +22,14 @@ Strategies encoded here:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.launch.mesh import dp_axes, dp_size, tp_size
+from repro.launch.mesh import dp_axes, tp_size
 from repro.quant.quantize import QuantizedTensor
 
 

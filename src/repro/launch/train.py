@@ -12,12 +12,10 @@ checkpoints.  On a TPU fleet each process calls
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
 
 from repro.configs import get_config
-from repro.launch import sharding as shd
 from repro.launch.hints import activation_hints
 from repro.launch.mesh import make_test_mesh
 from repro.models.model import Model

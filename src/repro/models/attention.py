@@ -295,21 +295,39 @@ def _decode_attend(q, k_read, v_read, mask, cfg: ArchConfig, backend: str,
     (§6) is identical in both layouts, and this is the ONE place backend
     routing happens.  ``paged`` is the
     ``(k_pool, v_pool, block_table, lengths)`` tuple of the paged cache
-    (``k_read``/``v_read`` are None then): ``backend="pallas"`` routes
-    to the fused paged kernel, which reads pages in place through the
-    block table — no virtual view is ever materialised — while every
-    other backend runs over the gathered ``paged_view`` reference."""
+    (``k_read``/``v_read`` are None then), or the 6-tuple
+    ``(..., k_scale_pool, v_scale_pool)`` of an int8-quantised pool:
+    ``backend="pallas"`` routes to the fused paged kernel, which reads
+    pages in place through the block table — no virtual view is ever
+    materialised, and on the quantised pool the codes dequantise
+    in-register inside the kernel's block loads (the traffic cut is
+    *realised*) — while every other backend runs over the gathered
+    ``paged_view`` reference; the quantised gather route materialises a
+    dequantised model-dtype view first (bnb-style: stored bytes shrink
+    but the per-step read traffic does not)."""
     if paged is not None:
-        k_pool, v_pool, block_table, lengths = paged
+        k_pool, v_pool, block_table, lengths = paged[:4]
+        ks_pool, vs_pool = paged[4:] if len(paged) == 6 else (None, None)
         if backend == "pallas":
             from repro.kernels.paged_decode_attention import ops as pda_ops
             B = q.shape[0]
             o = pda_ops.paged_decode_attention(q[:, 0], k_pool, v_pool,
-                                               block_table, lengths)
+                                               block_table, lengths,
+                                               k_scale_pool=ks_pool,
+                                               v_scale_pool=vs_pool)
             return o.reshape(B, 1,
                              cfg.n_heads * cfg.head_dim).astype(out_dtype)
-        k_read = paged_view(k_pool, block_table)
-        v_read = paged_view(v_pool, block_table)
+        if ks_pool is not None:
+            from repro.quant import kv as kvq
+            k_read = kvq.dequantize_kv(paged_view(k_pool, block_table),
+                                       paged_view(ks_pool, block_table),
+                                       out_dtype)
+            v_read = kvq.dequantize_kv(paged_view(v_pool, block_table),
+                                       paged_view(vs_pool, block_table),
+                                       out_dtype)
+        else:
+            k_read = paged_view(k_pool, block_table)
+            v_read = paged_view(v_pool, block_table)
     if backend == "sdpa":
         return _sdpa_decode(q, k_read, v_read, mask, cfg,
                             k_scale=k_scale, v_scale=v_scale).astype(out_dtype)
@@ -395,7 +413,8 @@ def attention_decode_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
                            pos: jnp.ndarray, mask: jnp.ndarray,
                            angles: jnp.ndarray, cfg: ArchConfig,
                            apply_rope_fn, backend: str = "sdpa",
-                           active=None):
+                           active=None, k_scale_pool=None,
+                           v_scale_pool=None):
     """One-token decode through a paged KV cache.
 
     x (B,1,D); k_pool/v_pool (n_pages, page_size, Hkv, hd);
@@ -412,7 +431,14 @@ def attention_decode_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
     redirects inactive lanes' writes to the garbage page and freezes
     their position (horizon-K fused ticks: lanes that finish mid-horizon
     stop touching their allocated pages).  Returns
-    (out, new_k_pool, new_v_pool).
+    (out, new_k_pool, new_v_pool[, new_k_scale_pool, new_v_scale_pool]).
+
+    k_scale_pool/v_scale_pool (n_pages, page_size, Hkv) switch the pool
+    to the int8-quantised layout: the new row is quantised on write
+    (codes into k_pool, per-head scale into k_scale_pool, same page/off
+    — the scale pools share the block table), and reads dequantise per
+    route (in-register in the fused kernel; a materialised model-dtype
+    view on the gather reference).
 
     ``backend="pallas"`` runs the fused paged kernel
     (kernels/paged_decode_attention): the gather is fused into the SDPA
@@ -420,7 +446,6 @@ def attention_decode_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
     *allocated* pages instead of 3x the constant virtual view.  Every
     other backend takes the gather+SDPA reference route through the
     materialised ``paged_view``."""
-    B = x.shape[0]
     q, k_new, v_new = _project_qkv(p, x, cfg)
     q = apply_rope_fn(q, angles)
     k_new = apply_rope_fn(k_new, angles)
@@ -430,21 +455,35 @@ def attention_decode_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
     if active is not None:
         page = jnp.where(active, page, 0)   # 0 = reserved garbage page
     off = pos % page_size
+    quantized = k_scale_pool is not None
+    if quantized:
+        from repro.quant import kv as kvq
+        k_new, ks = kvq.quantize_kv_write(k_new)
+        v_new, vs = kvq.quantize_kv_write(v_new)
+        k_scale_pool = k_scale_pool.at[page, off].set(ks[:, 0])
+        v_scale_pool = v_scale_pool.at[page, off].set(vs[:, 0])
     k_pool = k_pool.at[page, off].set(k_new[:, 0].astype(k_pool.dtype))
     v_pool = v_pool.at[page, off].set(v_new[:, 0].astype(v_pool.dtype))
     # routing (fused in-place kernel vs gathered-view reference) lives in
     # _decode_attend; a slot's live length is pos+1 (the row just
     # written), matching decode_mask(pos, ...) exactly
+    paged = (k_pool, v_pool, block_table, pos + 1)
+    if quantized:
+        paged = paged + (k_scale_pool, v_scale_pool)
     out = _decode_attend(q, None, None, mask, cfg, backend, x.dtype,
-                         paged=(k_pool, v_pool, block_table, pos + 1))
+                         paged=paged)
     from repro.quant.paths import matmul
-    return matmul(out, p["wo"]), k_pool, v_pool
+    out = matmul(out, p["wo"])
+    if quantized:
+        return out, k_pool, v_pool, k_scale_pool, v_scale_pool
+    return out, k_pool, v_pool
 
 
 def attention_prefill_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
                             v_pool: jnp.ndarray, slot_pages: jnp.ndarray,
                             start_pos: jnp.ndarray, angles: jnp.ndarray,
-                            cfg: ArchConfig, apply_rope_fn):
+                            cfg: ArchConfig, apply_rope_fn,
+                            k_scale_pool=None, v_scale_pool=None):
     """Prefill one chunk of ONE session through the paged cache.
 
     x (1, C, D) is the chunk's hidden states; ``slot_pages``
@@ -454,7 +493,11 @@ def attention_prefill_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
     attends causally over the cached prefix + itself through the
     gathered view — exact math (masked positions contribute exact
     zeros), so chunked prefill is token-identical to whole-prompt
-    prefill.  Returns (out (1, C, D), new_k_pool, new_v_pool)."""
+    prefill.  k_scale_pool/v_scale_pool select the int8-quantised pool
+    layout: the chunk quantises per token on write and the attention
+    reads a dequantised view, so quantisation commutes with chunking
+    (chunked == whole-prompt stays exact).  Returns
+    (out (1, C, D), new_k_pool, new_v_pool[, new scale pools])."""
     _, C, _ = x.shape
     page_size = k_pool.shape[1]
     q, k_new, v_new = _project_qkv(p, x, cfg)
@@ -463,17 +506,33 @@ def attention_prefill_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
     n_chunk_pages = -(-C // page_size)
     pad = n_chunk_pages * page_size - C
 
-    def to_pages(t):          # (1, C, Hkv, hd) -> (n_pages_c, page, Hkv, hd)
-        t = jnp.pad(t[0], ((0, pad), (0, 0), (0, 0)))
-        return t.reshape(n_chunk_pages, page_size,
-                         t.shape[1], t.shape[2]).astype(k_pool.dtype)
+    def to_pages(t, dtype):   # (1, C, ...) -> (n_pages_c, page, ...)
+        t = jnp.pad(t[0], ((0, pad),) + ((0, 0),) * (t.ndim - 2))
+        return t.reshape((n_chunk_pages, page_size)
+                         + t.shape[1:]).astype(dtype)
 
     first = start_pos // page_size
     idx = jax.lax.dynamic_slice_in_dim(slot_pages, first, n_chunk_pages)
-    k_pool = k_pool.at[idx].set(to_pages(k_new))
-    v_pool = v_pool.at[idx].set(to_pages(v_new))
-    k_view = paged_view(k_pool, slot_pages[None, :])
-    v_view = paged_view(v_pool, slot_pages[None, :])
+    quantized = k_scale_pool is not None
+    if quantized:
+        from repro.quant import kv as kvq
+        k_new, ks = kvq.quantize_kv_write(k_new)
+        v_new, vs = kvq.quantize_kv_write(v_new)
+        k_scale_pool = k_scale_pool.at[idx].set(to_pages(ks, jnp.float32))
+        v_scale_pool = v_scale_pool.at[idx].set(to_pages(vs, jnp.float32))
+    k_pool = k_pool.at[idx].set(to_pages(k_new, k_pool.dtype))
+    v_pool = v_pool.at[idx].set(to_pages(v_new, v_pool.dtype))
+    if quantized:
+        from repro.quant import kv as kvq
+        k_view = kvq.dequantize_kv(paged_view(k_pool, slot_pages[None, :]),
+                                   paged_view(k_scale_pool,
+                                              slot_pages[None, :]), x.dtype)
+        v_view = kvq.dequantize_kv(paged_view(v_pool, slot_pages[None, :]),
+                                   paged_view(v_scale_pool,
+                                              slot_pages[None, :]), x.dtype)
+    else:
+        k_view = paged_view(k_pool, slot_pages[None, :])
+        v_view = paged_view(v_pool, slot_pages[None, :])
     virtual = k_view.shape[1]
     qpos = start_pos + jnp.arange(C)
     mask = jnp.arange(virtual)[None, :] <= qpos[:, None]      # (C, virtual)
@@ -482,4 +541,7 @@ def attention_prefill_paged(p: Params, x: jnp.ndarray, k_pool: jnp.ndarray,
     probs = jax.nn.softmax(scores, axis=-1)
     out = _gqa_out(probs, v_view.astype(q.dtype), cfg).astype(x.dtype)
     from repro.quant.paths import matmul
-    return matmul(out, p["wo"]), k_pool, v_pool
+    out = matmul(out, p["wo"])
+    if quantized:
+        return out, k_pool, v_pool, k_scale_pool, v_scale_pool
+    return out, k_pool, v_pool

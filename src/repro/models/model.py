@@ -289,7 +289,8 @@ class Model:
     def init_cache(self, batch_size: int, max_len: int,
                    kv_dtype=None, slotted: bool = False,
                    paged: bool = False, page_size: int = 16,
-                   n_pages: Optional[int] = None) -> Cache:
+                   n_pages: Optional[int] = None,
+                   kv_quant: Optional[str] = None) -> Cache:
         """KV/state cache.  ``slotted=True`` makes ``pos`` a (batch,)
         vector of per-slot positions — the continuous-batching layout
         where each batch row is an independent session slot and the
@@ -309,8 +310,21 @@ class Model:
         slots' block tables may alias the SAME physical page (prefix
         sharing): aliased pages are read-only by convention — the
         scheduler CoW-copies (``copy_kv_page``) before any write could
-        land in one."""
+        land in one.
+
+        ``kv_quant="int8"`` (equivalently ``kv_dtype=jnp.int8``) stores
+        K/V as int8 codes with per-(token, head) float32 scales.  On
+        paged caches the scales ride parallel ``k_scale``/``v_scale``
+        pools of shape (L, n_pages, page_size, Hkv) sharing the block
+        table, so a page id addresses codes and scales together —
+        allocation, CoW, tiering, and prefix sharing all work unchanged
+        page-at-a-time."""
         cfg = self.cfg
+        if kv_quant is not None:
+            if kv_quant not in ("none", "int8"):
+                raise ValueError(f"kv_quant must be none|int8, got {kv_quant!r}")
+            if kv_quant == "int8":
+                kv_dtype = jnp.int8
         kv_dtype = kv_dtype or self.dtype
         if paged:
             slotted = True
@@ -322,9 +336,6 @@ class Model:
             if cfg.sliding_window:
                 raise NotImplementedError(
                     "paged KV + sliding-window (ring) caches not supported")
-            if kv_dtype == jnp.int8:
-                raise NotImplementedError(
-                    "paged KV + int8-quantised cache not supported")
             assert page_size >= 1
             max_blocks = -(-max_len // page_size)
             if n_pages is None:
@@ -332,11 +343,17 @@ class Model:
             assert n_pages >= 2, "need the garbage page plus >=1 real page"
             shape = (cfg.n_layers, n_pages, page_size,
                      cfg.n_kv_heads, cfg.head_dim)
-            return {"k": jnp.zeros(shape, kv_dtype),
-                    "v": jnp.zeros(shape, kv_dtype),
-                    "pos": jnp.zeros((batch_size,), jnp.int32),
-                    "block_table": jnp.zeros((batch_size, max_blocks),
-                                             jnp.int32)}
+            cache = {"k": jnp.zeros(shape, kv_dtype),
+                     "v": jnp.zeros(shape, kv_dtype),
+                     "pos": jnp.zeros((batch_size,), jnp.int32),
+                     "block_table": jnp.zeros((batch_size, max_blocks),
+                                              jnp.int32)}
+            if kv_dtype == jnp.int8:
+                # scale pools share the block table: page p's codes in
+                # k[:, p] pair with its scales in k_scale[:, p]
+                cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+                cache["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            return cache
         pos = (jnp.zeros((batch_size,), jnp.int32) if slotted
                else jnp.zeros((), jnp.int32))
         if cfg.family in ("dense", "vlm", "audio", "moe"):
@@ -384,37 +401,48 @@ class Model:
         assert "block_table" in cache, "copy_kv_page targets paged caches"
         src = jnp.asarray(src, jnp.int32)
         dst = jnp.asarray(dst, jnp.int32)
-        return dict(cache,
-                    k=cache["k"].at[:, dst].set(cache["k"][:, src]),
-                    v=cache["v"].at[:, dst].set(cache["v"][:, src]))
+        return dict(cache, **{
+            key: cache[key].at[:, dst].set(cache[key][:, src])
+            for key in self._page_slab_keys(cache)})
+
+    @staticmethod
+    def _page_slab_keys(cache: Cache) -> Tuple[str, ...]:
+        """Cache keys indexed (L, n_pages, ...) — everything a page id
+        addresses.  Quantised pools carry scale slabs alongside codes."""
+        if "k_scale" in cache:
+            return ("k", "v", "k_scale", "v_scale")
+        return ("k", "v")
 
     def save_kv_pages(self, cache: Cache, pages: jnp.ndarray
-                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                      ) -> Tuple[jnp.ndarray, ...]:
         """Gather ``pages`` (a (P,) id vector) out of the paged pool —
-        every layer's K and V rows — as two (L, P, page, Hkv, hd)
-        slabs: the device→host half of KV-page tiering
-        (serving/memory/tiers.py).  ``pages`` is traced, so one
+        every layer's K and V rows — as (L, P, page, ...) slabs: the
+        device→host half of KV-page tiering (serving/memory/tiers.py).
+        Returns one slab per page-indexed pool: (k, v) for bf16 caches,
+        (k, v, k_scale, v_scale) for int8-quantised ones — codes and
+        scales move together, bit-exact.  ``pages`` is traced, so one
         compiled program serves every save of the same P; callers pad
         P to a power of two with the garbage page to bound the program
         count."""
         assert "block_table" in cache, "save_kv_pages targets paged caches"
         pages = jnp.asarray(pages, jnp.int32)
-        return cache["k"][:, pages], cache["v"][:, pages]
+        return tuple(cache[key][:, pages]
+                     for key in self._page_slab_keys(cache))
 
     def restore_kv_pages(self, cache: Cache, pages: jnp.ndarray,
-                         k_pages: jnp.ndarray, v_pages: jnp.ndarray
-                         ) -> Cache:
+                         *slabs: jnp.ndarray) -> Cache:
         """Scatter saved KV slabs back into pool ``pages`` — the
-        host→device half of tiering.  Padding lanes target the garbage
-        page (a write sink by contract; duplicate scatter indices onto
-        it are harmless)."""
+        host→device half of tiering.  ``slabs`` must match
+        ``save_kv_pages`` order ((k, v) or (k, v, k_scale, v_scale)).
+        Padding lanes target the garbage page (a write sink by
+        contract; duplicate scatter indices onto it are harmless)."""
         assert "block_table" in cache, "restore_kv_pages targets paged caches"
+        keys = self._page_slab_keys(cache)
+        assert len(slabs) == len(keys), (len(slabs), keys)
         pages = jnp.asarray(pages, jnp.int32)
-        return dict(cache,
-                    k=cache["k"].at[:, pages].set(
-                        k_pages.astype(cache["k"].dtype)),
-                    v=cache["v"].at[:, pages].set(
-                        v_pages.astype(cache["v"].dtype)))
+        return dict(cache, **{
+            key: cache[key].at[:, pages].set(slab.astype(cache[key].dtype))
+            for key, slab in zip(keys, slabs)})
 
     # ------------------------------------------------------------------
     # prefill
@@ -483,9 +511,6 @@ class Model:
             raise NotImplementedError(
                 f"prefill_into_slot targets attention families, got "
                 f"{cfg.family!r}")
-        if "k_scale" in cache:
-            raise NotImplementedError(
-                "prefill_into_slot: int8-quantised KV not yet supported")
         if "block_table" in cache:
             # paged cache: the whole prompt is one chunk (the scheduler
             # must have pointed block_table[slot] at allocated pages)
@@ -499,13 +524,22 @@ class Model:
         assert S <= kv_len, (S, kv_len)
         zero = jnp.int32(0)
         start = (zero, jnp.asarray(slot, jnp.int32), zero, zero, zero)
-        cache = dict(
-            cache,
+        updates: Cache = {"pos": cache["pos"].at[slot].set(S)}
+        if "k_scale" in cache:
+            from repro.quant import kv as kvq
+            k, ks = kvq.quantize_kv_write(k)
+            v, vs = kvq.quantize_kv_write(v)
+            updates.update(
+                k_scale=jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks, start[:-1]),
+                v_scale=jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs, start[:-1]))
+        updates.update(
             k=jax.lax.dynamic_update_slice(
                 cache["k"], k.astype(cache["k"].dtype), start),
             v=jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), start),
-            pos=cache["pos"].at[slot].set(S))
+                cache["v"], v.astype(cache["v"].dtype), start))
+        cache = dict(cache, **updates)
         x_last = apply_norm(x[:, -1:], params["final_norm"])
         return self.lm_logits(params, x_last), cache
 
@@ -537,23 +571,30 @@ class Model:
         angles = self.angle_fn(positions)
         slot_pages = cache["block_table"][slot]
 
+        quantized_kv = "k_scale" in cache
+        slab_keys = self._page_slab_keys(cache)
+
         def body(h, inp):
-            bp, kp, vp = inp
-            a_out, kp, vp = attn.attention_prefill_paged(
-                bp["attn"], apply_norm(h, bp["norm1"]), kp, vp, slot_pages,
-                start_pos, angles, cfg, apply_rope)
+            bp, pools = inp[0], inp[1:]
+            res = attn.attention_prefill_paged(
+                bp["attn"], apply_norm(h, bp["norm1"]), pools[0], pools[1],
+                slot_pages, start_pos, angles, cfg, apply_rope,
+                k_scale_pool=pools[2] if quantized_kv else None,
+                v_scale_pool=pools[3] if quantized_kv else None)
+            a_out, pools = res[0], res[1:]
             h = h + a_out
             hn = apply_norm(h, bp["norm2"])
             if cfg.family == "moe":
                 m_out, _ = moe.moe_forward(bp["moe"], hn, cfg)
             else:
                 m_out = mlp_forward(bp["mlp"], hn, cfg.mlp_gated)
-            return h + m_out, (kp, vp)
+            return h + m_out, pools
 
-        x, (k, v) = jax.lax.scan(body, x,
-                                 (params["blocks"], cache["k"], cache["v"]))
-        cache = dict(cache, k=k, v=v,
-                     pos=cache["pos"].at[slot].set(start_pos + C))
+        x, pools = jax.lax.scan(
+            body, x,
+            (params["blocks"],) + tuple(cache[key] for key in slab_keys))
+        cache = dict(cache, pos=cache["pos"].at[slot].set(start_pos + C),
+                     **dict(zip(slab_keys, pools)))
         x_last = apply_norm(x[:, -1:], params["final_norm"])
         return self.lm_logits(params, x_last), cache
 
@@ -585,19 +626,22 @@ class Model:
 
     def _attn_block_decode_paged(self, bp, x, k_pool, v_pool, block_table,
                                  pos, mask, angles, backend=None,
-                                 active=None):
+                                 active=None, k_scale_pool=None,
+                                 v_scale_pool=None):
         cfg = self.cfg
-        a_out, k_pool, v_pool = attn.attention_decode_paged(
+        res = attn.attention_decode_paged(
             bp["attn"], apply_norm(x, bp["norm1"]), k_pool, v_pool,
             block_table, pos, mask, angles, cfg, apply_rope,
-            backend=backend or self.decode_backend, active=active)
+            backend=backend or self.decode_backend, active=active,
+            k_scale_pool=k_scale_pool, v_scale_pool=v_scale_pool)
+        a_out, pools = res[0], res[1:]
         x = x + a_out
         h = apply_norm(x, bp["norm2"])
         if cfg.family == "moe":
             m_out, _ = moe.moe_forward(bp["moe"], h, cfg)
         else:
             m_out = mlp_forward(bp["mlp"], h, cfg.mlp_gated)
-        return x + m_out, k_pool, v_pool
+        return (x + m_out,) + pools
 
     def _mamba_block_decode(self, bp, x, h, conv):
         y, h, conv = mamba2.mamba_decode_step(
@@ -664,16 +708,21 @@ class Model:
         if cfg.family in ("dense", "vlm", "audio", "moe"):
             if paged:
                 block_table = cache["block_table"]
+                slab_keys = self._page_slab_keys(cache)
 
                 def body(h, inp):
-                    bp, kp, vp = inp
-                    h, kp, vp = self._attn_block_decode_paged(
-                        bp, h, kp, vp, block_table, pos, mask, angles,
-                        active=active)
-                    return h, (kp, vp)
-                x, (k, v) = jax.lax.scan(
-                    body, x, (params["blocks"], cache["k"], cache["v"]))
-                new_cache.update(k=k, v=v)
+                    bp, pools = inp[0], inp[1:]
+                    res = self._attn_block_decode_paged(
+                        bp, h, pools[0], pools[1], block_table, pos, mask,
+                        angles, active=active,
+                        k_scale_pool=pools[2] if quantized_kv else None,
+                        v_scale_pool=pools[3] if quantized_kv else None)
+                    return res[0], res[1:]
+                x, pools = jax.lax.scan(
+                    body, x,
+                    (params["blocks"],)
+                    + tuple(cache[key] for key in slab_keys))
+                new_cache.update(zip(slab_keys, pools))
             elif quantized_kv:
                 def body(h, inp):
                     bp, kc, vc, ks, vs = inp

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.quant.quantize import QuantizedTensor, dequantize, unpack_int4
+from repro.quant.quantize import QuantizedTensor, dequantize
 
 
 def matmul(x: jnp.ndarray, w) -> jnp.ndarray:

@@ -1,9 +1,10 @@
 from repro.serving.engine import DecodeEngine, GenerationResult  # noqa: F401
 from repro.serving.sampling import sample  # noqa: F401
-from repro.serving.scheduler import (BlockAllocator,  # noqa: F401
-                                     ContinuousResult, PrefixCache,
-                                     SessionRequest, SessionResult,
-                                     SlotScheduler, jit_cache_size)
+from repro.serving.memory import BlockAllocator, PrefixCache  # noqa: F401
+from repro.serving.programs import jit_cache_size  # noqa: F401
+from repro.serving.scheduler import SlotScheduler  # noqa: F401
+from repro.serving.session import (ContinuousResult,  # noqa: F401
+                                   SessionRequest, SessionResult)
 from repro.serving.trace import (SessionClass, Trace,  # noqa: F401
                                  TraceConfig, bursty_config,
                                  generate_trace, poisson_config,

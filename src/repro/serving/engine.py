@@ -16,7 +16,6 @@ Generation offers two drivers:
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Dict, List, Optional
 

@@ -37,7 +37,10 @@ import numpy as np
 from repro.serving.memory.allocator import GARBAGE_PAGE, BlockAllocator
 from repro.serving.memory.prefix import PrefixCache
 
-Blob = Tuple[np.ndarray, np.ndarray]      # one page's (k, v), host-side
+# One page's host-side slabs in Model.save_kv_pages order: (k, v) for
+# bf16 pools, (k, v, k_scale, v_scale) for int8-quantised ones — the
+# tier is slab-structure-agnostic, codes and scales park together.
+Blob = Tuple[np.ndarray, ...]
 
 
 def _pad_pow2(n: int) -> int:
@@ -56,9 +59,8 @@ def save_kv_blobs(save_jit, cache, pages: Sequence[int]) -> List[Blob]:
     n = len(pages)
     ids = np.full((_pad_pow2(n),), GARBAGE_PAGE, np.int32)
     ids[:n] = pages
-    k, v = save_jit(cache, jnp.asarray(ids))
-    k, v = np.asarray(k), np.asarray(v)
-    return [(k[:, i], v[:, i]) for i in range(n)]
+    slabs = [np.asarray(s) for s in save_jit(cache, jnp.asarray(ids))]
+    return [tuple(s[:, i] for s in slabs) for i in range(n)]
 
 
 def restore_kv_blobs(restore_jit, cache, pages: Sequence[int],
@@ -70,11 +72,12 @@ def restore_kv_blobs(restore_jit, cache, pages: Sequence[int],
     pad = _pad_pow2(n)
     ids = np.full((pad,), GARBAGE_PAGE, np.int32)
     ids[:n] = pages
-    zero = np.zeros_like(blobs[0][0])
-    k = np.stack([b[0] for b in blobs] + [zero] * (pad - n), axis=1)
-    v = np.stack([b[1] for b in blobs] + [zero] * (pad - n), axis=1)
-    return restore_jit(cache, jnp.asarray(ids), jnp.asarray(k),
-                       jnp.asarray(v))
+    slabs = [
+        np.stack([b[c] for b in blobs]
+                 + [np.zeros_like(blobs[0][c])] * (pad - n), axis=1)
+        for c in range(len(blobs[0]))]
+    return restore_jit(cache, jnp.asarray(ids),
+                       *(jnp.asarray(s) for s in slabs))
 
 
 class PageStore:

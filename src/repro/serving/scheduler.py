@@ -24,13 +24,13 @@ import numpy as np
 
 from repro.core.dispatch import MODES, launch_count
 from repro.models.model import Model
-from repro.serving.memory import (GARBAGE_PAGE, BlockAllocator, PageStore,
-                                  PrefixCache, TieredPageStore, get_policy,
+from repro.serving.memory import (BlockAllocator, PageStore, PrefixCache,
+                                  TieredPageStore, get_policy,
                                   restore_kv_blobs, save_kv_blobs)
-from repro.serving.programs import SchedulerPrograms, jit_cache_size
+from repro.serving.programs import SchedulerPrograms
 from repro.serving.sampling import sample
-from repro.serving.session import (ContinuousResult, Event, SessionRequest,
-                                   SessionResult, _Session)
+from repro.serving.session import (ContinuousResult, Event,
+                                   SessionRequest, _Session)
 from repro.serving.vclock import VirtualClockMixin, build_k_ladder
 
 __all__ = [

@@ -19,8 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 

@@ -6,7 +6,6 @@ training: zero per-step host dispatch beyond the single launch).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

@@ -1,11 +1,10 @@
 """HLO collective parser + analytic model + roofline assembly."""
-import jax.numpy as jnp
 import pytest
 
 from repro.analysis import analytic
 from repro.analysis.hlo import (CollectiveOp, _shape_bytes,
                                 collective_summary, parse_collectives)
-from repro.analysis.roofline import RooflineRow, build_row, markdown_table
+from repro.analysis.roofline import build_row, markdown_table
 from repro.configs import SHAPES, get_config
 
 

@@ -1,15 +1,14 @@
 """Floor-model validation: exact reproduction of the paper's own numbers
 (Table 9, §3.3, §3.4) + hypothesis property tests on the invariants."""
-import math
 
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.configs import PAPER_MODELS, get_config, list_configs
+from repro.configs import get_config, list_configs
 from repro.core import floor as fl
 from repro.core.hardware import (GPU_A100, GPU_H100, GPU_L4, GPU_L40S,
-                                 TPU_V5E, get_chip)
+                                 TPU_V5E)
 
 QWEN = get_config("qwen2.5-7b")
 MISTRAL = get_config("mistral-7b-v0.3")

@@ -3,12 +3,10 @@ import json
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import get_config
 from repro.launch import hints
 from repro.launch import sharding as shd
-from jax.sharding import PartitionSpec as P
 
 
 class FakeMesh:

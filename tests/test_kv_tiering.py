@@ -18,7 +18,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import Model
 from repro.serving import SessionRequest, SlotScheduler
-from repro.serving.memory import (HostPagePool, PageStore, TieredPageStore,
+from repro.serving.memory import (HostPagePool, TieredPageStore,
                                   get_policy, restore_kv_blobs,
                                   save_kv_blobs)
 from repro.serving.memory.tiers import _pad_pow2

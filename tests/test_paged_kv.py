@@ -78,9 +78,19 @@ class TestPagedCache:
         over = m.init_cache(4, 64, paged=True, page_size=8, n_pages=9)
         assert over["k"].size < full["k"].size / 3
 
+    def test_int8_paged_adds_scale_pools(self):
+        # paged + int8 is now supported: scale slabs ride parallel pools
+        # sharing the block table (one f32 scale per (token, head))
+        cache = Model(CFG).init_cache(3, 32, paged=True, page_size=8,
+                                      kv_dtype=jnp.int8)
+        assert cache["k"].dtype == jnp.int8
+        assert cache["k_scale"].shape == cache["k"].shape[:-1]
+        assert cache["k_scale"].dtype == jnp.float32
+        assert cache["v_scale"].shape == cache["v"].shape[:-1]
+
     def test_rejects_unsupported(self):
-        with pytest.raises(NotImplementedError):
-            Model(CFG).init_cache(2, 32, paged=True, kv_dtype=jnp.int8)
+        with pytest.raises(ValueError):
+            Model(CFG).init_cache(2, 32, paged=True, kv_quant="fp4")
         with pytest.raises(NotImplementedError):
             Model(CFG.replace(sliding_window=8)).init_cache(2, 32, paged=True)
         with pytest.raises(NotImplementedError):

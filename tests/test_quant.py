@@ -7,7 +7,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import floor as fl
 from repro.models import Model
-from repro.quant import (QuantizedTensor, dequantize, quantize,
+from repro.quant import (dequantize, quantize,
                          quantize_tree, tree_weight_traffic)
 
 KEY = jax.random.PRNGKey(7)

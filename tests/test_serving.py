@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core.dispatch import MODES, StepProgram
+from repro.core.dispatch import MODES
 from repro.models import Model
 from repro.serving import DecodeEngine
 

@@ -21,7 +21,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import Model
-from repro.serving import (SessionClass, SessionRequest, SlotScheduler,
+from repro.serving import (SessionRequest, SlotScheduler,
                            bursty_config, generate_trace, poisson_config,
                            slo_report, trace_from_text, trace_to_text,
                            validate_trace)
