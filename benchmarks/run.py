@@ -40,6 +40,7 @@ DESCRIPTIONS = {
     "table14": "host-DRAM KV tier: park/restore vs re-prefill",
     "table15": "quantised KV pages + int4 weights: realised vs analytic "
                "traffic per route",
+    "table16": "fault injection + graceful degradation: chaos replay A/B",
 }
 
 
@@ -70,7 +71,8 @@ def main() -> None:
                             table8_accounting, table9_continuous_batching,
                             table10_paged_kv, table11_launch_overhead,
                             table12_prefix_sharing, table13_slo_load,
-                            table14_kv_tiering, table15_quant_serving)
+                            table14_kv_tiering, table15_quant_serving,
+                            table16_fault_recovery)
     suites = {
         "table1": table1_rfloor_matrix.run,
         "table2": lambda: table2_dispatch_ab.run(quick=quick),
@@ -86,6 +88,7 @@ def main() -> None:
         "table13": lambda: table13_slo_load.run(quick=quick),
         "table14": lambda: table14_kv_tiering.run(quick=quick),
         "table15": lambda: table15_quant_serving.run(quick=quick),
+        "table16": lambda: table16_fault_recovery.run(quick=quick),
     }
     assert set(suites) == set(DESCRIPTIONS), "--list out of sync"
     if only is not None and only not in suites:

@@ -35,7 +35,11 @@ tier-on (spill).  Reports goodput-under-SLO, interactive-class TTFT
 p95, preemptions, pages migrated; asserts token identity and that the
 tier strictly reduces re-prefill work (prefill tokens dispatched)
 whenever it restored anything — the mechanism by which re-admission
-TTFT improves.
+TTFT improves.  A third arm adds restore-gate patience
+(``restore_patience=3``): the parked copy is held a few ticks instead
+of being superseded by the smaller 1-chunk re-prefill gate the moment
+the pool is tight, and realised restores must strictly improve while
+every stream stays identical.
 """
 from __future__ import annotations
 
@@ -177,7 +181,25 @@ def _wave_b(route, model, params, quick):
             f"{route}: {tier.tier_restores} restores but prefill work "
             f"did not drop ({tier.prefill_tokens} vs "
             f"{base.prefill_tokens})")
-    for name, res, rep in (("off", base, rep0), ("spill", tier, rep1)):
+    # restore-gate patience: hold a parked copy a bounded number of
+    # ticks instead of letting the (smaller) 1-chunk re-prefill gate
+    # supersede it the moment the pool is tight — realised restores
+    # must strictly improve, streams must not move
+    pat = _replay(model, params, trace, max_len=max_len, n_pages=n_pages,
+                  kv_tier="host", tier_policy="spill",
+                  host_pages=4 * n_pages, restore_patience=3)
+    rep2 = slo_report(pat, trace.classes)
+    for r in trace.requests:
+        np.testing.assert_array_equal(
+            base.tokens_for(r.session_id), pat.tokens_for(r.session_id),
+            err_msg=f"{r.session_id} diverged under patience ({route})")
+    assert pat.tier_restores > tier.tier_restores, (
+        f"{route}: patience did not improve realised restores "
+        f"({pat.tier_restores} vs {tier.tier_restores})")
+    assert pat.prefill_tokens < tier.prefill_tokens, (
+        f"{route}: extra restores did not cut re-prefill work")
+    for name, res, rep in (("off", base, rep0), ("spill", tier, rep1),
+                           ("patience3", pat, rep2)):
         emit(f"tier/{route}/bursty/{name}", rep["ttft"]["p95"] * 1e6,
              f"goodput={rep['goodput_tok_s']:.2f} "
              f"slo_frac={rep['slo_frac']:.3f} "
@@ -191,7 +213,8 @@ def _wave_b(route, model, params, quick):
          f"goodput_spill={rep1['goodput_tok_s']:.2f} "
          f"prefill_off={base.prefill_tokens} "
          f"prefill_spill={tier.prefill_tokens} "
-         f"restores={tier.tier_restores}")
+         f"restores={tier.tier_restores} "
+         f"restores_patience3={pat.tier_restores}")
 
 
 def run(quick: bool = False) -> None:

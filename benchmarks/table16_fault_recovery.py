@@ -1,0 +1,181 @@
+"""Table 16: fault injection + graceful degradation — the chaos A/B.
+
+A serving stack for physical-AI fleets fails in the field: a pinned
+host buffer's DMA times out, a parked KV blob is returned corrupt, a
+burst of admissions squeezes the page pool, a kernel regression emits
+NaN logits, a client disconnects mid-stream.  The robustness layer
+(serving/faults.py + the scheduler's guards) must turn each of those
+into a *bounded, accounted* degradation — retry with backoff, checksum
+reject + re-prefill, quarantine, terminal abort — without perturbing
+any other lane's token stream.
+
+This table replays the bursty two-class trace fault-free, then again
+with a seeded fault plan armed (same virtual clock, same arrivals), on
+both paged decode routes (gather+SDPA and fused Pallas).  Asserted per
+route:
+
+  * the plan actually bites: >= 3 distinct fault kinds fire;
+  * every session the plan did NOT terminate recovers token-identical
+    to the fault-free baseline — injected copy failures and poisoned
+    logits degrade to re-prefill/quarantine-requeue, never to a
+    different stream;
+  * every terminated session (abort) carries a terminal status, a
+    terminal event, and a token stream that is a strict prefix of its
+    baseline stream;
+  * retries are charged to the virtual clock (retry_backoff_s > 0
+    whenever a copy retried);
+  * device and host pools balance after the flushes — no fault path
+    leaks a page or a parked blob;
+  * the same --chaos-seed reproduces the identical plan text, fault
+    counters, and token streams, byte for byte.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import SlotScheduler, generate_trace, slo_report
+from repro.serving.faults import (FaultInjector, FaultPlanConfig,
+                                  generate_fault_plan, plan_to_text)
+from repro.serving.trace import bursty_config
+
+SLOTS = 2
+PAGE = 4
+CHUNK = 4
+CHAOS_SEED = 5       # fires save/restore failures, pressure, nan, abort
+
+
+def _cfg():
+    return get_config("qwen2.5-3b").reduced().replace(
+        vocab_size=512, d_model=64, d_ff=128, n_layers=2,
+        n_heads=4, n_kv_heads=2, head_dim=16, dtype="float32")
+
+
+def _replay(model, params, trace, *, max_len, n_pages, injector=None):
+    sched = SlotScheduler(
+        model, params, n_slots=SLOTS, max_len=max_len, paged=True,
+        page_size=PAGE, n_pages=n_pages, prefill_chunk=CHUNK,
+        prefix_cache=True, timed=False, shared_programs=True,
+        kv_tier="host", tier_policy="spill", host_pages=4 * n_pages,
+        fault_injector=injector, self_audit=injector is not None)
+    for r in trace.requests:
+        sched.submit(r)
+    return sched, sched.run()
+
+
+def _terminal_events(res):
+    return {sid for kind, sid, *_ in res.events
+            if kind in ("aborted", "failed", "expired")}
+
+
+def _route(route, model, params, quick):
+    cfg = model.cfg
+    trace = generate_trace(bursty_config(
+        seed=13, n_requests=10 if quick else 16,
+        vocab_size=cfg.vocab_size, rate_rps=25.0,
+        burst_len=5, burst_factor=10.0))
+    max_len = trace.max_len() + 1
+    # tight pool: preemption churn parks blobs (surface for corrupt /
+    # restore_fail) and keeps the admission gate busy (pool_pressure)
+    n_pages = 2 + -(-max_len // PAGE)
+    sched, base = _replay(model, params, trace,
+                          max_len=max_len, n_pages=n_pages)
+    assert base.pages_spilled > 0, (
+        f"{route}: fault-free run never parked — the chaos plan would "
+        f"have no copy path to attack")
+    rep0 = slo_report(base, trace.classes)
+    emit(f"fault/{route}/baseline", rep0["makespan_s"] * 1e6,
+         f"goodput={rep0['goodput_tok_s']:.2f} "
+         f"slo_frac={rep0['slo_frac']:.3f} "
+         f"preemptions={base.preemptions} spilled={base.pages_spilled}")
+
+    plan = generate_fault_plan(
+        FaultPlanConfig(seed=CHAOS_SEED, n_faults=8 if quick else 12,
+                        horizon_s=round(base.now_s, 6)),
+        session_ids=[r.session_id for r in trace.requests])
+    sched, chaos = _replay(model, params, trace, max_len=max_len,
+                           n_pages=n_pages,
+                           injector=FaultInjector(plan))
+    assert len(chaos.fault_counts) >= 3, (
+        f"{route}: plan only exercised {chaos.fault_counts} — need >= 3 "
+        f"distinct kinds for the A/B to mean anything")
+    terminal = _terminal_events(chaos)
+    for r in trace.requests:
+        b = base.tokens_for(r.session_id)
+        c = chaos.tokens_for(r.session_id)
+        s = chaos.sessions[r.session_id]
+        if s.status == "ok":
+            np.testing.assert_array_equal(
+                b, c, err_msg=f"{r.session_id} diverged under chaos "
+                              f"({route}) without a terminal event")
+            assert r.session_id not in terminal
+        else:
+            assert r.session_id in terminal, (
+                f"{r.session_id}: status {s.status} but no terminal event")
+            np.testing.assert_array_equal(
+                b[:len(c)], c,
+                err_msg=f"{r.session_id}: terminated stream is not a "
+                        f"prefix of its baseline ({route})")
+    if chaos.save_retries or chaos.restore_retries:
+        assert chaos.retry_backoff_s > 0, (
+            f"{route}: retries ran but charged nothing to the clock")
+    store = sched.store
+    sched.flush_prefix_cache()
+    store.flush_host()
+    assert store.allocator.n_free == n_pages - 1, (
+        f"{route}: device pages leaked under chaos")
+    assert store.host_used == 0, (
+        f"{route}: {store.host_used} host pages leaked under chaos")
+    rep1 = slo_report(chaos, trace.classes)
+    emit(f"fault/{route}/chaos", rep1["makespan_s"] * 1e6,
+         f"goodput={rep1['goodput_tok_s']:.2f} "
+         f"slo_frac={rep1['slo_frac']:.3f} "
+         f"faults={chaos.faults_injected} "
+         f"kinds={len(chaos.fault_counts)} "
+         f"retries={chaos.save_retries + chaos.restore_retries} "
+         f"backoff_ms={chaos.retry_backoff_s * 1e3:.2f} "
+         f"degraded={chaos.degraded_restores} "
+         f"corrupt={chaos.corrupt_blobs} "
+         f"quarantines={chaos.quarantines} "
+         f"dropped={chaos.aborted_sessions + chaos.failed_sessions + chaos.expired_sessions} "
+         f"balanced=True")
+
+    # byte-for-byte replay: same seed -> same schedule, same counters,
+    # same streams
+    plan2 = generate_fault_plan(
+        FaultPlanConfig(seed=CHAOS_SEED, n_faults=8 if quick else 12,
+                        horizon_s=round(base.now_s, 6)),
+        session_ids=[r.session_id for r in trace.requests])
+    assert plan_to_text(plan2) == plan_to_text(plan), (
+        f"{route}: fault plan generation is not deterministic")
+    _, chaos2 = _replay(model, params, trace, max_len=max_len,
+                        n_pages=n_pages, injector=FaultInjector(plan2))
+    assert chaos2.fault_counts == chaos.fault_counts, (
+        f"{route}: replay fired a different fault schedule")
+    for r in trace.requests:
+        np.testing.assert_array_equal(
+            chaos.tokens_for(r.session_id),
+            chaos2.tokens_for(r.session_id),
+            err_msg=f"{r.session_id}: chaos replay diverged ({route})")
+    assert chaos2.now_s == chaos.now_s, (
+        f"{route}: replay clock diverged")
+    emit(f"fault/{route}/replay", chaos2.now_s * 1e6,
+         f"faults={chaos2.faults_injected} identical=True")
+
+
+def run(quick: bool = False) -> None:
+    header("table16: fault injection + graceful degradation — chaos "
+           "replay vs fault-free baseline (paged gather / pallas)")
+    cfg = _cfg()
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    for route, model in (("gather", Model(cfg)),
+                         ("pallas", Model(cfg, decode_backend="pallas"))):
+        _route(route, model, params, quick)
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -34,7 +34,12 @@
 #           smoke-quant       the fully quantised serving stack: int8
 #                             KV pages + int4 weights on both paged
 #                             routes, incl. through the host tier
-#   tables  table10-quick ... table15-quick
+#           smoke-chaos       trace replay under a mixed seeded fault
+#                             plan (--fault-plan mixed) through the
+#                             host tier, both decode routes — retries,
+#                             quarantines and aborts must serve to
+#                             completion with clean recovery accounting
+#   tables  table10-quick ... table16-quick
 #                          quick benchmark sweeps; each --json run
 #                          leaves a bench_table*.json that CI uploads
 #                          as an artifact (exit 3 = a table's inline
@@ -142,6 +147,18 @@ run_smokes() {
             --kv-quant int8 --kv-tier host --tier-policy spill --slots 2 \
             --sessions 6 --prompt-len 8 --new-tokens 8 --page-size 4 \
             --pages 10 --host-pages 8 --prefill-chunk 4 --timed"
+
+    stage smoke-chaos bash -c "
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+            --trace bursty --sessions 8 --slots 2 --page-size 4 \
+            --pages 14 --prefill-chunk 4 --kv-tier host \
+            --tier-policy spill --host-pages 28 --fault-plan mixed \
+            --chaos-seed 7 &&
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced --paged \
+            --decode-backend pallas --trace bursty --sessions 8 --slots 2 \
+            --page-size 4 --pages 14 --prefill-chunk 4 --kv-tier host \
+            --tier-policy spill --host-pages 28 --fault-plan mixed \
+            --chaos-seed 7"
 }
 
 run_tables() {
@@ -166,6 +183,10 @@ run_tables() {
     stage table15-quick \
         python -m benchmarks.run --quick --only=table15 \
             --json bench_table15.json
+
+    stage table16-quick \
+        python -m benchmarks.run --quick --only=table16 \
+            --json bench_table16.json
 }
 
 case "$GROUP" in

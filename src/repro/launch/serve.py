@@ -157,6 +157,32 @@ def main():
     ap.add_argument("--slo-json", action="store_true",
                     help="with --trace: print the full SLO report as "
                          "JSON instead of the one-line summary")
+    # fault injection + graceful degradation (serving/faults.py)
+    ap.add_argument("--fault-plan", default=None,
+                    help="with --trace: arm a chaos plan against the "
+                         "replay — 'mixed' generates a seeded plan over "
+                         "every fault kind (--chaos-seed; same seed -> "
+                         "byte-identical schedule), anything else is "
+                         "read as a fault-plan file (plan_to_text "
+                         "format).  Injected copy failures retry with "
+                         "backoff then degrade to re-prefill, poisoned "
+                         "logits quarantine their lane, aborts free the "
+                         "session's slot and pages with a terminal "
+                         "event")
+    ap.add_argument("--chaos-seed", type=int, default=7,
+                    help="seed for --fault-plan mixed")
+    ap.add_argument("--retry-budget", type=int, default=2,
+                    help="retries per failed host-tier copy before the "
+                         "restore degrades to re-prefill (backoff is "
+                         "charged to the virtual clock)")
+    ap.add_argument("--session-ttl", type=float, default=None,
+                    help="per-session deadline in virtual seconds since "
+                         "arrival; overdue sessions are expired and "
+                         "their slot/pages freed")
+    ap.add_argument("--restore-patience", type=int, default=0,
+                    help="ticks a parked host copy is held while the "
+                         "page gate can't cover its restore before "
+                         "re-prefill admission supersedes it")
     args = ap.parse_args()
     if args.weights:
         args.quant = {"int8": "int8_fused",
@@ -248,6 +274,23 @@ def serve_trace(engine: DecodeEngine, cfg, args):
               vocab_size=cfg.vocab_size, rate_rps=args.rate)
     trace = generate_trace(tcfg)
     max_len = trace.max_len() + 1
+    injector = None
+    if args.fault_plan:
+        from repro.serving.faults import (FaultInjector, FaultPlanConfig,
+                                          generate_fault_plan,
+                                          plan_from_text, validate_plan)
+        sids = [r.session_id for r in trace.requests]
+        if args.fault_plan == "mixed":
+            horizon = round(max(r.arrival_s for r in trace.requests)
+                            + 0.25, 6)
+            plan = generate_fault_plan(
+                FaultPlanConfig(seed=args.chaos_seed, n_faults=12,
+                                horizon_s=horizon), session_ids=sids)
+        else:
+            with open(args.fault_plan) as fh:
+                plan = plan_from_text(fh.read())
+            validate_plan(plan)
+        injector = FaultInjector(plan)
     res = engine.generate_continuous(
         trace.requests, n_slots=args.slots, max_len=max_len,
         temperature=args.temperature, seed=args.seed,
@@ -258,7 +301,11 @@ def serve_trace(engine: DecodeEngine, cfg, args):
         prefix_cache=args.prefix_cache, adaptive_k=args.adaptive_k,
         priority_preemption=not args.no_priority_preemption,
         kv_tier=args.kv_tier, tier_policy=args.tier_policy,
-        host_pages=args.host_pages)
+        host_pages=args.host_pages,
+        fault_injector=injector, retry_budget=args.retry_budget,
+        session_ttl_s=args.session_ttl,
+        restore_patience=args.restore_patience,
+        self_audit=injector is not None)
     rep = slo_report(res, trace.classes)
     if args.slo_json:
         print(json.dumps(rep, indent=2, allow_nan=False))
@@ -275,18 +322,37 @@ def serve_trace(engine: DecodeEngine, cfg, args):
               f"{res.pages_restored} restored pages, "
               f"{res.tier_restores} parked restores, "
               f"{res.host_prefix_hits} host prefix hits")
-    print(f"ttft p50/p95/p99 {rep['ttft']['p50']:.4f}/"
-          f"{rep['ttft']['p95']:.4f}/{rep['ttft']['p99']:.4f} s, "
-          f"tpot p50/p95/p99 {rep['tpot']['p50']:.4f}/"
-          f"{rep['tpot']['p95']:.4f}/{rep['tpot']['p99']:.4f} s (virtual)")
+    if injector is not None:
+        fc = " ".join(f"{k}:{v}" for k, v in res.fault_counts.items())
+        print(f"chaos plan ({args.fault_plan}, seed {args.chaos_seed}): "
+              f"{res.faults_injected} faults fired"
+              f"{' (' + fc + ')' if fc else ''}")
+        print(f"recovery: {res.save_retries}/{res.restore_retries} "
+              f"save/restore retries "
+              f"({res.retry_backoff_s * 1e3:.1f} ms virtual backoff), "
+              f"{res.degraded_restores} degraded restores, "
+              f"{res.corrupt_blobs} checksum rejects, "
+              f"{res.quarantines} quarantines; sessions "
+              f"{res.aborted_sessions} aborted / "
+              f"{res.failed_sessions} failed / "
+              f"{res.expired_sessions} expired")
+    if rep["ttft"] is not None and rep["tpot"] is not None:
+        print(f"ttft p50/p95/p99 {rep['ttft']['p50']:.4f}/"
+              f"{rep['ttft']['p95']:.4f}/{rep['ttft']['p99']:.4f} s, "
+              f"tpot p50/p95/p99 {rep['tpot']['p50']:.4f}/"
+              f"{rep['tpot']['p95']:.4f}/{rep['tpot']['p99']:.4f} s "
+              f"(virtual)")
     for name, c in rep["classes"].items():
         print(f"  class {name}: {c['sessions']} sessions, "
               f"slo_frac {c['slo_frac']:.2f} "
               f"(ttft<={c['slo_ttft_s']:g}s, tpot_p95<={c['slo_tpot_s']:g}s), "
               f"goodput {c['goodput_tok_s']:.1f} tok/s")
+    dropped = (f", {rep['failed_sessions']} dropped"
+               if rep.get("failed_sessions") else "")
     print(f"goodput under SLO: {rep['goodput_tok_s']:.1f} tok/s "
-          f"({rep['slo_sessions']}/{rep['sessions']} sessions in SLO, "
-          f"{rep['tokens_per_s_virtual']:.1f} tok/s served)")
+          f"({rep['slo_sessions']}/{rep['sessions']} sessions in SLO"
+          f"{dropped}, "
+          f"{rep.get('tokens_per_s_virtual', 0.0):.1f} tok/s served)")
     if res.adaptive_k:
         hist = " ".join(f"K{k}:{v}" for k, v in
                         sorted(res.horizon_hist.items()))

@@ -1,4 +1,9 @@
 from repro.serving.engine import DecodeEngine, GenerationResult  # noqa: F401
+from repro.serving.faults import (FaultInjector, FaultPlan,  # noqa: F401
+                                  FaultPlanConfig, FaultSpec,
+                                  InjectedFault, generate_fault_plan,
+                                  plan_from_text, plan_to_text,
+                                  validate_plan)
 from repro.serving.sampling import sample  # noqa: F401
 from repro.serving.memory import BlockAllocator, PrefixCache  # noqa: F401
 from repro.serving.programs import jit_cache_size  # noqa: F401

@@ -143,7 +143,14 @@ class DecodeEngine:
                             kv_tier: str = "none",
                             tier_policy="spill",
                             host_pages: Optional[int] = None,
-                            virtual_host_copy_s: float = 5e-4):
+                            virtual_host_copy_s: float = 5e-4,
+                            fault_injector=None,
+                            retry_budget: int = 2,
+                            session_ttl_s: Optional[float] = None,
+                            restore_patience: int = 0,
+                            quarantine_budget: int = 2,
+                            self_audit: bool = False,
+                            logit_screen: Optional[bool] = None):
         """Continuous batching: serve ``sessions`` (SessionRequest list)
         through a fixed-capacity slotted cache — admission, per-slot
         prefill, shared batched decode, eviction, FIFO backfill.  The
@@ -182,7 +189,17 @@ class DecodeEngine:
         index — placement steered by ``tier_policy``
         (prefer-device | spill | lookahead), capacity by ``host_pages``,
         virtual migration cost by ``virtual_host_copy_s`` per page.
-        Returns a ``ContinuousResult``."""
+
+        ``fault_injector`` (serving/faults.py) arms a seeded chaos plan
+        against the run: injected copy failures retry with backoff
+        (``retry_budget``) then degrade to re-prefill, poisoned logits
+        quarantine their lane (``quarantine_budget`` requeues, then
+        fail-closed), aborts and the ``session_ttl_s`` deadline free a
+        session's slot and pages with a terminal event, and
+        ``self_audit`` checks the page accounting on idle ticks.
+        ``restore_patience`` holds a parked host copy that many ticks
+        before re-prefill admission supersedes it.  Returns a
+        ``ContinuousResult``."""
         from repro.serving.scheduler import SlotScheduler
         sched = SlotScheduler(self.model, self.params, n_slots=n_slots,
                               max_len=max_len, dispatch_mode=dispatch_mode,
@@ -200,7 +217,14 @@ class DecodeEngine:
                               shared_programs=shared_programs,
                               kv_tier=kv_tier, tier_policy=tier_policy,
                               host_pages=host_pages,
-                              virtual_host_copy_s=virtual_host_copy_s)
+                              virtual_host_copy_s=virtual_host_copy_s,
+                              fault_injector=fault_injector,
+                              retry_budget=retry_budget,
+                              session_ttl_s=session_ttl_s,
+                              restore_patience=restore_patience,
+                              quarantine_budget=quarantine_budget,
+                              self_audit=self_audit,
+                              logit_screen=logit_screen)
         for req in sessions:
             sched.submit(req)
         return sched.run()

@@ -11,13 +11,15 @@ from repro.serving.memory.policy import (LookAheadSpill, PreferDevice,
                                          get_policy)
 from repro.serving.memory.prefix import PrefixCache
 from repro.serving.memory.tiers import (HostPagePool, PageStore,
-                                        TieredPageStore, restore_kv_blobs,
+                                        TierCopyError, TieredPageStore,
+                                        blob_checksum, restore_kv_blobs,
                                         save_kv_blobs)
 
 __all__ = [
     "GARBAGE_PAGE", "BlockAllocator", "PrefixCache",
     "PageStore", "TieredPageStore", "HostPagePool",
     "save_kv_blobs", "restore_kv_blobs",
+    "TierCopyError", "blob_checksum",
     "TierPolicy", "PreferDevice", "SpillOnEvict", "LookAheadSpill",
     "get_policy",
 ]

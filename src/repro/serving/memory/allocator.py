@@ -73,3 +73,24 @@ class BlockAllocator:
             if self._refs[p] == 0:
                 self._free.append(p)
                 self._free_set.add(p)
+
+    def check(self) -> List[str]:
+        """Self-audit: free list ↔ free set ↔ refcount consistency.
+        Returns human-readable issue strings (empty = clean).  Pure
+        reads — never mutates, safe to run mid-serving."""
+        issues = []
+        if len(self._free) != len(set(self._free)):
+            issues.append("free list holds duplicate pages")
+        if set(self._free) != self._free_set:
+            issues.append("free list and free set disagree")
+        if GARBAGE_PAGE in self._free_set:
+            issues.append("garbage page on the free list")
+        for p in range(1, self.n_pages):
+            r = self._refs[p]
+            if r < 0:
+                issues.append(f"page {p}: negative refcount {r}")
+            elif p in self._free_set and r != 0:
+                issues.append(f"page {p}: free with refcount {r}")
+            elif p not in self._free_set and r == 0:
+                issues.append(f"page {p}: refcount 0 but not free")
+        return issues

@@ -205,3 +205,30 @@ class PrefixCache:
         """Drop every unreferenced cached page (end-of-run accounting;
         pages still shared by live sessions stay)."""
         return self.reclaim(len(self._by_page))
+
+    def check(self) -> List[str]:
+        """Self-audit: every cached page must hold an allocator
+        reference and the node/parent/child linkage must be coherent.
+        Returns issue strings (empty = clean); pure reads."""
+        issues = []
+        if len(self._nodes) != len(self._by_page):
+            issues.append("prefix node / by-page index size mismatch")
+        for page, node in self._by_page.items():
+            if self._allocator.refcount(page) < 1:
+                issues.append(f"cached page {page} holds no allocator ref")
+            if node.page != page:
+                issues.append(f"cached page {page}: node page desync")
+            if self._nodes.get(node.key) is not node:
+                issues.append(f"cached page {page}: key index desync")
+            if node.parent != GARBAGE_PAGE:
+                pn = self._by_page.get(node.parent)
+                if pn is None:
+                    issues.append(f"cached page {page}: parent "
+                                  f"{node.parent} not indexed")
+                elif page not in pn.children:
+                    issues.append(f"cached page {page}: missing from "
+                                  f"parent {node.parent}'s children")
+            for c in node.children:
+                if c not in self._by_page:
+                    issues.append(f"cached page {page}: dangling child {c}")
+        return issues

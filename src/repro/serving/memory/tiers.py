@@ -29,6 +29,7 @@ construction — the identity tests and table14 pin it end to end.
 from __future__ import annotations
 
 import collections
+import zlib
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -41,6 +42,23 @@ from repro.serving.memory.prefix import PrefixCache
 # bf16 pools, (k, v, k_scale, v_scale) for int8-quantised ones — the
 # tier is slab-structure-agnostic, codes and scales park together.
 Blob = Tuple[np.ndarray, ...]
+
+
+class TierCopyError(RuntimeError):
+    """A host-tier page copy failed past its retry budget, or a parked
+    blob failed verify-on-restore.  The store's state is left so the
+    caller can degrade cleanly: on restore failure the parked entry and
+    its handles survive (``drop_parked`` releases them) and NO device
+    pages or refcounts were consumed by this call."""
+
+
+def blob_checksum(blob: Blob) -> int:
+    """CRC32 chained over a blob's slab components — cheap enough to
+    run on every park and verify on every restore."""
+    c = 0
+    for comp in blob:
+        c = zlib.crc32(np.ascontiguousarray(comp).tobytes(), c)
+    return c
 
 
 def _pad_pow2(n: int) -> int:
@@ -95,6 +113,9 @@ class PageStore:
     tier_restores = 0
     host_prefix_hits = 0
     park_fails = 0
+    save_retries = 0
+    restore_retries = 0
+    corrupt_blobs = 0
 
     def __init__(self, *, n_slots: int, max_blocks: int, page_size: int,
                  n_pages: int, prefix_cache: bool = False):
@@ -206,6 +227,23 @@ class PageStore:
             cache["pos"] = jnp.asarray(self._pos)
             self._pos_dirty = False
 
+    # ------------------------------------------------------ self-audit
+    def check(self, live_pages: Sequence[int] = ()) -> List[str]:
+        """Consistency audit of the page accounting: allocator free
+        list/set/refcounts, prefix-cache linkage, and (optionally) the
+        resident sessions' ``live_pages``, which must all be held.
+        Returns human-readable issue strings — empty means clean.  Pure
+        host reads: safe to run on idle ticks."""
+        issues = self.allocator.check()
+        if self.prefix is not None:
+            issues += self.prefix.check()
+        for p in live_pages:
+            if not 0 < p < self.n_pages:
+                issues.append(f"block table maps bad page id {p}")
+            elif self.allocator.refcount(p) <= 0:
+                issues.append(f"mapped page {p} has no holder")
+        return issues
+
     # ---------------------------------------------- tier hooks (no-op)
     def park(self, sid: str, n_full: int, pages: Sequence[int],
              cache) -> Optional[int]:
@@ -307,6 +345,12 @@ class HostPagePool:
         self._lru.pop(handle, None)
         return blob
 
+    def replace(self, handle: int, blob: Blob) -> None:
+        """Swap a resident blob's bytes in place (pin/LRU state keeps):
+        the fault injector's corruption hook."""
+        assert handle in self._blobs, f"unknown handle {handle}"
+        self._blobs[handle] = blob
+
 
 class TieredPageStore(PageStore):
     """Device pool + host-DRAM spill tier behind the ``PageStore``
@@ -315,8 +359,10 @@ class TieredPageStore(PageStore):
     kv_tier = "host"
 
     def __init__(self, *, host_pages: int, policy, save_fn, restore_fn,
-                 get_cache, charge_cb=None, **kw):
+                 get_cache, charge_cb=None, retry_budget: int = 2,
+                 retry_cb=None, verify_checksums: bool = True, **kw):
         super().__init__(**kw)
+        assert retry_budget >= 0
         self.policy = policy
         self.host = HostPagePool(host_pages)
         self.host.on_drop = self._forget_handle
@@ -324,22 +370,82 @@ class TieredPageStore(PageStore):
         self._restore = restore_fn       # (cache, pages, blobs) -> cache
         self._get_cache = get_cache      # live cache for the evict hook
         self._charge = charge_cb or (lambda n_pages: None)
+        self.retry_budget = retry_budget
+        self._retry = retry_cb or (lambda attempt: None)
+        self.verify_checksums = verify_checksums
         self._parked: Dict[str, List[Optional[int]]] = {}  # sid -> handles
         self._shadow: Dict[Tuple[str, int], int] = {}      # (sid, blk) -> h
         self._shadow_sids: Dict[str, set] = {}
         self._hpath: Dict[Tuple[int, ...], int] = {}       # token path -> h
         self._by_handle: Dict[int, Tuple[int, ...]] = {}
+        self._crc: Dict[int, int] = {}   # handle -> put-time checksum
         # instance counters shadow the class-level zeros
         self.pages_spilled = 0
         self.pages_restored = 0
         self.tier_restores = 0
         self.host_prefix_hits = 0
         self.park_fails = 0
+        self.save_retries = 0
+        self.restore_retries = 0
+        self.corrupt_blobs = 0
         if policy.spill_prefix and self.prefix is not None:
             self.prefix.on_evict = self._spill_evicted_prefix
 
+    # ------------------------------------------- guarded page movers
+    def _save_guarded(self, cache, pages: Sequence[int]) -> List[Blob]:
+        """``save_fn`` under the bounded retry budget; each retry is
+        charged to the virtual clock via ``retry_cb(attempt)``."""
+        last = None
+        for attempt in range(self.retry_budget + 1):
+            if attempt:
+                self.save_retries += 1
+                self._retry(attempt)
+            try:
+                return self._save(cache, pages)
+            except Exception as e:           # noqa: BLE001 — transport
+                last = e                     # faults are type-agnostic
+        raise TierCopyError(
+            f"save of {len(pages)} page(s) failed after "
+            f"{self.retry_budget + 1} attempts") from last
+
+    def _restore_guarded(self, cache, pages, blobs):
+        last = None
+        for attempt in range(self.retry_budget + 1):
+            if attempt:
+                self.restore_retries += 1
+                self._retry(attempt)
+            try:
+                return self._restore(cache, pages, blobs)
+            except Exception as e:           # noqa: BLE001
+                last = e
+        raise TierCopyError(
+            f"restore of {len(pages)} page(s) failed after "
+            f"{self.retry_budget + 1} attempts") from last
+
+    def _put(self, blob: Blob, pinned: bool) -> Optional[int]:
+        """``host.put`` recording the blob's put-time checksum."""
+        h = self.host.put(blob, pinned)
+        if h is not None:
+            self._crc[h] = blob_checksum(blob)
+        return h
+
+    def _pop(self, h: int) -> Blob:
+        self._crc.pop(h, None)
+        return self.host.pop(h)
+
+    def _verify(self, handles: Sequence[int]) -> int:
+        """Blobs among ``handles`` whose bytes no longer match their
+        put-time checksum (0 when verification is off)."""
+        if not self.verify_checksums:
+            return 0
+        bad = sum(1 for h in handles
+                  if blob_checksum(self.host.get(h)) != self._crc.get(h))
+        self.corrupt_blobs += bad
+        return bad
+
     # ------------------------------------------------- host prefix index
     def _forget_handle(self, handle: int) -> None:
+        self._crc.pop(handle, None)
         path = self._by_handle.pop(handle, None)
         if path is not None:
             self._hpath.pop(path, None)
@@ -351,8 +457,11 @@ class TieredPageStore(PageStore):
         the path is a collision-free key)."""
         if path in self._hpath:
             return
-        (blob,) = self._save(self._get_cache(), [page])
-        h = self.host.put(blob, pinned=False)
+        try:
+            (blob,) = self._save_guarded(self._get_cache(), [page])
+        except TierCopyError:
+            return                       # the page just dies single-tier
+        h = self._put(blob, pinned=False)
         if h is None:
             return                       # pinned blobs own the pool
         self._hpath[path] = h
@@ -378,12 +487,23 @@ class TieredPageStore(PageStore):
                             pages: Sequence[int], cache):
         """Copy matched host-index blobs back into fresh device pages
         (the entries move back to the device tier — the caller registers
-        the pages in the device prefix cache)."""
-        blobs = [self.host.pop(self._hpath[p]) for p in paths]
-        for p in paths:
-            self._by_handle.pop(self._hpath[p], None)
-            del self._hpath[p]
-        cache = self._restore(cache, pages, blobs)
+        the pages in the device prefix cache).  Entries are consumed
+        only on success: checksum mismatches drop the damaged entries
+        and raise ``TierCopyError`` (the caller re-prefills); a
+        restore failure past the retry budget raises with the entries
+        kept (the bytes are fine — a later admission may succeed)."""
+        handles = [self._hpath[p] for p in paths]
+        if self._verify(handles):
+            for h in handles:            # detected damage: purge it
+                self._forget_handle(h)
+                self._pop(h)
+            raise TierCopyError(
+                f"{len(paths)} host-prefix blob(s) failed checksum")
+        blobs = [self.host.get(h) for h in handles]
+        cache = self._restore_guarded(cache, pages, blobs)
+        for h in handles:
+            self._forget_handle(h)
+            self._pop(h)
         self.pages_restored += len(pages)
         self.host_prefix_hits += len(pages)
         self._charge(len(pages))
@@ -394,7 +514,7 @@ class TieredPageStore(PageStore):
         parked/shadow blobs — pinned KV a session still owns — stay)."""
         n = 0
         for path, h in list(self._hpath.items()):
-            self.host.pop(h)
+            self._pop(h)
             self._by_handle.pop(h, None)
             del self._hpath[path]
             n += 1
@@ -427,15 +547,23 @@ class TieredPageStore(PageStore):
             return None
         handles: List[Optional[int]] = [None] * n_full
         if fresh:
-            blobs = self._save(cache, [pages[b] for b in fresh])
+            try:
+                blobs = self._save_guarded(cache, [pages[b] for b in fresh])
+            except TierCopyError:
+                # save failed past the retry budget before any blob was
+                # admitted to the pool: nothing to unwind host-side, the
+                # session degrades to plain re-prefill
+                self.drop_shadows(sid)
+                self.park_fails += 1
+                return None
             for b, blob in zip(fresh, blobs):
-                handles[b] = self.host.put(blob, pinned=True)
+                handles[b] = self._put(blob, pinned=True)
                 assert handles[b] is not None, "reserve() covered park"
         for b in range(n_full):           # adopt shadows, drop overshoot
             if b in shadows:
                 handles[b] = self._shadow.pop((sid, b))
         for b in shadows - set(range(n_full)):
-            self.host.pop(self._shadow.pop((sid, b)))
+            self._pop(self._shadow.pop((sid, b)))
         self._shadow_sids.pop(sid, None)
         self._parked[sid] = handles
         self.pages_spilled += len(fresh)
@@ -451,13 +579,25 @@ class TieredPageStore(PageStore):
         """Restore a parked session's blocks ``skip..n_full-1`` into
         fresh device ``pages`` (blocks below ``skip`` were covered by a
         device prefix match — same tokens, same content) and retire the
-        parked entry."""
-        handles = self._parked.pop(sid)
+        parked entry.
+
+        The entry is consumed only AFTER verify + restore succeed: a
+        checksum mismatch or a restore failure past the retry budget
+        raises ``TierCopyError`` with the parked handles (and the host
+        pool's accounting) intact, so the caller can release its device
+        pages, ``drop_parked`` the dead copy, and degrade to re-prefill
+        without leaking either pool."""
+        handles = self._parked[sid]
         assert len(pages) == len(handles) - skip
-        blobs = [self.host.pop(h) for h in handles[skip:]]
-        for h in handles[:skip]:
-            self.host.pop(h)
-        cache = self._restore(cache, pages, blobs)
+        take = handles[skip:]
+        if self._verify(take):
+            raise TierCopyError(
+                f"parked blob(s) of {sid} failed verify-on-restore")
+        blobs = [self.host.get(h) for h in take]
+        cache = self._restore_guarded(cache, pages, blobs)
+        del self._parked[sid]
+        for h in handles:
+            self._pop(h)
         self.pages_restored += len(pages)
         self.tier_restores += 1
         self._charge(len(pages))
@@ -468,7 +608,24 @@ class TieredPageStore(PageStore):
         re-admitted through a device prefix match or plain
         re-prefill)."""
         for h in self._parked.pop(sid, ()):
-            self.host.pop(h)
+            self._pop(h)
+
+    def corrupt_parked_blob(self) -> Optional[str]:
+        """Fault-injection hook: flip one byte of the first parked blob
+        of the lowest-sorted parked sid (deterministic victim choice).
+        The restore-time checksum screen must catch the damage.
+        Returns the victim sid, or None when nothing is parked."""
+        for sid in sorted(self._parked):
+            handles = [h for h in self._parked[sid] if h is not None]
+            if not handles:
+                continue
+            h = handles[0]
+            blob = self.host.get(h)
+            comp = np.array(blob[0], copy=True)
+            comp.view(np.uint8).reshape(-1)[0] ^= 0xFF
+            self.host.replace(h, (comp,) + tuple(blob[1:]))
+            return sid
+        return None
 
     # ---------------------------------------------- shadow pre-spills
     def has_shadow(self, sid: str, blk: int) -> bool:
@@ -482,9 +639,12 @@ class TieredPageStore(PageStore):
         (decode writes only at ``pos``), so the copies stay valid."""
         if not self.host.reserve(len(blks)):
             return 0
-        blobs = self._save(cache, pages)
+        try:
+            blobs = self._save_guarded(cache, pages)
+        except TierCopyError:
+            return 0                     # optional pre-spill: skip it
         for blk, blob in zip(blks, blobs):
-            h = self.host.put(blob, pinned=True)
+            h = self._put(blob, pinned=True)
             assert h is not None
             self._shadow[(sid, blk)] = h
             self._shadow_sids.setdefault(sid, set()).add(blk)
@@ -494,4 +654,4 @@ class TieredPageStore(PageStore):
 
     def drop_shadows(self, sid: str) -> None:
         for blk in self._shadow_sids.pop(sid, set()):
-            self.host.pop(self._shadow.pop((sid, blk)))
+            self._pop(self._shadow.pop((sid, blk)))

@@ -12,7 +12,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-Event = Tuple  # ("admit"|"token"|"finish"|"preempt", session_id, slot[, token])
+Event = Tuple
+# ("admit"|"token"|"finish"|"preempt", session_id, slot[, token]) plus
+# the fault/recovery kinds: "pressure"|"corrupt"|"degraded"|
+# "quarantine"|"audit" and the terminal "aborted"|"failed"|"expired"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +48,10 @@ class SessionResult:
     step_times_s: List[float]        # shared-batch decode-step walls
     klass: str = ""                  # session-class label (from request)
     priority: int = 0
+    status: str = "ok"               # "ok" | "aborted" | "failed" |
+                                     # "expired" — non-ok sessions ended
+                                     # early (tokens is the committed
+                                     # prefix, not the full budget)
     arrival_s: float = 0.0           # virtual arrival on the run clock
     token_times_s: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0))
@@ -83,11 +90,13 @@ class ContinuousResult:
     ``dispatches``, ``run_tokens``, ``step_kv_blocks``,
     ``host_dispatch_s``, ``host_sync_s``, ``prefill_tokens``,
     ``prefix_hits``, ``prefix_tokens_saved``, ``cow_copies``,
-    ``arrivals``, ``horizon_hist``, and the tier counters
+    ``arrivals``, ``horizon_hist``, the tier counters
     ``pages_spilled`` / ``pages_restored`` / ``tier_restores`` /
-    ``host_prefix_hits``.  (``dispatches`` is the per-run delta of the
-    cumulative ``decode_steps``; ``host_pages_used`` is the host-pool
-    occupancy at the END of the call.)
+    ``host_prefix_hits``, and every fault/recovery counter
+    (``fault_counts`` through ``retry_backoff_s``).  (``dispatches`` is
+    the per-run delta of the cumulative ``decode_steps``;
+    ``host_pages_used`` is the host-pool occupancy at the END of the
+    call.)
 
     ``now_s`` is the scheduler's virtual clock at the end of the call —
     monotone across calls (a clock, not a counter); per-run virtual
@@ -140,6 +149,25 @@ class ContinuousResult:
     host_prefix_hits: int = 0        # pages served from the host prefix
                                      # index on admission
     host_pages_used: int = 0         # host-pool occupancy at call end
+    # ---- fault injection / graceful degradation (serving/faults.py) ----
+    fault_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # injected faults that LANDED this run, by kind ({} without an
+    # injector); ``faults_injected`` is their sum
+    faults_injected: int = 0
+    save_retries: int = 0            # host-tier save attempts repeated
+    restore_retries: int = 0         # host-tier restore attempts repeated
+    degraded_restores: int = 0       # restores abandoned for re-prefill
+                                     # (retry budget spent / checksum)
+    corrupt_blobs: int = 0           # parked blobs failing verify-on-
+                                     # restore
+    quarantines: int = 0             # lanes pulled by the logit screen
+    aborted_sessions: int = 0        # mid-stream disconnects applied
+    failed_sessions: int = 0         # fail-closed terminations
+    expired_sessions: int = 0        # per-session TTL enforcements
+    audit_failures: int = 0          # idle-tick self-audits that found
+                                     # accounting damage
+    retry_backoff_s: float = 0.0     # virtual seconds charged to retry
+                                     # backoff (inside ``now_s``)
 
     def tokens_for(self, session_id: str) -> np.ndarray:
         return self.sessions[session_id].tokens
@@ -165,6 +193,9 @@ class _Session:
                                      # grow while resident in a slot)
     resume: bool = False             # re-admission after preemption
     admit_seq: int = -1              # monotone admission order (preempt prio)
+    status: str = "ok"               # terminal status (see SessionResult)
+    quarantines: int = 0             # logit-screen pulls so far
+    tier_waits: int = 0              # restore-gate patience ticks spent
     arrival_s: float = 0.0           # virtual arrival on the run clock
     release_wall: Optional[float] = None   # perf_counter at queue entry
     token_times_s: List[float] = dataclasses.field(default_factory=list)
@@ -208,6 +239,7 @@ class _Session:
             step_times_s=self.step_times_s,
             klass=self.request.klass,
             priority=self.request.priority,
+            status=self.status,
             arrival_s=self.arrival_s,
             token_times_s=np.asarray(self.token_times_s),
             ttft_s=(self.token_times_s[0] - self.arrival_s

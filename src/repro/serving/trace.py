@@ -304,13 +304,27 @@ def slo_report(result: ContinuousResult,
     construction: every value is a finite float, int, bool or None —
     never NaN (``json.dumps(report, allow_nan=False)`` must succeed,
     which the latency-field tests pin for timed and untimed runs)."""
-    sessions = [s for s in result.sessions.values()
-                if not s.session_id.startswith(skip_prefix)
-                and s.token_times_s.size]
-    report: dict = {"sessions": len(sessions), "classes": {}}
+    pool = [s for s in result.sessions.values()
+            if not s.session_id.startswith(skip_prefix)]
+    failed = [s for s in pool if s.status != "ok"]
+    sessions = [s for s in pool
+                if s.status == "ok" and s.token_times_s.size]
+    n_total = len(sessions) + len(failed)
+    statuses: dict = {}
+    for s in failed:
+        statuses[s.status] = statuses.get(s.status, 0) + 1
+    # non-ok sessions (aborted / failed / expired) never enter the
+    # latency percentile streams — a truncated stream's TPOT would
+    # flatter the tail — but they stay in every SLO denominator: a
+    # dropped session is a missed SLO, and its tokens are not goodput
+    report: dict = {"sessions": n_total, "classes": {},
+                    "failed_sessions": len(failed),
+                    "statuses": dict(sorted(statuses.items()))}
     if not sessions:
         report.update(ttft=None, tpot=None, goodput_tok_s=0.0,
                       slo_sessions=0, makespan_s=0.0)
+        if failed:
+            report["slo_frac"] = 0.0
         return report
     t0 = min(s.arrival_s for s in sessions)
     t1 = max(float(s.token_times_s[-1]) for s in sessions)
@@ -327,25 +341,27 @@ def slo_report(result: ContinuousResult,
         tpot=_percentiles(all_lat) if all_lat else None,
         ttft_wall=_percentiles(walls) if walls else None,
         slo_sessions=len(ok_sessions),
-        slo_frac=len(ok_sessions) / len(sessions),
+        slo_frac=len(ok_sessions) / n_total,
         goodput_tok_s=good_tokens / makespan,
         tokens_per_s_virtual=sum(len(s.tokens)
                                  for s in sessions) / makespan,
         makespan_s=makespan)
     for name, klass in classes.items():
         cs = [s for s in sessions if s.klass == name]
-        if not cs:
+        cf = [s for s in failed if s.klass == name]
+        if not cs and not cf:
             continue
         c_lat = [lat for s in cs for lat in s.token_latencies_s().tolist()]
         c_ok = [s for s in cs if session_meets_slo(s, klass)]
         report["classes"][name] = {
-            "sessions": len(cs),
+            "sessions": len(cs) + len(cf),
+            "failed_sessions": len(cf),
             "priority": klass.priority,
-            "ttft": _percentiles([s.ttft_s for s in cs]),
+            "ttft": _percentiles([s.ttft_s for s in cs]) if cs else None,
             "tpot": _percentiles(c_lat) if c_lat else None,
             "slo_ttft_s": klass.slo_ttft_s,
             "slo_tpot_s": klass.slo_tpot_s,
-            "slo_frac": len(c_ok) / len(cs),
+            "slo_frac": len(c_ok) / (len(cs) + len(cf)),
             "goodput_tok_s": sum(len(s.tokens) for s in c_ok) / makespan,
         }
     return report

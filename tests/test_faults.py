@@ -1,0 +1,566 @@
+"""Fault injection + graceful degradation: plan format stability, the
+injector contract, the tier's guarded copy paths, and the scheduler's
+recovery semantics end to end.
+
+The robustness contract mirrors the serving stack's identity
+discipline: a fault either (a) is absorbed (retries, restore-gate
+degradation, quarantine-requeue) leaving every stream greedy
+token-identical to the fault-free baseline, or (b) terminates its
+session explicitly (aborted / failed / expired status + a terminal
+event) with the committed tokens a prefix of the baseline stream —
+never a silently wrong token, never a leaked page in either pool.
+Unaffected sessions must be byte-identical in all cases.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import (FaultInjector, FaultPlan, FaultPlanConfig,
+                           FaultSpec, InjectedFault, SessionRequest,
+                           SlotScheduler, generate_fault_plan,
+                           plan_from_text, plan_to_text, slo_report,
+                           validate_plan)
+from repro.serving.faults import KINDS
+from repro.serving.memory import TieredPageStore, get_policy
+from repro.serving.memory.allocator import BlockAllocator
+from repro.serving.memory.tiers import TierCopyError
+from repro.serving.session import ContinuousResult, SessionResult
+from repro.serving.trace import SessionClass
+
+KEY = jax.random.PRNGKey(11)
+CFG = get_config("qwen2.5-3b").reduced().replace(
+    vocab_size=64, d_model=64, d_ff=128, n_layers=2,
+    n_heads=4, n_kv_heads=2, head_dim=16, dtype="float32")
+
+_STATE: dict = {}
+
+
+# ---------------------------------------------------------- plan format
+class TestPlanFormat:
+    def test_text_roundtrip_is_byte_stable(self):
+        for seed in (0, 7, 123):
+            plan = generate_fault_plan(
+                FaultPlanConfig(seed=seed, n_faults=10, horizon_s=0.5),
+                session_ids=("a", "b", "c"))
+            txt = plan_to_text(plan)
+            assert plan_from_text(txt) == plan
+            assert plan_to_text(plan_from_text(txt)) == txt
+
+    def test_same_seed_same_plan(self):
+        cfg = FaultPlanConfig(seed=5, n_faults=12, horizon_s=1.0)
+        a = generate_fault_plan(cfg, session_ids=("x", "y"))
+        b = generate_fault_plan(cfg, session_ids=("x", "y"))
+        assert a == b
+        c = generate_fault_plan(
+            FaultPlanConfig(seed=6, n_faults=12, horizon_s=1.0),
+            session_ids=("x", "y"))
+        assert a != c
+
+    def test_specs_are_time_sorted_and_valid(self):
+        plan = generate_fault_plan(
+            FaultPlanConfig(seed=1, n_faults=20, horizon_s=0.3))
+        times = [s.at_s for s in plan.specs]
+        assert times == sorted(times)
+        validate_plan(plan)              # must not raise
+
+    @pytest.mark.parametrize("spec,msg", [
+        (FaultSpec("meteor", 0.1), "unknown kind"),
+        (FaultSpec("abort", -0.1), "negative due time"),
+        (FaultSpec("abort", 0.1, count=0), "must be >= 1"),
+        (FaultSpec("pool_pressure", 0.1), "positive hold duration"),
+        (FaultSpec("abort", 0.1, target="a b"), "must be a token"),
+    ])
+    def test_validate_rejects_bad_specs(self, spec, msg):
+        plan = FaultPlan(FaultPlanConfig(), (spec,))
+        with pytest.raises(ValueError, match=msg):
+            validate_plan(plan)
+
+    def test_validate_rejects_unsorted(self):
+        plan = FaultPlan(FaultPlanConfig(), (
+            FaultSpec("abort", 0.2), FaultSpec("abort", 0.1)))
+        with pytest.raises(ValueError, match="time-sorted"):
+            validate_plan(plan)
+
+    def test_parse_requires_header(self):
+        with pytest.raises(AssertionError, match="header"):
+            plan_from_text("abort t=0.100000 target=- count=1 "
+                           "dur=0.000000\n")
+
+
+# ------------------------------------------------------------- injector
+class TestInjector:
+    def _plan(self):
+        return FaultPlan(FaultPlanConfig(), (
+            FaultSpec("save_fail", 0.1, count=2),
+            FaultSpec("nan_logits", 0.2, target="s0"),
+            FaultSpec("pool_pressure", 0.3, count=2, duration_s=0.01)))
+
+    def test_poll_activates_in_time_order(self):
+        inj = FaultInjector(self._plan())
+        assert inj.scheduled == 3
+        assert inj.poll(0.05) == []
+        assert inj.poll(0.1) == [] and inj.save_fails == 2
+        due = inj.poll(0.25)
+        assert [s.kind for s in due] == ["nan_logits"]
+        assert [s.kind for s in inj.poll(10.0)] == ["pool_pressure"]
+        assert inj.poll(20.0) == []      # plan exhausted
+
+    def test_copy_fail_budget_is_consumable(self):
+        inj = FaultInjector(self._plan())
+        inj.poll(0.15)
+        assert inj.take_copy_fail("save")
+        assert inj.take_copy_fail("save")
+        assert not inj.take_copy_fail("save"), "budget of 2 exhausted"
+        assert not inj.take_copy_fail("restore"), "never armed"
+        assert inj.fired["save_fail"] == 2
+
+    def test_counters_are_stable_keyed(self):
+        inj = FaultInjector(self._plan())
+        inj.mark("abort")
+        inj.mark("abort")
+        inj.mark("nan_logits")
+        assert inj.counters() == {"nan_logits": 1, "abort": 2}
+        assert all(k in KINDS for k in inj.counters())
+
+
+# ------------------------------------------- tier copy guards (unit)
+def _flaky_store(fail_saves=0, fail_restores=0, **kw):
+    """TieredPageStore over fake movers that fail the first N calls —
+    blobs are (page_id,) sentinels, so restores are checkable without a
+    device and injected faults are indistinguishable from transport
+    errors (the production arrangement)."""
+    state = {"fs": fail_saves, "fr": fail_restores, "restored": []}
+
+    def save_fn(cache, pages):
+        if state["fs"] > 0:
+            state["fs"] -= 1
+            raise InjectedFault("save transport fault")
+        return [(np.full((1,), p, np.float32), np.zeros((1,), np.float32))
+                for p in pages]
+
+    def restore_fn(cache, pages, blobs):
+        if state["fr"] > 0:
+            state["fr"] -= 1
+            raise InjectedFault("restore transport fault")
+        state["restored"].extend(
+            (int(b[0][0]), p) for p, b in zip(pages, blobs))
+        return cache
+
+    store = TieredPageStore(
+        n_slots=2, max_blocks=6, page_size=4, n_pages=10,
+        prefix_cache=True, host_pages=kw.pop("host_pages", 8),
+        policy=get_policy(kw.pop("policy", "spill")),
+        retry_budget=kw.pop("retry_budget", 2),
+        save_fn=save_fn, restore_fn=restore_fn, get_cache=lambda: {},
+        **kw)
+    return store, state
+
+
+class TestTierGuards:
+    def test_save_retry_within_budget(self):
+        store, _ = _flaky_store(fail_saves=1)
+        pages = store.alloc(2)
+        assert store.park("sid", 2, pages, {}) == 2
+        assert store.save_retries == 1
+        assert store.parked_blocks("sid") == 2 and store.host_used == 2
+        store.release(pages)
+        fresh = store.alloc(2)
+        store.take_parked("sid", 0, fresh, {})
+        store.release(fresh)
+        assert store.host_used == 0
+        assert store.allocator.n_free == store.n_pages - 1
+
+    def test_save_past_budget_degrades_clean(self):
+        store, _ = _flaky_store(fail_saves=10, retry_budget=1)
+        pages = store.alloc(2)
+        assert store.park("sid", 2, pages, {}) is None
+        assert store.park_fails == 1 and store.save_retries == 1
+        assert store.parked_blocks("sid") == 0
+        assert store.host_used == 0, "failed park must not pin blobs"
+        store.release(pages)
+        assert store.allocator.n_free == store.n_pages - 1
+
+    def test_restore_fail_keeps_entry_and_unwind_balances(self):
+        """The satellite regression: a restore past the retry budget
+        must leave the parked entry AND the host accounting intact, so
+        the caller's unwind (release device pages, drop the parked
+        copy) closes both pools — no leaked refcounts, no orphaned host
+        blobs."""
+        store, _ = _flaky_store(fail_restores=10, retry_budget=1)
+        pages = store.alloc(2)
+        store.park("sid", 2, pages, {})
+        store.release(pages)
+        fresh = store.alloc(2)
+        with pytest.raises(TierCopyError, match="failed after"):
+            store.take_parked("sid", 0, fresh, {})
+        assert store.restore_retries == 1
+        assert store.parked_blocks("sid") == 2, \
+            "bytes are fine — the entry must survive the failed copy"
+        assert store.host_used == 2
+        store.release(fresh)             # the scheduler's unwind path
+        store.drop_parked("sid")
+        assert store.host_used == 0
+        assert store.allocator.n_free == store.n_pages - 1
+
+    def test_restore_retry_within_budget(self):
+        store, state = _flaky_store(fail_restores=1)
+        pages = store.alloc(2)
+        store.park("sid", 2, pages, {})
+        store.release(pages)
+        fresh = store.alloc(2)
+        store.take_parked("sid", 0, fresh, {})
+        assert store.restore_retries == 1 and store.tier_restores == 1
+        assert [m[0] for m in state["restored"]] == pages, \
+            "restored blobs must be the very pages that were parked"
+        store.release(fresh)
+        assert store.host_used == 0
+
+    def test_corrupt_parked_blob_caught_by_checksum(self):
+        store, _ = _flaky_store()
+        pages = store.alloc(2)
+        store.park("sid", 2, pages, {})
+        store.release(pages)
+        assert store.corrupt_parked_blob() == "sid"
+        fresh = store.alloc(2)
+        with pytest.raises(TierCopyError, match="verify-on-restore"):
+            store.take_parked("sid", 0, fresh, {})
+        assert store.corrupt_blobs == 1
+        store.release(fresh)
+        store.drop_parked("sid")
+        assert store.host_used == 0
+        assert store.allocator.n_free == store.n_pages - 1
+
+    def test_corrupt_host_prefix_blob_is_purged(self):
+        store, _ = _flaky_store()
+        seq = np.asarray([5] * 8, np.int32)
+        pages = store.alloc(2)
+        store.register(seq, pages, 2)
+        store.release(pages)
+        store.prefix.reclaim(99)         # evict both -> host index
+        paths = store.host_match(seq, 0, 2)
+        assert len(paths) == 2
+        h = store._hpath[paths[0]]
+        blob = store.host.get(h)
+        bad = np.array(blob[0], copy=True)
+        bad.view(np.uint8).reshape(-1)[0] ^= 0xFF
+        store.host.replace(h, (bad,) + tuple(blob[1:]))
+        fresh = store.alloc(2)
+        with pytest.raises(TierCopyError, match="checksum"):
+            store.restore_host_prefix(paths, fresh, {})
+        assert store.corrupt_blobs >= 1
+        assert store.host_match(seq, 0, 2) == [], \
+            "damaged entries must be purged, not retried forever"
+        store.release(fresh)
+        store.flush_host()
+        assert store.host_used == 0
+
+    def test_verify_off_skips_the_checksum_screen(self):
+        store, _ = _flaky_store(verify_checksums=False)
+        pages = store.alloc(2)
+        store.park("sid", 2, pages, {})
+        store.release(pages)
+        store.corrupt_parked_blob()
+        fresh = store.alloc(2)
+        store.take_parked("sid", 0, fresh, {})   # no raise: screen off
+        assert store.corrupt_blobs == 0 and store.tier_restores == 1
+        store.release(fresh)
+
+
+# ----------------------------------------------- scheduler integration
+def _model():
+    if "model" not in _STATE:
+        m = Model(CFG)
+        _STATE["model"] = (m, m.init(KEY))
+    return _STATE["model"]
+
+
+def _reqs(n=5):
+    """Deterministic churn wave: multi-page prompts and budgets that
+    keep two residents preempting each other in a small pool."""
+    rng = np.random.RandomState(3)
+    return [SessionRequest(
+        f"s{i}",
+        rng.randint(0, CFG.vocab_size, size=8 + 3 * (i % 3)).astype(
+            np.int32),
+        6 + 2 * (i % 2)) for i in range(n)]
+
+
+def _serve(reqs, *, plan=None, k=1, **kw):
+    model, params = _model()
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 24)
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("n_pages", 8)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("prefix_cache", True)
+    kw.setdefault("kv_tier", "host")
+    kw.setdefault("tier_policy", "spill")
+    kw.setdefault("host_pages", 16)
+    kw.setdefault("steps_per_tick", k)
+    kw.setdefault("timed", False)
+    kw.setdefault("shared_programs", True)
+    if plan is not None:
+        kw.setdefault("fault_injector", FaultInjector(plan))
+        kw.setdefault("self_audit", True)
+    sched = SlotScheduler(model, params, **kw)
+    for r in reqs:
+        sched.submit(r)
+    return sched, sched.run()
+
+
+def _baseline(k=1):
+    key = ("base", k)
+    if key not in _STATE:
+        reqs = _reqs()
+        sched, res = _serve(reqs, k=k)
+        assert res.preemptions > 0, "pool never thrashed: tests inert"
+        _STATE[key] = {r.session_id: np.asarray(
+            res.tokens_for(r.session_id)) for r in reqs}
+    return _reqs(), _STATE[key]
+
+
+def _plan_of(*specs):
+    plan = FaultPlan(FaultPlanConfig(), tuple(specs))
+    validate_plan(plan)
+    return plan
+
+
+def _assert_balanced(sched):
+    n_pages = sched.store.n_pages
+    sched.flush_prefix_cache()
+    sched.store.flush_host()
+    assert sched.store.allocator.n_free == n_pages - 1, "device page leak"
+    assert sched.store.host_used == 0, "host blob leak"
+    assert not sched._pressure_holds, "pressure hold survived the run"
+
+
+class TestSchedulerRecovery:
+    def test_no_injector_means_no_fault_machinery(self):
+        reqs, _ = _baseline()
+        _, res = _serve(reqs)
+        assert not res.fault_counts and res.faults_injected == 0
+        assert res.quarantines == 0 and res.degraded_restores == 0
+        assert res.retry_backoff_s == 0.0
+
+    def test_logit_screen_on_clean_stream_changes_nothing(self):
+        reqs, base = _baseline()
+        _, res = _serve(reqs, logit_screen=True)
+        for sid, toks in base.items():
+            np.testing.assert_array_equal(toks, res.tokens_for(sid))
+        assert res.quarantines == 0
+
+    def test_restore_fail_storm_degrades_token_identically(self):
+        reqs, base = _baseline()
+        plan = _plan_of(FaultSpec("restore_fail", 0.0, count=500))
+        sched, res = _serve(reqs, plan=plan, retry_budget=1)
+        assert res.degraded_restores > 0, \
+            "storm never hit a restore — nothing was tested"
+        assert res.restore_retries > 0 and res.retry_backoff_s > 0
+        assert "restore_fail" in res.fault_counts
+        for sid, toks in base.items():
+            np.testing.assert_array_equal(
+                toks, res.tokens_for(sid),
+                err_msg=f"{sid} diverged under restore degradation")
+        assert any(e[0] == "degraded" for e in res.events)
+        _assert_balanced(sched)
+
+    def test_save_fail_is_absorbed_by_retry(self):
+        reqs, base = _baseline()
+        plan = _plan_of(FaultSpec("save_fail", 0.0, count=1))
+        sched, res = _serve(reqs, plan=plan)
+        assert res.save_retries >= 1
+        assert res.retry_backoff_s > 0, "retries must charge the clock"
+        assert res.fault_counts.get("save_fail") == 1
+        for sid, toks in base.items():
+            np.testing.assert_array_equal(toks, res.tokens_for(sid))
+        _assert_balanced(sched)
+
+    @pytest.mark.parametrize("k", [1, 4])
+    def test_nan_quarantine_recovers_identically(self, k):
+        reqs, base = _baseline(k)
+        plan = _plan_of(FaultSpec("nan_logits", 0.0, target="s0"))
+        sched, res = _serve(reqs, plan=plan, k=k)
+        assert res.quarantines >= 1
+        assert res.fault_counts.get("nan_logits") == 1
+        assert res.failed_sessions == 0, "requeue must recover, not drop"
+        for sid, toks in base.items():
+            np.testing.assert_array_equal(
+                toks, res.tokens_for(sid),
+                err_msg=f"{sid} diverged after quarantine (K={k})")
+        _assert_balanced(sched)
+
+    def test_quarantine_budget_zero_fails_closed(self):
+        reqs, base = _baseline()
+        plan = _plan_of(FaultSpec("nan_logits", 0.0, target="s1"))
+        sched, res = _serve(reqs, plan=plan, quarantine_budget=0)
+        assert res.failed_sessions == 1
+        sess = res.sessions["s1"]
+        assert sess.status == "failed"
+        assert any(e[0] == "failed" and e[1] == "s1" for e in res.events)
+        got = np.asarray(res.tokens_for("s1"))
+        np.testing.assert_array_equal(
+            got, base["s1"][:len(got)],
+            err_msg="committed prefix of a failed session must match")
+        for sid, toks in base.items():
+            if sid != "s1":
+                np.testing.assert_array_equal(toks, res.tokens_for(sid))
+        _assert_balanced(sched)
+
+    def test_targeted_abort_spares_everyone_else(self):
+        reqs, base = _baseline()
+        plan = _plan_of(FaultSpec("abort", 0.0, target="s2"))
+        sched, res = _serve(reqs, plan=plan)
+        assert res.aborted_sessions == 1
+        assert res.sessions["s2"].status == "aborted"
+        assert any(e[0] == "aborted" and e[1] == "s2"
+                   for e in res.events)
+        got = np.asarray(res.tokens_for("s2"))
+        np.testing.assert_array_equal(got, base["s2"][:len(got)])
+        for sid, toks in base.items():
+            if sid != "s2":
+                np.testing.assert_array_equal(
+                    toks, res.tokens_for(sid),
+                    err_msg=f"{sid} perturbed by s2's disconnect")
+        _assert_balanced(sched)
+
+    def test_session_ttl_expires_with_prefix_streams(self):
+        reqs, base = _baseline()
+        sched, res = _serve(reqs, session_ttl_s=0.01)
+        assert res.expired_sessions > 0
+        for r in reqs:
+            got = np.asarray(res.tokens_for(r.session_id))
+            np.testing.assert_array_equal(
+                got, base[r.session_id][:len(got)],
+                err_msg=f"{r.session_id} emitted wrong tokens pre-TTL")
+        _assert_balanced(sched)
+
+    def test_pool_pressure_expires_and_balances(self):
+        reqs, base = _baseline()
+        plan = _plan_of(
+            FaultSpec("pool_pressure", 0.0, count=3, duration_s=0.02))
+        sched, res = _serve(reqs, plan=plan)
+        assert any(e[0] == "pressure" for e in res.events)
+        for sid, toks in base.items():
+            np.testing.assert_array_equal(toks, res.tokens_for(sid))
+        _assert_balanced(sched)
+
+    def test_mixed_plan_replay_is_deterministic(self):
+        reqs = _reqs(4)
+        plan = generate_fault_plan(
+            FaultPlanConfig(seed=3, n_faults=6, horizon_s=0.3),
+            session_ids=[r.session_id for r in reqs])
+        runs = []
+        for _ in range(2):
+            sched, res = _serve(reqs, plan=plan)
+            runs.append((res.fault_counts, res.now_s,
+                         {r.session_id: list(res.tokens_for(r.session_id))
+                          for r in reqs},
+                         {r.session_id: res.sessions[r.session_id].status
+                          for r in reqs}))
+            _assert_balanced(sched)
+        assert runs[0] == runs[1], "same plan, same seed: byte-identical"
+
+
+# ------------------------------------------------------------ self-audit
+class TestSelfAudit:
+    def test_allocator_check_detects_refcount_damage(self):
+        alloc = BlockAllocator(6)
+        assert alloc.check() == []
+        pages = alloc.alloc(2)
+        alloc._refs[pages[0]] = 0        # held page with no holder
+        try:
+            assert any("refcount 0 but not free" in i
+                       for i in alloc.check())
+        finally:
+            alloc._refs[pages[0]] = 1
+        alloc.release(pages)
+        assert alloc.check() == []
+
+    def test_store_check_flags_unreferenced_cached_page(self):
+        store, _ = _flaky_store()
+        seq = np.asarray([9] * 8, np.int32)
+        pages = store.alloc(2)
+        store.register(seq, pages, 2)
+        store.release(pages)
+        assert store.check() == []
+        store.allocator._refs[pages[0]] = 0
+        try:
+            assert store.check() != []
+        finally:
+            store.allocator._refs[pages[0]] = 1
+
+    def test_scheduler_audit_warns_then_fails_closed(self):
+        sched, _ = _serve(_reqs(2))
+        sched.flush_prefix_cache()
+        sched.store.allocator._refs[1] += 1      # damage: free page held
+        sched._run_audit()
+        assert sched.audit_failures == 1
+        assert any(e[0] == "audit" for e in sched.events)
+        with pytest.raises(RuntimeError, match="audit failed twice"):
+            sched._run_audit()
+
+
+# ---------------------------------------------- slo_report accounting
+def _sess(sid, n, *, klass="chat", status="ok", arrival=0.0, gap=0.01):
+    times = arrival + gap * np.arange(1, n + 1)
+    return SessionResult(
+        session_id=sid, tokens=np.arange(n, dtype=np.int32), slot=0,
+        admitted_tick=0, finished_tick=1, step_times_s=[], klass=klass,
+        status=status, arrival_s=arrival, token_times_s=times,
+        ttft_s=float(times[0] - arrival) if n else None)
+
+
+def _result(sessions):
+    return ContinuousResult(
+        sessions={s.session_id: s for s in sessions}, ticks=1,
+        decode_steps=1, wall_s=0.1, tokens_per_s=1.0,
+        step_cache_size=0, launches_per_step=1.0, events=[])
+
+
+_CLASSES = {"chat": SessionClass("chat", 1.0,
+                                 slo_ttft_s=0.5, slo_tpot_s=0.05)}
+
+
+class TestSloReportFailedSessions:
+    def test_failed_excluded_from_latency_counted_against_slo(self):
+        # the aborted session's wild inter-token gaps (9 s) would wreck
+        # the TPOT tail if its truncated stream entered the percentiles
+        rep = slo_report(_result([
+            _sess("a", 8), _sess("b", 8),
+            _sess("x", 3, status="aborted", gap=9.0)]), _CLASSES)
+        assert rep["sessions"] == 3
+        assert rep["failed_sessions"] == 1
+        assert rep["statuses"] == {"aborted": 1}
+        assert rep["tpot"]["p95"] < 1.0, "aborted stream leaked in"
+        assert rep["slo_frac"] == pytest.approx(2 / 3)
+        assert rep["slo_sessions"] == 2
+        # a dropped session's tokens are not goodput
+        assert rep["goodput_tok_s"] == pytest.approx(
+            16 / rep["makespan_s"])
+        cls = rep["classes"]["chat"]
+        assert cls["sessions"] == 3 and cls["failed_sessions"] == 1
+        assert cls["slo_frac"] == pytest.approx(2 / 3)
+        json.dumps(rep, allow_nan=False)
+
+    def test_all_failed_reports_zero_slo(self):
+        rep = slo_report(_result([
+            _sess("x", 2, status="expired"),
+            _sess("y", 0, status="failed")]), _CLASSES)
+        assert rep["sessions"] == 2 and rep["failed_sessions"] == 2
+        assert rep["statuses"] == {"expired": 1, "failed": 1}
+        assert rep["slo_frac"] == 0.0
+        assert rep["ttft"] is None and rep["goodput_tok_s"] == 0.0
+        json.dumps(rep, allow_nan=False)
+
+    def test_no_failures_keeps_legacy_shape(self):
+        rep = slo_report(_result([_sess("a", 8), _sess("b", 8)]),
+                         _CLASSES)
+        assert rep["sessions"] == 2
+        assert rep["failed_sessions"] == 0 and rep["statuses"] == {}
+        assert rep["slo_frac"] == 1.0
+        json.dumps(rep, allow_nan=False)

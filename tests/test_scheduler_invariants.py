@@ -9,8 +9,9 @@ Three layers, cheapest first:
     registration/match/reclaim keeps every page accounted for;
   * full ``SlotScheduler`` churn — randomized waves (prompt lengths,
     budgets, priorities, arrival offsets) through module-cached
-    schedulers on the paged, prefix-cache, adaptive-horizon and
-    host-tiered configs, asserting free-list balance, host-pool
+    schedulers on the paged, prefix-cache, adaptive-horizon,
+    host-tiered and chaos (random fault plans interleaved with the
+    churn) configs, asserting free-list balance, host-pool
     balance (nothing pinned survives a drain), empty slots, and a
     stable compiled step count after warmup.  Schedulers are cached at module scope
     because jit caches live per instance — a fresh scheduler per
@@ -211,6 +212,11 @@ def _sched(kind: str) -> SlotScheduler:
             # host pool smaller than the device pool: parks can fail
             # (the fallback-to-reprefill path soaks too)
             kw.update(prefix_cache=True, kv_tier="host", host_pages=6)
+        elif kind == "chaos":
+            # tiered config again; each example arms a fresh seeded
+            # fault plan on the cached instance (injector is consulted
+            # dynamically, so no recompile)
+            kw.update(prefix_cache=True, kv_tier="host", host_pages=6)
         _STATE[kind] = SlotScheduler(_STATE["model"], _STATE["params"],
                                      **kw)
     return _STATE[kind]
@@ -219,7 +225,8 @@ def _sched(kind: str) -> SlotScheduler:
 @pytest.mark.slow
 class TestSchedulerChurnSoak:
     @given(seed=st.integers(0, 10**9),
-           kind=st.sampled_from(("paged", "prefix", "adaptive", "tiered")),
+           kind=st.sampled_from(("paged", "prefix", "adaptive", "tiered",
+                                 "chaos")),
            n_sessions=st.integers(1, 4),
            gap_s=st.sampled_from((0.0, 0.004, 0.02)))
     @settings(max_examples=200, deadline=None)
@@ -228,7 +235,10 @@ class TestSchedulerChurnSoak:
         """One randomized wave (lengths, budgets, priorities, arrival
         offsets) through a long-lived scheduler: afterwards every slot
         is free, the page pool balances against the prefix cache's
-        holds, and the compiled step count never grew past warmup."""
+        holds, and the compiled step count never grew past warmup.
+        The ``chaos`` kind additionally arms a random seeded fault plan
+        (serving/faults.py) against the wave — faults may truncate
+        streams, but never the accounting."""
         sched = _sched(kind)
         rng = random.Random(seed)
         reqs = []
@@ -242,18 +252,49 @@ class TestSchedulerChurnSoak:
                 budget, arrival_s=gap_s * (i + 1),
                 priority=rng.randint(0, 2)))
         size_before = sched.step_cache_size()
+        if kind == "chaos":
+            from repro.serving.faults import (FaultInjector,
+                                              FaultPlanConfig,
+                                              generate_fault_plan)
+            plan = generate_fault_plan(
+                FaultPlanConfig(seed=seed, n_faults=rng.randint(1, 6),
+                                horizon_s=0.5),
+                session_ids=[r.session_id for r in reqs])
+            sched.fault_injector = FaultInjector(plan)
         for r in reqs:
             sched.submit(r)
-        res = sched.run()
+        try:
+            res = sched.run()
+        finally:
+            if kind == "chaos":
+                # the injector and any unfired fault state must not
+                # leak into the next example on the cached instance
+                sched.fault_injector = None
+                sched._pending_aborts.clear()
+                sched._poison.clear()
+                sched._pending_corrupts = 0
         # ---- drained: no slot, queue, or arrival residue
         assert sched.free_slots == list(range(sched.n_slots))
         assert not sched.waiting and not sched._pending \
             and not sched._arrivals
+        assert not sched._pressure_holds, "pressure hold leaked"
         # gap 0 takes the legacy submit-straight-to-queue path, which
-        # is not a timed arrival release
-        assert res.arrivals == (0 if gap_s == 0.0 else len(reqs))
+        # is not a timed arrival release; chaos aborts can remove
+        # queued requests before release
+        if kind == "chaos":
+            assert res.arrivals <= len(reqs)
+        else:
+            assert res.arrivals == (0 if gap_s == 0.0 else len(reqs))
         for r in reqs:
-            assert len(res.tokens_for(r.session_id)) == r.max_new_tokens
+            s = res.sessions[r.session_id]
+            if s.status == "ok":
+                assert len(res.tokens_for(r.session_id)) \
+                    == r.max_new_tokens
+            else:
+                # terminated by the plan: prefix only, never overrun
+                assert kind == "chaos"
+                assert len(res.tokens_for(r.session_id)) \
+                    <= r.max_new_tokens
         # ---- page accounting balances (cache holds are the only
         # allowed residue, and each cached page has exactly one holder)
         cached = sched.cached_pages or 0
@@ -282,6 +323,6 @@ class TestSchedulerChurnSoak:
         """Meta-check: the sampled_from draws covered each scheduler
         kind (the shim's edge-first ordering guarantees this; real
         hypothesis covers it within the example budget)."""
-        for kind in ("paged", "prefix", "adaptive", "tiered"):
+        for kind in ("paged", "prefix", "adaptive", "tiered", "chaos"):
             _sched(kind)
             assert kind in _STATE
