@@ -19,6 +19,8 @@ with one-line descriptions and exits 0.
 from __future__ import annotations
 
 import json
+import os
+import re
 import sys
 import time
 import traceback
@@ -44,10 +46,55 @@ DESCRIPTIONS = {
 }
 
 
+_MODULE_RE = re.compile(r"(table\d+|fig\d+)_\w+\.py$")
+
+
+def registry_audit(suite_names=None, description_names=None,
+                   module_dir=None):
+    """staticcheck-style self-audit of the table registry: every
+    ``table*.py`` / ``fig*.py`` module must be registered with a
+    description, and the three views (modules on disk, ``DESCRIPTIONS``,
+    the ``suites`` dict) must agree.  Returns a list of human-readable
+    problem lines — empty means consistent.  Each view is optional so
+    ``--list`` can audit without importing the suite modules."""
+    problems = []
+    descs = set(DESCRIPTIONS if description_names is None
+                else description_names)
+    module_dir = module_dir or os.path.dirname(os.path.abspath(__file__))
+    ids = {m.group(1) for f in os.listdir(module_dir)
+           if (m := _MODULE_RE.match(f))}
+    for mid in sorted(ids - descs):
+        problems.append(f"{mid}: module file exists but has no entry in "
+                        f"DESCRIPTIONS (--list would omit it)")
+    for mid in sorted(descs - ids):
+        problems.append(f"{mid}: described in --list but no matching "
+                        f"benchmark module file")
+    if suite_names is not None:
+        suites = set(suite_names)
+        for name in sorted(suites - descs):
+            problems.append(f"{name}: registered suite has no --list "
+                            f"description")
+        for name in sorted(descs - suites):
+            problems.append(f"{name}: described in --list but not in the "
+                            f"suites registry")
+    return problems
+
+
+def _report_audit(problems) -> None:
+    for p in problems:
+        print(f"# registry: {p}", flush=True)
+    print(f"# FAILED: benchmark registry out of sync "
+          f"({len(problems)} problem(s))", flush=True)
+
+
 def main() -> None:
     if "--list" in sys.argv:
         for name, desc in DESCRIPTIONS.items():
             print(f"{name:8s} {desc}")
+        problems = registry_audit()
+        if problems:
+            _report_audit(problems)
+            sys.exit(2)
         return
     quick = "--quick" in sys.argv
     only = None
@@ -90,7 +137,10 @@ def main() -> None:
         "table15": lambda: table15_quant_serving.run(quick=quick),
         "table16": lambda: table16_fault_recovery.run(quick=quick),
     }
-    assert set(suites) == set(DESCRIPTIONS), "--list out of sync"
+    problems = registry_audit(suites)
+    if problems:
+        _report_audit(problems)
+        sys.exit(2)
     if only is not None and only not in suites:
         print(f"# FAILED: unknown table {only!r} "
               f"(have: {', '.join(suites)})", flush=True)

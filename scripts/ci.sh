@@ -12,6 +12,13 @@
 #   tests   lint           ruff check (skipped with a notice when ruff
 #                          isn't installed — CI always installs it via
 #                          requirements.txt)
+#           staticcheck    the repo's own AST invariant linter
+#                          (python -m repro.analysis.staticcheck) over
+#                          src/ — hot-path syncs, recompile hazards,
+#                          donation misuse, PRNG reuse, page-refcount
+#                          pairing; unused suppressions and
+#                          non-baselined findings fail; writes
+#                          staticcheck.json (uploaded as an artifact)
 #           tier1          pytest suite minus slow-marked soaks
 #                          (ROADMAP "tier-1 verify")
 #           soak           the slow-marked property soaks (hypothesis
@@ -83,6 +90,9 @@ run_tests() {
     else
         echo "== stage: lint skipped (ruff not installed) =="
     fi
+
+    stage staticcheck \
+        python -m repro.analysis.staticcheck src --json staticcheck.json
 
     stage tier1 python -m pytest -x -q -m "not slow"
 

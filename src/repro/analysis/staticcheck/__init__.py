@@ -1,0 +1,11 @@
+"""staticcheck — AST-level invariant linter for the serving hot path.
+
+``python -m repro.analysis.staticcheck src`` runs every rule over a
+tree; see ``core`` for the engine and ``rules/`` for the invariants.
+"""
+from repro.analysis.staticcheck import rules  # noqa: F401  (registers rules)
+from repro.analysis.staticcheck.core import (RULES, Finding,  # noqa: F401
+                                             check_file, check_source,
+                                             run_paths)
+
+__all__ = ["RULES", "Finding", "check_source", "check_file", "run_paths"]

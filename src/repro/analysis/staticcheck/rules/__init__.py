@@ -1,0 +1,5 @@
+"""Rule modules register themselves on import (core.RULES)."""
+from repro.analysis.staticcheck.rules import (donation, hot_sync,  # noqa: F401
+                                              prng, recompile, refcount)
+
+__all__ = ["hot_sync", "recompile", "donation", "prng", "refcount"]

@@ -1,0 +1,228 @@
+"""donation-safety: donated buffers are dead after the call.
+
+``donate_argnums`` is how the serving stack keeps KV memory flat: the
+caller's page pool / cache buffer is surrendered to the compiled
+program and its storage reused for the output.  Reading a donated
+argument *after* the call touches a deleted buffer —
+``RuntimeError: invalid buffer`` at best, silent garbage under some
+backends' async dispatch at worst.
+
+Two sources of donation knowledge:
+
+  * same-file bindings ``X = jax.jit(fn, donate_argnums=(...))`` with a
+    literal tuple;
+  * ``KNOWN_DONATING`` — the donation map of the compiled-program
+    registry (`repro.serving.programs.SchedulerPrograms`), keyed by
+    dotted-callee suffix, so scheduler call sites are checked across
+    module boundaries.
+
+For each donating call we walk the CFG forward: a path that *reads*
+the donated expression before any statement rebinds it is a finding.
+The call's own assignment targets count as rebinds (the canonical
+``cache = step(params, cache, ...)`` shape is safe, including around
+loop back-edges).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.staticcheck.cfgutil import CFG, EXIT
+from repro.analysis.staticcheck.core import (FileContext, Finding, dotted,
+                                             register)
+
+RULE = "donation-safety"
+
+# dotted-callee suffix -> donated positional indices; mirrors
+# serving/programs.py's donate_argnums declarations (and the tiered
+# store's restore movers).  Keys starting with "." match by suffix.
+KNOWN_DONATING: Dict[str, Tuple[int, ...]] = {
+    "._progs.prefill_chunk": (2,),
+    "._progs.copy_page": (0,),
+    "._progs.restore_pages": (0,),
+    "._progs.prefill_slot": (2,),
+    "._progs.step": (1,),
+    "._progs.steps": (1,),
+    ".restore_kv_pages": (0,),
+}
+
+
+def _match_known(d: str) -> Optional[Tuple[int, ...]]:
+    for key, pos in KNOWN_DONATING.items():
+        if key.startswith(".") and d.endswith(key):
+            return pos
+        if d == key:
+            return pos
+    return None
+
+
+def _literal_argnums(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        if isinstance(kw.value, ast.Constant) and isinstance(
+                kw.value.value, int):
+            return (kw.value.value,)
+        if isinstance(kw.value, (ast.Tuple, ast.List)) and all(
+                isinstance(e, ast.Constant) for e in kw.value.elts):
+            return tuple(e.value for e in kw.value.elts)
+        return None        # dynamic (e.g. a variable) — unresolvable
+    return ()
+
+
+def _expr_text(node: ast.AST) -> Optional[str]:
+    """Stable text for simple donated exprs (names / dotted attrs)."""
+    return dotted(node)
+
+
+def _header(stmt: ast.stmt) -> ast.AST:
+    """CFG nodes for compound statements represent only their header —
+    bodies are separate nodes — so read/store checks must not walk into
+    them (the donating call itself usually lives there)."""
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return stmt.iter
+    if isinstance(stmt, (ast.While, ast.If)):
+        return stmt.test
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return ast.Tuple(elts=[i.context_expr for i in stmt.items],
+                         ctx=ast.Load())
+    if isinstance(stmt, ast.Try):
+        return ast.Tuple(elts=[], ctx=ast.Load())
+    return stmt
+
+
+def _stores(stmt: ast.stmt) -> Set[str]:
+    out: Set[str] = set()
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        targets = [stmt.target]
+    for t in targets:
+        for node in ast.walk(t):
+            d = dotted(node)
+            if d:
+                out.add(d)
+    return out
+
+
+def _reads(stmt: ast.stmt, text: str) -> bool:
+    """Does ``stmt``'s header read ``text`` (outside its own store
+    targets)?"""
+    skip: Set[int] = set()
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            skip.update(id(n) for n in ast.walk(t))
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        skip.update(id(n) for n in ast.walk(stmt.target))
+    for node in ast.walk(_header(stmt)):
+        if id(node) in skip:
+            continue
+        if dotted(node) == text and isinstance(
+                node, (ast.Name, ast.Attribute)):
+            return True
+    return False
+
+
+def _check_call(ctx: FileContext, fn: ast.FunctionDef, cfg: CFG,
+                call_stmt: ast.stmt, call: ast.Call,
+                donated: Tuple[int, ...], qual: str) -> List[Finding]:
+    findings: List[Finding] = []
+    for pos in donated:
+        if pos >= len(call.args):
+            continue
+        text = _expr_text(call.args[pos])
+        if text is None or text in ("self",):
+            continue
+        # the donating statement's own targets rebinding the expr makes
+        # the canonical `cache = step(..., cache, ...)` safe: every
+        # later read sees the freshly returned buffer
+        own_store = text in _stores(call_stmt)
+        if own_store:
+            continue
+        seen: Set[object] = set()
+        work = list(cfg.successors(id(call_stmt)))
+        while work:
+            node = work.pop()
+            if node in seen:
+                continue
+            seen.add(node)
+            if node is EXIT:
+                continue
+            stmt = cfg.stmt(node)
+            if stmt is None:
+                continue
+            if stmt is call_stmt:
+                # back around the loop: safe iff the call rebinds it
+                if own_store:
+                    continue
+                findings.append(ctx.finding(
+                    RULE, call.args[pos],
+                    f"`{text}` is donated (arg {pos}) and re-passed on "
+                    f"the next loop iteration without being rebound — "
+                    f"the second call reads a deleted buffer", qual))
+                break
+            if _reads(stmt, text):
+                findings.append(ctx.finding(
+                    RULE, call.args[pos],
+                    f"`{text}` is donated to the callee (arg {pos}) but "
+                    f"read again at line {stmt.lineno} — donated buffers "
+                    f"are deleted by the call (rebind the result or drop "
+                    f"the read)", qual))
+                break
+            if text in _stores(stmt):
+                continue           # rebound: this path is safe
+            work.extend(cfg.successors(node))
+    return findings
+
+
+@register(RULE, "arguments listed in donate_argnums are not read after "
+                "the jitted call")
+def check(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # same-file literal bindings: name/self-attr -> donated positions
+    local: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.value, ast.Call) and \
+                dotted(node.value.func) in ("jax.jit", "jit"):
+            nums = _literal_argnums(node.value)
+            if not nums:
+                continue
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name):
+                local[tgt.id] = nums
+            elif isinstance(tgt, ast.Attribute) and isinstance(
+                    tgt.value, ast.Name) and tgt.value.id == "self":
+                local[f"self.{tgt.attr}"] = nums
+
+    for fn in ctx.functions():
+        cfg = None
+        qual = ctx.qualname_of(fn)
+        for stmt in ast.walk(fn):
+            if not isinstance(stmt, ast.stmt):
+                continue
+            # anchor each donating call at the statement whose HEADER
+            # holds it (compound bodies are their own CFG nodes)
+            for call in ast.walk(_header(stmt)):
+                if not isinstance(call, ast.Call):
+                    continue
+                d = dotted(call.func)
+                if d is None:
+                    continue
+                donated = local.get(d)
+                if donated is None:
+                    donated = _match_known(d)
+                if not donated:
+                    continue
+                if cfg is None:
+                    cfg = CFG(fn)
+                if id(stmt) not in cfg.by_id:
+                    continue       # e.g. inside a nested def
+                findings.extend(_check_call(
+                    ctx, fn, cfg, stmt, call, donated, qual))
+        del cfg
+    return findings

@@ -1,0 +1,196 @@
+"""hot-sync: no implicit device→host syncs on the decode hot path.
+
+The paper's central measurement is that batch-1 decode is throttled by
+launch-side overhead — and the cheapest way to reintroduce it is an
+accidental ``int()`` / ``np.asarray`` / ``.item()`` on a device array
+inside the tick loop, which stalls the dispatch pipeline until the
+device catches up.  Functions designated ``# staticcheck: hotpath``
+must funnel ALL device reads through their one deliberate sync.
+
+Mechanics: a linear walk of each hot function tracks which locals are
+device-valued (assigned from ``jnp.*`` / ``jax.*`` / the compiled
+program registry / known device-producing methods; re-assignment from
+``np.asarray``/``np.array`` converts them to host values).  Flagged:
+
+  * ``np.asarray(x)`` / ``np.array(x)`` / ``int(x)`` / ``float(x)`` /
+    ``bool(x)`` where ``x`` mentions a device-valued local or a hot
+    function parameter;
+  * ``.item()`` / ``.tolist()`` / ``.block_until_ready()`` /
+    ``jax.block_until_ready`` / ``jax.device_get`` anywhere in a hot
+    function (these have no non-sync reading).
+
+Blocks gated on a ``timed`` flag (``if self.timed:``) are exempt —
+instrumentation is allowed to sync when the caller asked for walls.
+The deliberate once-per-tick token sync carries an inline suppression
+naming itself.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.staticcheck.core import (FileContext, Finding, dotted,
+                                             names_in, register)
+
+RULE = "hot-sync"
+
+# callee dotted-name shapes whose results live on device
+_DEVICE_PREFIXES = ("jnp.", "jax.")
+_DEVICE_INFIX = ("._progs.",)
+_DEVICE_TAILS = {
+    "_run_step", "_sample", "sample", "decode_step", "decode_steps",
+    "prefill", "prefill_chunk", "prefill_into_slot",
+    "prefill_chunk_into_slot", "copy_kv_page", "_step", "_steps_fused",
+    "_prefill", "save_kv_pages", "restore_kv_pages",
+}
+# converting calls: result is a host value (and the call is a sync when
+# fed a device value)
+_HOST_CONVERTERS = {"np.asarray", "np.array", "numpy.asarray",
+                    "numpy.array"}
+_SCALAR_SYNCS = {"int", "float", "bool"}
+_ALWAYS_SYNC_CALLS = {"jax.block_until_ready", "jax.device_get"}
+_ALWAYS_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_TIMED_GATES = {"timed"}
+
+
+def _is_device_callee(call: ast.Call) -> bool:
+    d = dotted(call.func)
+    if d is None:
+        return False
+    if any(d.startswith(p) for p in _DEVICE_PREFIXES):
+        # numpy-free namespaces only: jnp/jax produce device arrays
+        return d not in _ALWAYS_SYNC_CALLS
+    if any(infix in d for infix in _DEVICE_INFIX):
+        return True
+    return d.rsplit(".", 1)[-1] in _DEVICE_TAILS
+
+
+def _timed_gated(test: ast.AST) -> bool:
+    for node in ast.walk(test):
+        if isinstance(node, ast.Name) and node.id in _TIMED_GATES:
+            return True
+        if isinstance(node, ast.Attribute) and node.attr in _TIMED_GATES:
+            return True
+    return False
+
+
+class _HotWalker:
+    def __init__(self, ctx: FileContext, fn: ast.FunctionDef):
+        self.ctx = ctx
+        self.fn = fn
+        self.qual = ctx.qualname_of(fn)
+        self.device: Set[str] = {
+            a.arg for a in (fn.args.posonlyargs + fn.args.args
+                            + fn.args.kwonlyargs)
+            if a.arg not in ("self", "cls")}
+        self.findings: List[Finding] = []
+
+    # ------------------------------------------------------------- helpers
+    def _mentions_device(self, node: ast.AST) -> bool:
+        if names_in(node) & self.device:
+            return True
+        # a device-producing call nested right in the argument
+        return any(isinstance(c, ast.Call) and _is_device_callee(c)
+                   for c in ast.walk(node))
+
+    def _flag(self, node: ast.AST, what: str) -> None:
+        self.findings.append(self.ctx.finding(
+            RULE, node,
+            f"{what} inside hot-path function (device→host sync on the "
+            f"decode tick; gate on `timed` or move off the hot path)",
+            self.qual))
+
+    def _scan_expr(self, node: ast.AST) -> None:
+        """Flag sync calls anywhere inside one expression tree."""
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            d = dotted(call.func)
+            if d in _ALWAYS_SYNC_CALLS:
+                self._flag(call, f"`{d}(...)`")
+            elif (isinstance(call.func, ast.Attribute)
+                    and call.func.attr in _ALWAYS_SYNC_METHODS):
+                self._flag(call, f"`.{call.func.attr}()`")
+            elif d in _HOST_CONVERTERS:
+                if call.args and self._mentions_device(call.args[0]):
+                    self._flag(call, f"`{d}` on a device value")
+            elif d in _SCALAR_SYNCS:
+                if call.args and self._mentions_device(call.args[0]):
+                    self._flag(call, f"`{d}()` on a device value")
+
+    def _assign_targets(self, stmt: ast.Assign) -> List[str]:
+        names: List[str] = []
+        for t in stmt.targets:
+            if isinstance(t, ast.Name):
+                names.append(t.id)
+            elif isinstance(t, ast.Tuple):
+                names.extend(e.id for e in t.elts
+                             if isinstance(e, ast.Name))
+        return names
+
+    # ------------------------------------------------------------ the walk
+    def walk(self) -> List[Finding]:
+        self._walk_body(self.fn.body)
+        return self.findings
+
+    def _walk_body(self, body) -> None:
+        for stmt in body:
+            self._walk_stmt(stmt)
+
+    def _walk_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.If):
+            if _timed_gated(stmt.test):
+                self._walk_body(stmt.orelse)   # gated body is exempt
+                return
+            self._scan_expr(stmt.test)
+            self._walk_body(stmt.body)
+            self._walk_body(stmt.orelse)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._scan_expr(stmt.iter)
+            self._walk_body(stmt.body)
+            self._walk_body(stmt.orelse)
+            return
+        if isinstance(stmt, ast.While):
+            self._scan_expr(stmt.test)
+            self._walk_body(stmt.body)
+            self._walk_body(stmt.orelse)
+            return
+        if isinstance(stmt, ast.Try):
+            self._walk_body(stmt.body)
+            for h in stmt.handlers:
+                self._walk_body(h.body)
+            self._walk_body(stmt.orelse)
+            self._walk_body(stmt.finalbody)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr)
+            self._walk_body(stmt.body)
+            return
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return          # nested defs are designated separately
+        # flat statement: scan for syncs, then update device tracking
+        self._scan_expr(stmt)
+        if isinstance(stmt, ast.Assign):
+            targets = self._assign_targets(stmt)
+            value = stmt.value
+            makes_device = (
+                (isinstance(value, ast.Call) and _is_device_callee(value))
+                or (not isinstance(value, ast.Call)
+                    and self._mentions_device(value)))
+            if isinstance(value, ast.Call) and \
+                    dotted(value.func) in _HOST_CONVERTERS:
+                makes_device = False    # explicit device→host conversion
+            for name in targets:
+                (self.device.add if makes_device
+                 else self.device.discard)(name)
+
+
+@register(RULE, "hot-path functions sync the device once, deliberately")
+def check(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn in ctx.functions():
+        if ctx.directives.is_hotpath_def(fn.lineno):
+            findings.extend(_HotWalker(ctx, fn).walk())
+    return findings

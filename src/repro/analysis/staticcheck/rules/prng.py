@@ -1,0 +1,243 @@
+"""prng-discipline: every key value feeds exactly one consumer.
+
+JAX PRNG keys are values, not stateful generators: passing the same
+key to two sampling sites yields *correlated* (often identical)
+streams — in serving terms, every lane of a horizon scan sampling the
+same token.  The invariant: between any two consuming uses of a key
+there must be a ``split`` / ``fold_in`` deriving a fresh key.
+
+The pass walks each function linearly (loop bodies twice, to surface
+loop-carried reuse where the key is consumed but never re-derived),
+tracking key-typed values by textual id:
+
+  * producers: ``jax.random.PRNGKey`` / ``*.random.split`` /
+    ``*.random.fold_in`` assignments (split results are key *arrays*;
+    their ``ks[i]`` subscripts are tracked individually);
+  * derivation (``split(key)`` / ``fold_in(key, x)``) does not count
+    as consumption; any other call taking the key does;
+  * re-assignment of the name bumps its generation, resetting the
+    consumed state.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.staticcheck.core import (FileContext, Finding, dotted,
+                                             register)
+
+RULE = "prng-discipline"
+
+_PRODUCER_TAILS = {"PRNGKey"}
+_DERIVE_TAILS = {"split", "fold_in"}          # require a random. prefix
+
+
+def _callee_tail(call: ast.Call) -> Optional[str]:
+    d = dotted(call.func)
+    return d.rsplit(".", 1)[-1] if d else None
+
+
+def _is_key_producer(call: ast.Call) -> bool:
+    d = dotted(call.func)
+    if d is None:
+        return False
+    tail = d.rsplit(".", 1)[-1]
+    if tail in _PRODUCER_TAILS:
+        return True
+    # split/fold_in are producers too, but only under a random module
+    # (str.split would otherwise mint keys out of thin air)
+    return tail in _DERIVE_TAILS and "random." in d
+
+
+def _is_derive(call: ast.Call) -> bool:
+    d = dotted(call.func)
+    return (d is not None and d.rsplit(".", 1)[-1] in _DERIVE_TAILS
+            and "random." in d)
+
+
+def _terminates(body: List[ast.stmt]) -> bool:
+    """Does the branch end in a statement that leaves the if entirely?"""
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+class _KeyTracker:
+    def __init__(self, ctx: FileContext, fn: ast.FunctionDef):
+        self.ctx = ctx
+        self.qual = ctx.qualname_of(fn)
+        self.fn = fn
+        self.gen: Dict[str, int] = {}              # key text -> generation
+        self.consumed: Dict[Tuple[str, int], int] = {}  # -> first line
+        self.findings: List[Finding] = []
+        self.reported: Set[Tuple[int, str]] = set()
+        # parameters named like keys are key-typed on entry
+        for a in fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs:
+            if "key" in a.arg.lower():
+                self.gen[a.arg] = 0
+
+    # ----------------------------------------------------------- plumbing
+    def _key_texts_in(self, node: ast.AST) -> List[str]:
+        """Tracked key texts read inside ``node`` (name, attr or
+        subscript form — whichever granularity is tracked).  Subtrees
+        under a derive call are excluded: ``f(fold_in(key, i))``
+        consumes the derived key, not ``key``."""
+        out: List[str] = []
+
+        def visit(n: ast.AST) -> None:
+            if isinstance(n, ast.Call):
+                # nested calls consume their own args on their own turn
+                # in the outer walk (and derive calls never consume)
+                return
+            if isinstance(n, ast.Subscript):
+                base = dotted(n.value)
+                if base is not None and base in self.gen:
+                    if isinstance(n.slice, ast.Constant):
+                        # element of a split result: track per index,
+                        # inheriting the array's generation
+                        text = f"{base}[{n.slice.value!r}]"
+                        self.gen.setdefault(text, self.gen[base])
+                        out.append(text)
+                    # dynamic index (ks[i] in a loop): each iteration is
+                    # a distinct element — nothing trackable, stay quiet
+                    return
+            text = self._text(n)
+            if text is not None and text in self.gen:
+                out.append(text)
+                return        # ks[0] consumes the element, not `ks` too
+            for child in ast.iter_child_nodes(n):
+                visit(child)
+
+        visit(node)
+        return out
+
+    def _text(self, node: ast.AST) -> Optional[str]:
+        d = dotted(node)
+        if d is not None:
+            return d
+        if isinstance(node, ast.Subscript):
+            base = dotted(node.value)
+            if base is not None and isinstance(node.slice, ast.Constant):
+                return f"{base}[{node.slice.value!r}]"
+        return None
+
+    def _bump(self, text: str) -> None:
+        self.gen[text] = self.gen.get(text, -1) + 1
+        # re-splitting an array invalidates its tracked elements
+        for elt in [k for k in self.gen if k.startswith(f"{text}[")]:
+            del self.gen[elt]
+
+    def _consume(self, text: str, line: int) -> None:
+        state = (text, self.gen[text])
+        first = self.consumed.get(state)
+        if first is None:
+            self.consumed[state] = line
+            return
+        # a second consumption — including the same site on the second
+        # loop pass (loop-carried reuse of an un-rederived key)
+        mark = (line, text)
+        if mark in self.reported:
+            return
+        self.reported.add(mark)
+        self.findings.append(Finding(
+            RULE, self.ctx.path, line, 0,
+            f"PRNG key `{text}` consumed again without an interposing "
+            f"split/fold_in (first consumed at line {first}) — both "
+            f"sites draw the same stream", self.qual))
+
+    # ----------------------------------------------------------- the walk
+    def walk(self) -> List[Finding]:
+        self._body(self.fn.body)
+        return self.findings
+
+    def _body(self, body) -> None:
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return
+        if isinstance(stmt, ast.If):
+            self._expr(stmt.test)
+            # branches are mutually exclusive: each starts from the
+            # pre-if consumption state; afterwards both contribute
+            # (a key consumed in either arm is spent for code below)
+            before = dict(self.consumed)
+            before_gen = dict(self.gen)
+            self._body(stmt.body)
+            after_body = self.consumed
+            self.consumed = dict(before)
+            self.gen = before_gen
+            self._body(stmt.orelse)
+            # a branch ending in return/raise never reaches the code
+            # below the if — its consumptions stay local to it
+            if _terminates(stmt.orelse):
+                self.consumed = dict(before)
+            if not _terminates(stmt.body):
+                for state, line in after_body.items():
+                    self.consumed.setdefault(state, line)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            if isinstance(stmt, ast.While):
+                self._expr(stmt.test)
+            else:
+                self._expr(stmt.iter)
+            # two passes expose loop-carried reuse of an un-rederived key
+            self._body(stmt.body)
+            self._body(stmt.body)
+            self._body(stmt.orelse)
+            return
+        if isinstance(stmt, ast.Try):
+            self._body(stmt.body)
+            for h in stmt.handlers:
+                self._body(h.body)
+            self._body(stmt.orelse)
+            self._body(stmt.finalbody)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._expr(item.context_expr)
+            self._body(stmt.body)
+            return
+        if isinstance(stmt, ast.Assign):
+            self._expr(stmt.value)
+            is_key = isinstance(stmt.value, ast.Call) and \
+                _is_key_producer(stmt.value)
+            for t in stmt.targets:
+                for tgt in (t.elts if isinstance(t, ast.Tuple) else [t]):
+                    text = self._text(tgt)
+                    if text is None:
+                        continue
+                    if is_key:
+                        self._bump(text)
+                    elif text in self.gen:
+                        self._bump(text)     # overwritten by a non-key
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self._expr(stmt.value)
+            return
+        if isinstance(stmt, ast.Return) and stmt.value is not None:
+            self._expr(stmt.value, returning=True)
+            return
+        for node in ast.iter_child_nodes(stmt):
+            if isinstance(node, ast.expr):
+                self._expr(node)
+
+    def _expr(self, node: ast.AST, returning: bool = False) -> None:
+        """Register consumptions for every call inside ``node``."""
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            if _is_derive(call):
+                continue                     # derivation, not consumption
+            args = list(call.args) + [kw.value for kw in call.keywords]
+            for a in args:
+                for text in self._key_texts_in(a):
+                    self._consume(text, call.lineno)
+
+
+@register(RULE, "a PRNG key is consumed once between derivations")
+def check(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn in ctx.functions():
+        findings.extend(_KeyTracker(ctx, fn).walk())
+    return findings

@@ -1,0 +1,183 @@
+"""recompile-hazard: jit wrappers built once, traced once per shape.
+
+Launch overhead is the paper's bottleneck term; a silent retrace
+multiplies it by compile time.  Two shapes reintroduce it:
+
+  * a ``jax.jit`` wrapper constructed inside a loop / comprehension /
+    immediately-invoked expression — every construction starts a fresh
+    trace cache, so nothing is ever reused;
+  * a jitted callable fed Python scalar or tuple literals in positions
+    not declared ``static_argnums`` / ``static_argnames`` — weak-typed
+    scalars hash into the trace key, so every distinct value (or an
+    int where a float was traced) compiles a new program.
+
+Only bindings whose static declarations are visible in the same file
+are checked for the literal-argument hazard; calls through opaque
+registries are the jit-cache-size guard's job at runtime.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.staticcheck.core import (FileContext, Finding, dotted,
+                                             register)
+
+RULE = "recompile-hazard"
+
+_LOOPY = (ast.For, ast.AsyncFor, ast.While, ast.ListComp, ast.SetComp,
+          ast.DictComp, ast.GeneratorExp)
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    d = dotted(node.func)
+    if d in ("jax.jit", "jit"):
+        return True
+    # functools.partial(jax.jit, ...) used as a deferred wrapper factory
+    if d in ("functools.partial", "partial") and node.args:
+        return dotted(node.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _literal_static(node: ast.AST) -> bool:
+    """A tuple of int literals, as in ``static_argnums=(0, 2)``."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return True
+    return (isinstance(node, (ast.Tuple, ast.List))
+            and all(isinstance(e, ast.Constant) for e in node.elts))
+
+
+class _JitBinding:
+    """One ``name = jax.jit(fn, ...)`` whose static decls we can read."""
+
+    def __init__(self, call: ast.Call):
+        self.argnums: Optional[Tuple[int, ...]] = ()
+        self.argnames_declared = False
+        self.argnames: Tuple[str, ...] = ()
+        self.resolvable = True
+        for kw in call.keywords:
+            if kw.arg == "static_argnums":
+                if _literal_static(kw.value):
+                    if isinstance(kw.value, ast.Constant):
+                        self.argnums = (kw.value.value,)
+                    else:
+                        self.argnums = tuple(e.value for e in kw.value.elts)
+                else:
+                    self.resolvable = False
+            elif kw.arg == "static_argnames":
+                self.argnames_declared = True
+                if isinstance(kw.value, (ast.Tuple, ast.List)) and all(
+                        isinstance(e, ast.Constant) for e in kw.value.elts):
+                    self.argnames = tuple(e.value for e in kw.value.elts)
+                else:
+                    self.resolvable = False
+
+
+def _scalar_literal(node: ast.AST) -> Optional[str]:
+    """Describe a retrace-prone literal argument, else None."""
+    if isinstance(node, ast.Constant) and isinstance(
+            node.value, (int, float, bool)) and node.value is not None:
+        return f"scalar literal {node.value!r}"
+    if isinstance(node, ast.Tuple) and node.elts and all(
+            isinstance(e, ast.Constant) for e in node.elts):
+        return "tuple literal"
+    if isinstance(node, ast.UnaryOp) and isinstance(
+            node.operand, ast.Constant):
+        return "scalar literal"
+    return None
+
+
+@register(RULE, "jit wrappers are built once and literals are static")
+def check(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    parents: Dict[int, ast.AST] = {}
+    for node in ast.walk(ctx.tree):
+        for child in ast.iter_child_nodes(node):
+            parents[id(child)] = node
+
+    def enclosing_context(node: ast.AST) -> str:
+        cur = parents.get(id(node))
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return ctx.qualname_of(cur)
+            cur = parents.get(id(cur))
+        return "<module>"
+
+    bindings: Dict[str, _JitBinding] = {}
+
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or not _is_jit_call(node):
+            continue
+        qual = enclosing_context(node)
+
+        # (a) wrapper constructed inside a loop or comprehension
+        cur = parents.get(id(node))
+        while cur is not None and not isinstance(
+                cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module)):
+            if isinstance(cur, _LOOPY):
+                findings.append(ctx.finding(
+                    RULE, node,
+                    "jax.jit wrapper constructed inside a loop/"
+                    "comprehension — a fresh trace cache every iteration "
+                    "(hoist the wrapper out; trace caches only pay off "
+                    "when reused)", qual))
+                break
+            cur = parents.get(id(cur))
+
+        # (b) immediately-invoked: jax.jit(f)(x) — rebuilt per call
+        parent = parents.get(id(node))
+        if isinstance(parent, ast.Call) and parent.func is node:
+            findings.append(ctx.finding(
+                RULE, node,
+                "jax.jit(...) immediately invoked — the wrapper and its "
+                "compile cache are rebuilt on every call (bind it once)",
+                qual))
+
+        # record same-file bindings for the literal-argument pass
+        assign = parents.get(id(node))
+        if isinstance(assign, ast.Assign) and len(assign.targets) == 1:
+            tgt = assign.targets[0]
+            key = None
+            if isinstance(tgt, ast.Name):
+                key = tgt.id
+            elif isinstance(tgt, ast.Attribute) and isinstance(
+                    tgt.value, ast.Name) and tgt.value.id == "self":
+                key = f"self.{tgt.attr}"
+            if key is not None and dotted(node.func) in ("jax.jit", "jit"):
+                bindings[key] = _JitBinding(node)
+
+    # (c) literal scalars/tuples at call sites of known bindings
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        binding = bindings.get(d) if d else None
+        if binding is None or not binding.resolvable:
+            continue
+        qual = enclosing_context(node)
+        for i, arg in enumerate(node.args):
+            desc = _scalar_literal(arg)
+            if desc is None or i in (binding.argnums or ()):
+                continue
+            if binding.argnames_declared:
+                # positions may be covered by names we can't map; only
+                # flag when no static machinery exists at all
+                continue
+            findings.append(ctx.finding(
+                RULE, arg,
+                f"{desc} at position {i} of jitted `{d}` is not declared "
+                f"static — each distinct value (or weak-type flip) "
+                f"retraces the program", qual))
+        for kw in node.keywords:
+            if kw.arg is None:
+                continue
+            desc = _scalar_literal(kw.value)
+            if desc is None:
+                continue
+            if binding.argnames_declared and kw.arg not in binding.argnames:
+                findings.append(ctx.finding(
+                    RULE, kw.value,
+                    f"{desc} for keyword `{kw.arg}` of jitted `{d}` is "
+                    f"not in static_argnames — each distinct value "
+                    f"retraces the program", qual))
+    return findings

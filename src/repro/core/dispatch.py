@@ -52,6 +52,7 @@ class StepProgram:
                     return self.compose()(state)
             return run
         if mode == "stage_jit":
+            # staticcheck: disable=recompile-hazard -- one wrapper per distinct stage, built once at executor construction and closed over by `run`; per-stage dispatch cost is the point of this mode
             jitted = [jax.jit(st) for st in self.stages]
 
             def run(state):

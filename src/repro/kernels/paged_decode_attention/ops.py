@@ -12,6 +12,7 @@ from repro.kernels.paged_decode_attention.paged_decode_attention import (
     paged_decode_attention_pallas)
 
 
+# staticcheck: hotpath
 def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                            v_pool: jnp.ndarray, block_table: jnp.ndarray,
                            lengths: jnp.ndarray,

@@ -648,6 +648,7 @@ class Model:
             bp["mamba"], apply_norm(x, bp.get("norm1")), h, conv, self.cfg)
         return x + y, h, conv
 
+    # staticcheck: hotpath
     def decode_step(self, params: Params, cache: Cache, tokens: jnp.ndarray,
                     active: Optional[jnp.ndarray] = None
                     ) -> Tuple[jnp.ndarray, Cache]:
@@ -778,6 +779,7 @@ class Model:
         x = apply_norm(x, params["final_norm"])
         return self.lm_logits(params, x), new_cache
 
+    # staticcheck: hotpath
     def decode_steps(self, params: Params, cache: Cache, tokens: jnp.ndarray,
                      key: jnp.ndarray, steps_left: Optional[jnp.ndarray] = None,
                      *, horizon: int, temperature: float = 0.0,

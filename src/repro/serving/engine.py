@@ -115,6 +115,7 @@ class DecodeEngine:
         tok0 = sample(logits[:, -1], key, temperature=temperature,
                       top_k=top_k)
         t0 = time.perf_counter()
+        # staticcheck: disable=prng-discipline -- decode_steps fold_ins key per scan step, so its draws are disjoint from tok0's; re-deriving here would change golden token streams
         toks, _ = self._steps_fused(self.params, cache,
                                     self._token_shape(tok0), key, None,
                                     horizon=n_new - 1,

@@ -867,7 +867,7 @@ class SlotScheduler(VirtualClockMixin):
         assert all(s is None or s.slot == i
                    for i, s in enumerate(self.slots)), "slot bookkeeping"
 
-    def _run_step(self, tokens: jnp.ndarray):
+    def _run_step(self, tokens: jnp.ndarray):  # staticcheck: hotpath
         if self._progs.step is not None:
             return self._progs.step(self.params, self.cache, tokens)
         state = self._executor({"tokens": tokens, "cache": self.cache})
@@ -968,7 +968,7 @@ class SlotScheduler(VirtualClockMixin):
         self.tick_count += 1
         return self.events[n_before:]
 
-    def _decode_tick_single(self) -> None:
+    def _decode_tick_single(self) -> None:  # staticcheck: hotpath
         """K=1 decode: one dispatch + one host round-trip per token."""
         if self.paged:
             for slot, sess in list(enumerate(self.slots)):
@@ -993,7 +993,8 @@ class SlotScheduler(VirtualClockMixin):
         logits, self.cache = self._run_step(jnp.asarray(toks))
         nxt = self._sample(logits[:, -1], 2 * self.tick_count + 1)
         t1 = time.perf_counter()
-        nxt = np.asarray(nxt)            # the one sync: sampled tokens
+        # staticcheck: disable=hot-sync -- the ONE deliberate per-tick sync: sampled tokens must reach the host to be emitted
+        nxt = np.asarray(nxt)
         t2 = time.perf_counter()
         self.host_dispatch_s += t1 - t0
         self.host_sync_s += t2 - t1
@@ -1004,6 +1005,7 @@ class SlotScheduler(VirtualClockMixin):
         if self._screen_logits:
             # NaN/Inf screen on this step's logits — a writable HOST
             # copy: injected poison lands here, device state stays clean
+            # staticcheck: disable=hot-sync -- NaN screen needs a writable host copy; only taken when --screen-logits is on (chaos runs)
             last = np.array(logits[:, -1], np.float32)
             for slot, sess in active:
                 if self._poison and self._take_poison(sess.sid):
@@ -1028,7 +1030,7 @@ class SlotScheduler(VirtualClockMixin):
             if sess.done or self._hit_eos(tok):
                 self._finish(slot, sess)
 
-    def _decode_tick_horizon(self, K: int) -> None:
+    def _decode_tick_horizon(self, K: int) -> None:  # staticcheck: hotpath
         """Horizon-K fused decode: ONE program advances every live slot
         up to ``K`` tokens (lax.scan, on-device sampling), the
         (n_slots, K) token matrix returns in one transfer, and the host
@@ -1065,7 +1067,8 @@ class SlotScheduler(VirtualClockMixin):
             temperature=self.temperature, top_k=self.top_k,
             eos_id=self.eos_id)
         t1 = time.perf_counter()
-        tok_mat = np.asarray(tok_mat)    # ONE sync for up to K*slots tokens
+        # staticcheck: disable=hot-sync -- the ONE deliberate macro-tick sync: up to K*slots sampled tokens in one transfer
+        tok_mat = np.asarray(tok_mat)
         t2 = time.perf_counter()
         screen = self._screen_logits
         if screen:

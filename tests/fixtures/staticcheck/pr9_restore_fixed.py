@@ -1,0 +1,25 @@
+"""The corrected form of ``pr9_restore_leak.py`` (the PR-9 fix): the
+``TierCopyError`` handler releases the allocated pages before bailing,
+so the pool balances on the degraded path too.  The refcount-pairing
+rule must stay quiet here."""
+
+
+class TierCopyError(Exception):
+    pass
+
+
+class Admitter:
+    def try_admit_tiered(self, head):
+        got = self.store.alloc(self.n_restore)
+        if got is None:
+            return False
+        try:
+            self.cache = self.store.take_parked(
+                head.sid, 0, got, self.cache)
+        except TierCopyError:
+            self.store.release(got)       # the fix: pool balances
+            self.store.drop_parked(head.sid)
+            self.degraded_restores += 1
+            return False
+        head.pages = list(got)
+        return True

@@ -1,0 +1,32 @@
+"""Seeded fixture: the PR-9 ``TieredPageStore`` restore-failure leak.
+
+This reconstructs the exact shape of the bug fixed in PR 9: pages
+allocated for a tiered restore, handed to ``take_parked`` inside a
+``try``, and a ``TierCopyError`` handler that drops the parked copy and
+bails out WITHOUT releasing the freshly allocated pages — every failed
+restore permanently shrinks the pool.  The refcount-pairing rule must
+flag the ``alloc`` line (see ``test_staticcheck.py``; the corrected
+form lives in ``pr9_restore_fixed.py``).
+
+Scanned as data by the linter tests — never imported.
+"""
+
+
+class TierCopyError(Exception):
+    pass
+
+
+class Admitter:
+    def try_admit_tiered(self, head):
+        got = self.store.alloc(self.n_restore)        # LEAK LINE
+        if got is None:
+            return False
+        try:
+            self.cache = self.store.take_parked(
+                head.sid, 0, got, self.cache)
+        except TierCopyError:
+            self.store.drop_parked(head.sid)
+            self.degraded_restores += 1
+            return False          # `got` never released on this path
+        head.pages = list(got)
+        return True

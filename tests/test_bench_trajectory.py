@@ -1,0 +1,149 @@
+"""scripts/bench_trajectory.py (the CI artifact merger) and the
+benchmarks/run.py registry self-audit — both CI-load-bearing, both
+previously untested."""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_trajectory",
+    os.path.join(os.path.dirname(__file__), os.pardir, "scripts",
+                 "bench_trajectory.py"))
+bench_trajectory = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_trajectory)
+
+
+def report(tables, failed=(), quick=True):
+    return {"quick": quick, "only": None,
+            "tables": {name: {"ok": name not in failed, "seconds": 0.1,
+                              "rows": rows}
+                       for name, rows in tables.items()},
+            "failed": list(failed)}
+
+
+def write_report(path, tables, failed=()):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(report(tables, failed)))
+    return str(path)
+
+
+# ---------------------------------------------------------------- collect
+def test_collect_mixes_files_and_artifact_dirs(tmp_path):
+    f1 = write_report(tmp_path / "bench_table9.json", {"table9": []})
+    # artifact-download layout: nested per-job directories
+    f2 = write_report(
+        tmp_path / "artifacts" / "job-1" / "bench_table10.json",
+        {"table10": []})
+    f3 = write_report(
+        tmp_path / "artifacts" / "job-2" / "bench_table11.json",
+        {"table11": []})
+    got = bench_trajectory.collect([f1, str(tmp_path / "artifacts")])
+    assert got == [f1, f2, f3]
+
+
+# ------------------------------------------------------------------ merge
+def test_merge_unions_tables_and_failures(tmp_path):
+    f1 = write_report(tmp_path / "a" / "bench_table9.json",
+                      {"table9": [{"name": "x"}]})
+    f2 = write_report(tmp_path / "b" / "bench_table10.json",
+                      {"table10": [{"name": "y"}]}, failed=["table10"])
+    snap = bench_trajectory.merge([f1, f2])
+    assert set(snap["tables"]) == {"table9", "table10"}
+    assert snap["sources"]["table9"] == f1
+    assert snap["failed"] == ["table10"]
+
+
+def test_merge_duplicate_table_keeps_later_file(tmp_path, capsys):
+    f1 = write_report(tmp_path / "a" / "bench_table9.json",
+                      {"table9": [{"name": "old"}]})
+    f2 = write_report(tmp_path / "b" / "bench_table9.json",
+                      {"table9": [{"name": "new"}]})
+    snap = bench_trajectory.merge([f1, f2])
+    assert snap["tables"]["table9"]["rows"] == [{"name": "new"}]
+    assert snap["sources"]["table9"] == f2
+    assert "in both" in capsys.readouterr().err
+
+
+# ------------------------------------------------------------------- main
+def run_main(monkeypatch, tmp_path, argv):
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(sys, "argv", ["bench_trajectory.py"] + argv)
+    return bench_trajectory.main()
+
+
+def test_main_exit_2_on_empty(monkeypatch, tmp_path, capsys):
+    assert run_main(monkeypatch, tmp_path, []) == 2
+    assert "nothing to merge" in capsys.readouterr().err
+    assert not list(tmp_path.glob("BENCH_*.json"))
+
+
+def test_main_writes_dated_snapshot(monkeypatch, tmp_path):
+    write_report(tmp_path / "bench_table9.json",
+                 {"table9": [{"name": "x"}, {"name": "y"}]})
+    out = tmp_path / "snaps"
+    out.mkdir()
+    assert run_main(monkeypatch, tmp_path,
+                    ["--date", "2026-08-09", "--out", str(out)]) == 0
+    snap = json.loads((out / "BENCH_2026-08-09.json").read_text())
+    assert snap["date"] == "2026-08-09"
+    assert len(snap["tables"]["table9"]["rows"]) == 2
+    assert snap["failed"] == []
+
+
+def test_main_exit_1_on_failed_tables(monkeypatch, tmp_path):
+    write_report(tmp_path / "bench_table16.json", {"table16": []},
+                 failed=["table16"])
+    assert run_main(monkeypatch, tmp_path,
+                    ["--date", "2026-08-09"]) == 1
+    # the snapshot is still written — a failed table is data, not noise
+    snap = json.loads((tmp_path / "BENCH_2026-08-09.json").read_text())
+    assert snap["failed"] == ["table16"]
+
+
+# -------------------------------------------------- run.py registry audit
+run_mod = pytest.importorskip("benchmarks.run")
+
+
+def test_registry_audit_clean_on_repo():
+    assert run_mod.registry_audit(description_names=run_mod.DESCRIPTIONS)\
+        == []
+
+
+def test_registry_audit_reports_each_drift(tmp_path):
+    (tmp_path / "table1_thing.py").touch()
+    (tmp_path / "table2_other.py").touch()
+    (tmp_path / "common.py").touch()          # non-table module: ignored
+    problems = run_mod.registry_audit(
+        suite_names={"table1", "table3"},
+        description_names={"table1", "table3"},
+        module_dir=str(tmp_path))
+    # table2 on disk but undescribed; table3 described but no module
+    assert len(problems) == 2
+    assert any(p.startswith("table2:") and "DESCRIPTIONS" in p
+               for p in problems)
+    assert any(p.startswith("table3:") for p in problems)
+
+    problems = run_mod.registry_audit(
+        suite_names={"table1"},
+        description_names={"table1", "table2"},
+        module_dir=str(tmp_path))
+    # table2 described but not registered as a suite
+    assert any("not in the suites registry" in p for p in problems)
+
+    problems = run_mod.registry_audit(
+        suite_names={"table1", "table2", "tableX"},
+        description_names={"table1", "table2"},
+        module_dir=str(tmp_path))
+    assert any(p.startswith("tableX:") and "no --list description" in p
+               for p in problems)
+
+
+def test_run_list_exits_zero_and_prints_registry(monkeypatch, capsys):
+    monkeypatch.setattr(sys, "argv", ["run.py", "--list"])
+    run_mod.main()          # would sys.exit(2) on registry drift
+    out = capsys.readouterr().out
+    for name in run_mod.DESCRIPTIONS:
+        assert name in out

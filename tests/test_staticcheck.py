@@ -1,0 +1,500 @@
+"""staticcheck: per-rule fire/quiet fixtures, suppression + baseline
+machinery, CLI exit codes, and the seeded PR-9 leak regression."""
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis.staticcheck.cli import main as cli_main
+from repro.analysis.staticcheck.core import (RULES, UNUSED_SUPPRESSION,
+                                             check_source, load_baseline,
+                                             write_baseline)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures",
+                        "staticcheck")
+
+
+def run(snippet, select=None):
+    return check_source(textwrap.dedent(snippet), "snippet.py", select)
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# --------------------------------------------------------------- registry
+def test_registry_has_the_five_rules():
+    assert {"hot-sync", "recompile-hazard", "donation-safety",
+            "prng-discipline", "refcount-pairing"} <= set(RULES)
+    for rule in RULES.values():
+        assert rule.invariant
+
+
+# --------------------------------------------------------------- hot-sync
+BAD_HOT_SYNC = """
+    import numpy as np
+    import jax.numpy as jnp
+
+    def tick(self):  # staticcheck: hotpath
+        logits = jnp.ones((4, 8))
+        toks = np.asarray(logits)
+        return toks
+"""
+
+
+def test_hot_sync_fires_on_asarray():
+    findings = run(BAD_HOT_SYNC, ["hot-sync"])
+    assert rules_of(findings) == ["hot-sync"]
+    assert "np.asarray" in findings[0].message
+    assert findings[0].context == "tick"
+
+
+def test_hot_sync_quiet_without_marker():
+    assert run(BAD_HOT_SYNC.replace("# staticcheck: hotpath", ""),
+               ["hot-sync"]) == []
+
+
+def test_hot_sync_quiet_on_host_values():
+    assert run("""
+        import numpy as np
+
+        def tick(self):  # staticcheck: hotpath
+            toks = np.zeros((4, 1), np.int32)
+            n = int(toks[0, 0])
+            return n
+    """, ["hot-sync"]) == []
+
+
+def test_hot_sync_scalar_and_item_and_timed_gate():
+    findings = run("""
+        import jax.numpy as jnp
+
+        def tick(self, timed):  # staticcheck: hotpath
+            x = jnp.ones(())
+            if timed:
+                y = float(x)        # allowed: timed instrumentation
+            n = int(x)              # flagged
+            m = x.item()            # flagged
+            return n, m
+    """, ["hot-sync"])
+    assert len(findings) == 2
+    assert {f.line for f in findings} == {8, 9}
+
+
+def test_hot_sync_conversion_clears_device_tag():
+    # after np.asarray rebinds the name, int() on it is host-side
+    assert run("""
+        import numpy as np
+        import jax.numpy as jnp
+
+        def tick(self):  # staticcheck: hotpath
+            # staticcheck: disable=hot-sync -- the one sync
+            nxt = np.asarray(jnp.ones((4,)))
+            return int(nxt[0])
+    """, ["hot-sync"]) == []
+
+
+# ------------------------------------------------------- recompile-hazard
+def test_recompile_fires_in_loop_and_comprehension():
+    findings = run("""
+        import jax
+
+        def build(fns):
+            out = []
+            for f in fns:
+                out.append(jax.jit(f))
+            listed = [jax.jit(f) for f in fns]
+            return out, listed
+    """, ["recompile-hazard"])
+    assert len(findings) == 2
+
+
+def test_recompile_fires_on_immediate_invocation():
+    findings = run("""
+        import jax
+
+        def call(f, x):
+            return jax.jit(f)(x)
+    """, ["recompile-hazard"])
+    assert len(findings) == 1
+    assert "immediately invoked" in findings[0].message
+
+
+def test_recompile_fires_on_undeclared_scalar_literal():
+    findings = run("""
+        import jax
+
+        step = jax.jit(lambda x, n: x * n)
+
+        def drive(x):
+            return step(x, 3)
+    """, ["recompile-hazard"])
+    assert len(findings) == 1
+    assert "position 1" in findings[0].message
+
+
+def test_recompile_quiet_when_declared_static():
+    assert run("""
+        import jax
+
+        step = jax.jit(lambda x, n: x * n, static_argnums=(1,))
+
+        def drive(x):
+            return step(x, 3)
+    """, ["recompile-hazard"]) == []
+
+
+def test_recompile_flags_keyword_not_in_static_argnames():
+    findings = run("""
+        import jax
+
+        step = jax.jit(lambda x, *, k, n: x, static_argnames=("k",))
+
+        def drive(x):
+            return step(x, k=2, n=3)
+    """, ["recompile-hazard"])
+    assert len(findings) == 1
+    assert "`n`" in findings[0].message
+
+
+# -------------------------------------------------------- donation-safety
+def test_donation_fires_on_read_after_donating_call():
+    findings = run("""
+        import jax
+
+        step = jax.jit(lambda p, c, t: (t, c), donate_argnums=(1,))
+
+        def drive(p, cache, tok):
+            logits, new_cache = step(p, cache, tok)
+            return logits, cache.shape
+    """, ["donation-safety"])
+    assert len(findings) == 1
+    assert "`cache`" in findings[0].message
+
+
+def test_donation_quiet_when_rebound():
+    assert run("""
+        import jax
+
+        step = jax.jit(lambda p, c, t: (t, c), donate_argnums=(1,))
+
+        def drive(p, cache, tok):
+            logits, cache = step(p, cache, tok)
+            return logits, cache.shape
+    """, ["donation-safety"]) == []
+
+
+def test_donation_loop_rebinding_is_safe_but_reuse_is_not():
+    good = """
+        import jax
+
+        step = jax.jit(lambda p, c, t: (t, c), donate_argnums=(1,))
+
+        def drive(p, cache, toks):
+            for t in toks:
+                out, cache = step(p, cache, t)
+            return cache
+    """
+    bad = """
+        import jax
+
+        step = jax.jit(lambda p, c, t: (t, c), donate_argnums=(1,))
+
+        def drive(p, cache, toks):
+            outs = []
+            for t in toks:
+                outs.append(step(p, cache, t))
+            return outs
+    """
+    assert run(good, ["donation-safety"]) == []
+    findings = run(bad, ["donation-safety"])
+    assert len(findings) == 1
+    assert "loop" in findings[0].message
+
+
+def test_donation_known_registry_callee():
+    findings = run("""
+        def tick(self, toks):
+            logits, cache = self._progs.step(self.params, self.cache, toks)
+            return logits, self.cache["pos"]
+    """, ["donation-safety"])
+    assert len(findings) == 1
+    assert "`self.cache`" in findings[0].message
+
+
+# -------------------------------------------------------- prng-discipline
+def test_prng_fires_on_double_consumption():
+    findings = run("""
+        import jax
+
+        def gen(seed):
+            key = jax.random.PRNGKey(seed)
+            a = jax.random.normal(key, (4,))
+            b = jax.random.normal(key, (4,))
+            return a, b
+    """, ["prng-discipline"])
+    assert len(findings) == 1
+    assert "`key`" in findings[0].message
+
+
+def test_prng_quiet_with_fold_in_between():
+    assert run("""
+        import jax
+
+        def gen(seed):
+            key = jax.random.PRNGKey(seed)
+            a = jax.random.normal(key, (4,))
+            key = jax.random.fold_in(key, 1)
+            b = jax.random.normal(key, (4,))
+            return a, b
+    """, ["prng-discipline"]) == []
+
+
+def test_prng_split_elements_are_independent():
+    assert run("""
+        import jax
+
+        def init(key):
+            ks = jax.random.split(key, 3)
+            a = jax.random.normal(ks[0], (4,))
+            b = jax.random.normal(ks[1], (4,))
+            c = jax.random.normal(ks[2], (4,))
+            return a, b, c
+    """, ["prng-discipline"]) == []
+
+
+def test_prng_same_split_element_twice_fires():
+    findings = run("""
+        import jax
+
+        def init(key):
+            ks = jax.random.split(key, 2)
+            a = jax.random.normal(ks[0], (4,))
+            b = jax.random.normal(ks[0], (4,))
+            return a, b
+    """, ["prng-discipline"])
+    assert len(findings) == 1
+    assert "ks[0]" in findings[0].message
+
+
+def test_prng_loop_without_rederivation_fires():
+    findings = run("""
+        import jax
+
+        def gen(key, n):
+            outs = []
+            for i in range(n):
+                outs.append(jax.random.normal(key, (4,)))
+            return outs
+    """, ["prng-discipline"])
+    assert len(findings) == 1
+
+
+def test_prng_exclusive_branches_are_quiet():
+    assert run("""
+        import jax
+
+        def gen(key, arith):
+            if arith:
+                x = jax.random.randint(key, (4,), 0, 10)
+            else:
+                x = jax.random.normal(key, (4,))
+            return x
+    """, ["prng-discipline"]) == []
+
+
+# -------------------------------------------------------- refcount-pairing
+def test_refcount_pr9_leak_fixture_fires_with_rule_file_line():
+    path = os.path.join(FIXTURES, "pr9_restore_leak.py")
+    with open(path) as fh:
+        src = fh.read()
+    findings = check_source(src, path)
+    leaks = [f for f in findings if f.rule == "refcount-pairing"]
+    assert len(leaks) == 1, [f.render() for f in findings]
+    leak_line = next(i + 1 for i, ln in enumerate(src.splitlines())
+                     if "LEAK LINE" in ln)
+    assert leaks[0].path == path
+    assert leaks[0].line == leak_line
+    assert leaks[0].context == "Admitter.try_admit_tiered"
+    assert "return" in leaks[0].message
+
+
+def test_refcount_pr9_fixed_fixture_is_quiet():
+    path = os.path.join(FIXTURES, "pr9_restore_fixed.py")
+    with open(path) as fh:
+        src = fh.read()
+    assert [f for f in check_source(src, path)
+            if f.rule == "refcount-pairing"] == []
+
+
+def test_refcount_early_return_leak():
+    findings = run("""
+        def admit(self, sess, need):
+            got = self.allocator.alloc(need)
+            if got is None:
+                return False
+            if sess.cancelled:
+                return False
+            sess.pages = got
+            return True
+    """, ["refcount-pairing"])
+    assert len(findings) == 1
+    assert "line 7" in findings[0].message     # the second early return
+
+
+def test_refcount_release_on_every_path_is_quiet():
+    assert run("""
+        def admit(self, sess, need):
+            got = self.allocator.alloc(need)
+            if got is None:
+                return False
+            if sess.cancelled:
+                self.allocator.release(got)
+                return False
+            sess.pages = got
+            return True
+    """, ["refcount-pairing"]) == []
+
+
+def test_refcount_retain_without_release_on_raise_path():
+    findings = run("""
+        def share(self, pages):
+            self.allocator.retain(pages)
+            if not self.ok():
+                raise RuntimeError("bad")
+            self.table.append(pages)
+    """, ["refcount-pairing"])
+    assert len(findings) == 1
+    assert "raise" in findings[0].message
+
+
+def test_refcount_append_and_return_transfer_ownership():
+    assert run("""
+        def grab(self, need):
+            got = self.allocator.alloc(need)
+            if got:
+                self.holds.append(got)
+
+        def hand_out(self, need):
+            got = self.allocator.alloc(need)
+            return got
+    """, ["refcount-pairing"]) == []
+
+
+# ------------------------------------------------ suppressions + baseline
+def test_suppression_covers_and_unused_is_flagged():
+    suppressed = run("""
+        import jax
+
+        def call(f, x):
+            # staticcheck: disable=recompile-hazard -- bench harness
+            return jax.jit(f)(x)
+    """, ["recompile-hazard"])
+    assert suppressed == []
+
+    dead = run("""
+        def quiet():
+            # staticcheck: disable=recompile-hazard -- nothing here
+            return 1
+    """, ["recompile-hazard"])
+    assert rules_of(dead) == [UNUSED_SUPPRESSION]
+
+
+def test_trailing_suppression_applies_to_its_own_line():
+    assert run("""
+        import jax
+
+        def call(f, x):
+            return jax.jit(f)(x)  # staticcheck: disable=recompile-hazard -- once
+    """, ["recompile-hazard"]) == []
+
+
+def test_parse_error_is_a_finding():
+    findings = run("def broken(:\n")
+    assert rules_of(findings) == ["parse-error"]
+
+
+BAD_FILE = """\
+import jax
+
+
+def call(f, x):
+    return jax.jit(f)(x)
+"""
+
+
+def _write(tmp_path, name, content):
+    p = tmp_path / name
+    p.write_text(content)
+    return str(p)
+
+
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    bad = _write(tmp_path, "bad.py", BAD_FILE)
+    report = tmp_path / "report.json"
+    assert cli_main([bad, "--json", str(report),
+                     "--baseline", str(tmp_path / "none.json")]) == 1
+    blob = json.loads(report.read_text())
+    assert blob["files_scanned"] == 1
+    assert [f["rule"] for f in blob["new"]] == ["recompile-hazard"]
+    assert blob["new"][0]["fingerprint"]
+
+    good = _write(tmp_path, "good.py", "x = 1\n")
+    assert cli_main([good, "--baseline",
+                     str(tmp_path / "none.json")]) == 0
+
+    assert cli_main([]) == 2
+    assert cli_main([good, "--select", "no-such-rule"]) == 2
+    capsys.readouterr()
+
+
+def test_baseline_grandfathers_with_justification(tmp_path, capsys):
+    bad = _write(tmp_path, "bad.py", BAD_FILE)
+    baseline = str(tmp_path / "baseline.json")
+
+    # writing a baseline without justifications fails the run...
+    assert cli_main([bad, "--baseline", baseline,
+                     "--write-baseline"]) == 1
+    entries = load_baseline(baseline)
+    assert len(entries) == 1
+    # ...and scanning against it still fails (unjustified entry)
+    assert cli_main([bad, "--baseline", baseline]) == 1
+
+    # justify the entry -> scan passes, finding is grandfathered
+    data = json.loads((tmp_path / "baseline.json").read_text())
+    data["entries"][0]["justification"] = "bench-only; jit cost measured"
+    (tmp_path / "baseline.json").write_text(json.dumps(data))
+    assert cli_main([bad, "--baseline", baseline]) == 0
+    out = capsys.readouterr()
+    assert "1 baselined" in out.err + out.out
+
+    # rewriting keeps the hand-written justification
+    from repro.analysis.staticcheck.core import run_paths
+    findings, _ = run_paths([bad])
+    assert write_baseline(baseline, findings, load_baseline(baseline)) == 0
+
+
+def test_unused_suppression_is_never_baselineable(tmp_path, capsys):
+    src = "def quiet():\n    # staticcheck: disable=hot-sync -- stale\n    return 1\n"
+    f = _write(tmp_path, "stale.py", src)
+    baseline = str(tmp_path / "baseline.json")
+    assert cli_main([f, "--baseline", baseline, "--write-baseline"]) == 1
+    # the unused-suppression finding must still fail a scan even when
+    # its fingerprint sits in the baseline
+    data = json.loads((tmp_path / "baseline.json").read_text())
+    for e in data["entries"]:
+        e["justification"] = "trying to grandfather a dead suppression"
+    (tmp_path / "baseline.json").write_text(json.dumps(data))
+    assert cli_main([f, "--baseline", baseline]) == 1
+    capsys.readouterr()
+
+
+def test_repo_is_clean():
+    """The acceptance gate: zero findings on src/ (suppressions and
+    hotpath markers in the tree are part of the contract)."""
+    root = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    from repro.analysis.staticcheck.core import run_paths
+    findings, n_files = run_paths([os.path.abspath(root)])
+    assert n_files > 50
+    assert findings == [], [f.render() for f in findings]
